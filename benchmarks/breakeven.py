@@ -1,0 +1,30 @@
+"""Paper Fig. 9 / §III-D: minimal beneficial compression ratio k vs network
+bandwidth, for the paper's V100 primitive throughputs and this repo's TPU-v5e
+kernel estimates."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.comms import cost_model as cm
+
+
+def run() -> list:
+    rows = []
+    for hw_name, thr in (("v100_paper", cm.PAPER_V100), ("tpu_v5e", cm.TPU_V5E)):
+        for net, bw in cm.NETWORKS.items():
+            k = cm.k_min(bw, thr)
+            rows.append(Row(
+                name=f"fig9_kmin_{hw_name}_{net}",
+                bandwidth_gbps=round(bw / 1e9, 1),
+                k_min=("inf" if k == float("inf") else round(k, 3)),
+                compression_pays=bool(k != float("inf")),
+            ))
+    # the paper's own example: 250MB AlexNet gradient on 56Gb FDR
+    m = 250e6
+    rows.append(Row(
+        name="fig9_alexnet_fdr_example",
+        comp_cost_ms=round(cm.compression_cost_s(m, cm.TPU_V5E) * 1e3, 2),
+        saved_ms_at_k13=round(cm.saved_comm_s(m, cm.NETWORKS["56Gb-FDR"], 13) * 1e3, 2),
+        beneficial=cm.is_beneficial(m, cm.NETWORKS["56Gb-FDR"], 13, cm.TPU_V5E),
+    ))
+    return rows

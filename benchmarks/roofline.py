@@ -1,0 +1,43 @@
+"""Roofline table: reads launch/dryrun.py artifacts and prints per-cell terms.
+
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def run() -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        tag = os.path.basename(path)[:-5]
+        if d.get("status") == "skipped":
+            rows.append(Row(name=f"roofline_{tag}", status="skipped",
+                            reason=d["reason"]))
+            continue
+        r = d["roofline"]
+        rows.append(Row(
+            name=f"roofline_{tag}",
+            compute_ms=round(r["compute_s"] * 1e3, 2),
+            memory_ms=round(r["memory_s"] * 1e3, 2),
+            collective_ms=round(r["collective_s"] * 1e3, 2),
+            dominant=r["dominant"],
+            useful_flops_ratio=round(r["useful_ratio"], 3),
+            roofline_fraction=round(r["roofline_fraction"], 3),
+            hbm_fit_gib=round(sum(d["memory"].values()), 1),
+        ))
+    if not rows:
+        rows.append(Row(name="roofline_missing_artifacts",
+                        hint="run python -m repro.launch.dryrun --all first"))
+    return rows

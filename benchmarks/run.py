@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Select subsets with
+``python -m benchmarks.run [module ...]``; default runs everything except the
+roofline (which needs dry-run artifacts; it prints a hint if absent).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import emit
+
+MODULES = [
+    "distribution",     # Fig. 3/4
+    "reconstruction",   # Fig. 6/7
+    "quantizer_density",  # Fig. 8
+    "breakeven",        # Fig. 9 / SIII-D
+    "convergence",      # Fig. 11/12 + Table I
+    "throughput",       # Fig. 13/15
+    "scalability",      # Fig. 14
+    "roofline",         # EXPERIMENTS.md SRoofline
+]
+
+
+def main() -> None:
+    selected = sys.argv[1:] or MODULES
+    print("name,us_per_call,derived")
+    for mod_name in selected:
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        t0 = time.time()
+        rows = mod.run()
+        emit(rows)
+        print(f"# {mod_name}: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 14: scalability 2 -> 32 workers with/without compression.
+
+Analytic model over the paper's own workloads (AlexNet 250 MB, ResNet50
+102 MB gradients) on a 56 Gb FDR-class fabric (6 GB/s practical):
+
+    T(n) = T_compute + T_comm(n) [+ T_compress]
+    ring allreduce:   T_comm = 2 * M * (n-1)/n / BW     (dense)
+                      T_comm = 2 * (M/k) * (n-1)/n / BW (compressed)
+    speedup(n) = n * T(1)_compute / T(n)
+
+Compression ratios: ours k=13.4 (theta=0.7, 8-bit), TernGrad 16, DGC 1000.
+Compute times per iteration from the paper's Fig. 1 proportions.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Row
+from repro.comms import cost_model as cm
+
+BW = 1.5e9  # 56Gb FDR practical 6 GB/s shared by 4 GPUs/node (paper setup)
+WORKLOADS = {
+    # (gradient MB, per-iteration compute seconds @batch in Fig.13)
+    "alexnet": (250e6, 0.18),
+    "resnet50": (102e6, 0.45),
+}
+METHODS = {
+    "orig": (1.0, 0.0),
+    "terngrad": (16.0, 0.004),
+    "dgc": (1000.0, 0.006),
+    "ours_fft_theta0.7": (13.4, None),  # compression cost from §III-D model
+}
+
+
+def run() -> list:
+    rows = []
+    for wname, (m_bytes, t_compute) in WORKLOADS.items():
+        for mname, (k, t_comp) in METHODS.items():
+            if t_comp is None:
+                t_comp = 2 * cm.compression_cost_s(m_bytes, cm.TPU_V5E)
+            speedups = {}
+            for n in (2, 8, 16, 32):
+                t_comm = 2 * (m_bytes / k) * (n - 1) / n / BW
+                t_iter = t_compute + t_comm + (t_comp if k > 1 else 0.0)
+                speedups[n] = n * t_compute / t_iter
+            rows.append(Row(
+                name=f"fig14_scalability_{wname}_{mname}",
+                k=k,
+                speedup_2=round(speedups[2], 2),
+                speedup_8=round(speedups[8], 2),
+                speedup_16=round(speedups[16], 2),
+                speedup_32=round(speedups[32], 2),
+            ))
+    return rows

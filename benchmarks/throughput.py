@@ -1,0 +1,71 @@
+"""Paper Fig. 13/15: compression primitive cost breakdown.
+
+Times each stage of the pipeline (FFT, select, pack, quantize, and the
+composed compress/decompress) on a 64 MB gradient, jit-compiled on this host,
+and derives projected TPU-v5e stage times from the §III-D throughput model
+(the CPU numbers validate plumbing; the v5e numbers feed the break-even
+analysis and EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row, time_fn
+from repro.comms import cost_model as cm
+from repro.core import fft as cfft
+from repro.core import packing, sparsify
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+from repro.core.quantizer import RangeQuantConfig, encode, fit_quantizer
+
+N = 1 << 24  # 16M floats = 64 MB
+
+
+def run() -> list:
+    g = jax.random.normal(jax.random.PRNGKey(0), (N,)) * 0.05
+    theta = 0.7
+    comp = FFTCompressor(FFTCompressorConfig(theta=theta))
+    rows = []
+
+    fft_fn = jax.jit(lambda x: cfft.chunked_rfft(x)[0])
+    freqs = fft_fn(g)
+    k = sparsify.keep_count(freqs.shape[-1], theta)
+    mag = jnp.abs(freqs)
+    select_fn = jax.jit(lambda m: sparsify.topk_select(m, k))
+    idx = select_fn(mag)
+    pack_fn = jax.jit(lambda f, i: packing.pack_by_indices(f, i))
+    q = fit_quantizer(-1.0, 1.0, RangeQuantConfig(8, 3))
+    vals = jnp.real(pack_fn(freqs, idx))
+    quant_fn = jax.jit(lambda v: encode(v, q))
+
+    stages = [
+        ("fft", fft_fn, (g,), 4 * N),
+        ("topk_select", select_fn, (mag,), 4 * mag.size),
+        ("pack", pack_fn, (freqs, idx), 8 * freqs.size),
+        ("quantize", quant_fn, (vals,), 4 * vals.size),
+        ("compress_total", jax.jit(comp.compress), (g,), 4 * N),
+    ]
+    payload = jax.jit(comp.compress)(g)
+    stages.append(("decompress_total", jax.jit(comp.decompress), (payload,), 4 * N))
+
+    for name, fn, args, bytes_in in stages:
+        us = time_fn(fn, *args, warmup=1, iters=3)
+        rows.append(Row(
+            name=f"fig15_stage_{name}",
+            us_per_call=round(us, 1),
+            host_gbps=round(bytes_in / (us / 1e6) / 1e9, 2),
+        ))
+
+    # derived v5e stage times from the kernel throughput model (§III-D)
+    m_bytes = 4 * N
+    thr = cm.TPU_V5E
+    rows.append(Row(
+        name="fig13_v5e_projection_64MB",
+        compress_ms=round(cm.compression_cost_s(m_bytes, thr) * 1e3, 3),
+        wire_ms_dense_ici=round(m_bytes / cm.NETWORKS["tpu-ici-link"] * 1e3, 3),
+        wire_ms_dense_dcn=round(m_bytes / cm.NETWORKS["tpu-dcn-host"] * 1e3, 3),
+        wire_ms_k13_dcn=round(m_bytes / 13 / cm.NETWORKS["tpu-dcn-host"] * 1e3, 3),
+        ratio=round(comp.ratio(N), 1),
+    ))
+    return rows

@@ -1,0 +1,120 @@
+"""Post-optimization HLO parsing: per-device collective bytes by op kind.
+
+cost_analysis() does not expose collective traffic, so the roofline's
+collective term is derived here: every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute instruction in
+``compiled.as_text()`` is matched, its operand/result bytes computed from the
+printed shapes, and its replica-group size parsed (both the explicit
+``{{0,1},{2,3}}`` and the iota ``[8,64]<=[512]`` formats).
+
+Ring-model traffic per device (bytes that actually cross links):
+    all-reduce        2 * bytes * (n-1)/n
+    all-gather        result_bytes * (n-1)/n
+    reduce-scatter    input_bytes  * (n-1)/n   (= result_bytes * (n-1))
+    all-to-all        bytes * (n-1)/n
+    collective-permute bytes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+__all__ = ["CollectiveStats", "parse_collectives", "summarize"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OP_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+# one shape token: f32[1,2,3]{...} — dims optional (scalars)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    kind: str
+    count: int = 0
+    raw_bytes: float = 0.0  # sum of payload bytes (per device program)
+    link_bytes: float = 0.0  # ring-model bytes crossing links per device
+
+
+def _shape_bytes(text: str) -> float:
+    """Sum bytes over every shape token in a result/operand string."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[num_groups, group_size]<=[...]
+        return int(m.group(2))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> Dict[str, CollectiveStats]:
+    """Scan HLO; returns per-kind stats for the per-device program."""
+    stats: Dict[str, CollectiveStats] = {
+        k: CollectiveStats(kind=k) for k in _OP_KINDS
+    }
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # match "<result> = <shape...> <op>(" — the op name before '('
+        m = re.search(r"=\s+(.+?)\s+([\w-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalize fusions like all-gather-start / all-reduce-done
+        base = None
+        for kind in _OP_KINDS:
+            if op == kind or op.startswith(kind + "-start"):
+                base = kind
+                break
+        if base is None:
+            continue
+        result_text = m.group(1)
+        payload = _shape_bytes(result_text)
+        n = max(_group_size(line, default_group), 1)
+        st = stats[base]
+        st.count += 1
+        st.raw_bytes += payload
+        if base == "all-reduce":
+            st.link_bytes += 2.0 * payload * (n - 1) / n
+        elif base == "all-gather":
+            st.link_bytes += payload * (n - 1) / n
+        elif base == "reduce-scatter":
+            st.link_bytes += payload * (n - 1)  # result is the scattered shard
+        elif base in ("all-to-all", "ragged-all-to-all"):
+            st.link_bytes += payload * (n - 1) / n
+        else:  # collective-permute
+            st.link_bytes += payload
+    return {k: v for k, v in stats.items() if v.count}
+
+
+def summarize(stats: Dict[str, CollectiveStats]) -> Dict:
+    return {
+        k: {"count": v.count, "raw_bytes": v.raw_bytes, "link_bytes": v.link_bytes}
+        for k, v in stats.items()
+    }

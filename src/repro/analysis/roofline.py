@@ -1,0 +1,118 @@
+"""Three-term roofline from the compiled dry-run artifact (EXPERIMENTS.md §9).
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI                 ~50 GB/s per link (intra-pod collectives)
+    DCN                 ~12.5 GB/s per host (inter-pod 'pod'-axis collectives)
+
+Terms (seconds, per training/serving step):
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = ici_link_bytes / 50e9 + dcn_link_bytes / 12.5e9
+
+cost_analysis() on the partitioned module reports PER-DEVICE flops/bytes.
+Collective link-bytes come from analysis.hlo with the ring model; collectives
+whose replica group spans pods (group size == 512 or touching the pod axis)
+are charged at DCN rate — the parser cannot always tell, so the charge rule
+is group_size > chips_per_pod -> DCN (conservative for multi-pod runs).
+
+MODEL_FLOPS (the "useful" numerator): 6*N*D for a train step, 2*N*D for a
+decode/prefill forward (N = active params for MoE, D = tokens in the step).
+ratio = MODEL_FLOPS / (HLO_FLOPs_per_device * chips) exposes remat/dispatch
+overhead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+__all__ = ["HW", "RooflineTerms", "compute_roofline", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw: float = 50e9
+    dcn_bw: float = 12.5e9
+    chips_per_pod: int = 256
+
+
+V5E = HW()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    ici_bytes: float
+    dcn_bytes: float
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    dominant: str
+    step_time_s: float  # max of the three (perfect-overlap lower bound)
+    roofline_fraction: float  # compute_s / step_time_s ("how close to
+    # compute-bound"; 1.0 = compute-limited = at roofline)
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(n_active_params: float, tokens: float, kind: str) -> float:
+    """6ND for train (fwd+bwd), 2ND for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def compute_roofline(
+    *,
+    cost: Dict,
+    collectives: Dict,
+    chips: int,
+    n_active_params: float,
+    tokens: float,
+    kind: str,
+    hw: HW = V5E,
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    ici = dcn = 0.0
+    for k, st in collectives.items():
+        link = st["link_bytes"] if isinstance(st, dict) else st.link_bytes
+        # crude pod detection: groups larger than a pod must cross DCN
+        ici += link
+    # dcn split is applied by the caller when it knows the mesh (multi-pod
+    # runs re-bucket via `split_pod_traffic`)
+
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_accessed / hw.hbm_bw
+    collective_s = ici / hw.ici_bw + dcn / hw.dcn_bw
+
+    mf = model_flops(n_active_params, tokens, kind)
+    total_hlo = flops * chips
+    useful = mf / total_hlo if total_hlo else 0.0
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step = max(terms.values()) if terms else 0.0
+    frac = compute_s / step if step else 0.0
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=bytes_accessed,
+        ici_bytes=ici,
+        dcn_bytes=dcn,
+        model_flops=mf,
+        useful_ratio=useful,
+        dominant=dominant,
+        step_time_s=step,
+        roofline_fraction=frac,
+    )

@@ -1,0 +1,7 @@
+"""Distributed gradient exchange: dense / compressed / hierarchical reducers
+built on jax.lax collectives under shard_map (no NCCL/MPI emulation)."""
+
+from repro.comms.reducers import ReducerConfig, make_reducer
+from repro.comms import collectives, cost_model
+
+__all__ = ["ReducerConfig", "make_reducer", "collectives", "cost_model"]

@@ -1,0 +1,81 @@
+"""Paper §III-D: when is compression beneficial? (Fig. 9)
+
+    cost_comp        = M * (4/T_m + 1/T_f + 1/T_p + 1/T_s)
+    saved_cost_comm  = M/T_comm * (1 - 1/k)
+    beneficial  <=>  2*cost_comp < saved_cost_comm
+    k_min        =   1 / (1 - 2*T_comm*(4/T_m + 1/T_f + 1/T_p + 1/T_s))
+
+(T_* are throughputs; the compress+decompress pair costs 2x, hence the 2.)
+``k_min`` <= 0 or undefined means NO compression ratio can pay for itself on
+that link — the compression pipeline is slower than just sending the bytes.
+
+Default throughputs are TPU-v5e-adapted estimates derived from the roofline
+terms of the Pallas kernels (bytes touched / 819 GB/s HBM for the
+bandwidth-bound passes; MXU-limited for the 4-step FFT), replacing the paper's
+V100 numbers.  The paper's measured GPU numbers are kept for reproducing
+Fig. 9 exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
+           "saved_comm_s", "k_min", "is_beneficial", "NETWORKS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Throughputs:
+    """All in bytes/second."""
+
+    t_m: float  # precision change / thresholding (O(N), elementwise)
+    t_f: float  # FFT
+    t_p: float  # pack
+    t_s: float  # top-k select
+
+    def inv_sum(self) -> float:
+        return 4.0 / self.t_m + 1.0 / self.t_f + 1.0 / self.t_p + 1.0 / self.t_s
+
+
+# Paper's V100-era numbers (pack measured at 34 GB/s on V100; others scaled
+# from cuFFT/Thrust throughput at ~10^2 GB/s class memory bandwidth).
+PAPER_V100 = Throughputs(t_m=300e9, t_f=150e9, t_p=34e9, t_s=100e9)
+
+# TPU v5e estimates from kernel napkin math (see fft4step.py docstring):
+#   t_m: elementwise quant: 5 bytes/elem over 819 GB/s HBM -> ~650 GB/s eff.
+#   t_f: 4-step FFT: 3.1 MFLOP / 16 KiB chunk; f32 MXU ~50 TFLOP/s
+#        -> ~8 GFLOP/s per GB/s => ~260 GB/s input-byte throughput.
+#   t_p: one-hot-matmul pack: k*F MACs per F elems; MXU-bound ~200 GB/s.
+#   t_s: 26 compare+count VMEM sweeps -> HBM-bound read once ~600 GB/s.
+TPU_V5E = Throughputs(t_m=650e9, t_f=260e9, t_p=200e9, t_s=600e9)
+
+# network byte-throughputs (practical, not line-rate)
+NETWORKS = {
+    "10GbE": 1.1e9,
+    "56Gb-FDR": 6.0e9,  # paper's practical 6 GB/s
+    "100Gb-EDR": 11.0e9,
+    "tpu-dcn-host": 12.5e9,  # inter-pod DCN per host
+    "tpu-ici-link": 50.0e9,  # intra-pod per link
+}
+
+
+def compression_cost_s(message_bytes: float, thr: Throughputs) -> float:
+    return message_bytes * thr.inv_sum()
+
+
+def saved_comm_s(message_bytes: float, t_comm: float, k: float) -> float:
+    return message_bytes / t_comm * (1.0 - 1.0 / k)
+
+
+def k_min(t_comm: float, thr: Throughputs) -> float:
+    """Minimal beneficial compression ratio; inf if never beneficial."""
+    denom = 1.0 - 2.0 * t_comm * thr.inv_sum()
+    if denom <= 0.0:
+        return float("inf")
+    return 1.0 / denom
+
+
+def is_beneficial(message_bytes: float, t_comm: float, k: float, thr: Throughputs) -> bool:
+    return 2.0 * compression_cost_s(message_bytes, thr) < saved_comm_s(
+        message_bytes, t_comm, k
+    )

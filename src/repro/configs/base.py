@@ -1,0 +1,213 @@
+"""Architecture + shape configuration system.
+
+One :class:`ArchConfig` describes any of the 10 assigned architectures (plus
+the paper-era convnet); :class:`ShapeConfig` describes the 4 assigned input
+shapes.  ``registry.build(config)`` assembles the model; ``launch/dryrun.py``
+iterates the (arch x shape x mesh) grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    rope_theta: float = 1e4
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0  # gemma2: 50.0
+    final_softcap: float = 0.0  # gemma2: 30.0
+    sliding_window: int = 0  # mixtral / gemma2 local layers
+    local_global_period: int = 0  # gemma2: 2 -> [local, global] alternating
+    mlp_activation: str = "swiglu"  # swiglu | geglu | relu
+
+    # moe
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_group_size: int = 512
+    moe_capacity_factor: float = 1.25
+    router_normalize_topk: bool = True
+
+    # ssm / hybrid (hymba)
+    ssm_state: int = 0
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+
+    # xlstm
+    slstm_every: int = 0  # every k-th layer is sLSTM (0 = none)
+    xlstm_proj_factor: float = 2.0
+
+    # enc-dec / cross-attn
+    n_encoder_layers: int = 0
+    cross_attn_period: int = 0  # llama-vision: every 5th decoder layer
+
+    # modality frontend STUB (per instructions: precomputed embeddings)
+    frontend: str = "none"  # none | audio_frames | vision_patches
+    n_frontend_tokens: int = 0
+
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    remat: str = "full"  # full | dots | none
+    scan_layers: bool = True  # False: unrolled python loop (dry-run cost samples)
+    ce_chunk: int = 512  # chunked cross-entropy: seq positions per unembed tile
+    attn_q_chunk: int = 512  # flash tile sizes (working-set knob; §Perf)
+    attn_kv_chunk: int = 1024
+
+    # ----- derived ---------------------------------------------------------
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def layer_pattern(self) -> Tuple[str, ...]:
+        """The repeating group of layer kinds the stack scans over."""
+        if self.n_encoder_layers:  # enc-dec: every decoder layer has cross-attn
+            return ("dec_cross_mlp",)
+        if self.family == "ssm":  # xlstm
+            period = self.slstm_every or self.n_layers + 1
+            return tuple(
+                "slstm" if (i + 1) % period == 0 else "mlstm" for i in range(period)
+            )
+        if self.family == "hybrid":
+            return ("hybrid",)
+        mlp = "moe" if self.n_experts else "mlp"
+        if self.local_global_period:
+            return tuple(
+                f"attn_local_{mlp}" if i % self.local_global_period == 0 else f"attn_{mlp}"
+                for i in range(self.local_global_period)
+            )
+        if self.cross_attn_period:
+            group = [f"attn_{mlp}"] * (self.cross_attn_period - 1) + [f"cross_attn_{mlp}"]
+            return tuple(group)
+        if self.sliding_window:
+            return (f"attn_local_{mlp}",)
+        return (f"attn_{mlp}",)
+
+    def n_groups(self) -> int:
+        pattern = self.layer_pattern()
+        assert self.n_layers % len(pattern) == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"pattern length {len(pattern)}"
+        )
+        return self.n_layers // len(pattern)
+
+    # ----- parameter accounting (roofline MODEL_FLOPS) ---------------------
+    def _layer_params(self, kind: str) -> int:
+        d, f = self.d_model, self.d_ff
+        attn = d * (self.q_dim + 2 * self.kv_dim) + self.q_dim * d
+        if self.qkv_bias:
+            attn += self.q_dim + 2 * self.kv_dim
+        glu_mult = 3 if self.mlp_activation in ("swiglu", "geglu") else 2
+        mlp = glu_mult * d * f
+        norms = 2 * d
+        if kind.startswith("cross_attn"):
+            attn *= 2  # self + cross
+            norms += d
+        if kind.endswith("moe"):
+            mlp = self.n_experts * glu_mult * d * f + d * self.n_experts
+        if kind == "hybrid":
+            d_inner = self.ssm_expand * d
+            ssm = (
+                d * 2 * d_inner  # in_proj (x, z)
+                + d_inner * self.ssm_conv_width  # conv
+                + d_inner * (2 * self.ssm_state + 1)  # B, C, dt
+                + d_inner * self.ssm_state  # A
+                + d_inner * d  # out_proj
+            )
+            return attn + ssm + mlp + norms + d
+        if kind == "mlstm":
+            di = int(self.xlstm_proj_factor * d)
+            return 2 * d * di + 3 * di * di + 3 * di + di * d + 2 * d
+        if kind == "slstm":
+            return 8 * d * d + 4 * d + 4 * d * d + 2 * d
+        return attn + mlp + norms
+
+    def param_count(self) -> int:
+        n = self.vocab_size * self.d_model  # embedding
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        pattern = self.layer_pattern()
+        for kind in pattern:
+            n += self._layer_params(kind) * self.n_groups()
+        n += self.d_model  # final norm
+        # encoder stack (enc-dec): self-attn + mlp per layer, plus decoders'
+        # cross-attn already counted via cross pattern when set
+        if self.n_encoder_layers:
+            enc_layer = self._layer_params("attn_mlp")
+            n += self.n_encoder_layers * enc_layer
+            # decoder cross-attn blocks (one per decoder layer for enc-dec)
+            n += self.n_layers * (
+                self.d_model * (self.q_dim + 2 * self.kv_dim)
+                + self.q_dim * self.d_model
+                + self.d_model
+            )
+        return n
+
+    def active_param_count(self) -> int:
+        """MoE: experts_per_token/n_experts of expert params are active."""
+        if not self.n_experts:
+            return self.param_count()
+        glu_mult = 3 if self.mlp_activation in ("swiglu", "geglu") else 2
+        expert_params = self.n_layers * self.n_experts * glu_mult * self.d_model * self.d_ff
+        active_experts = self.n_layers * self.experts_per_token * glu_mult * self.d_model * self.d_ff
+        return self.param_count() - expert_params + active_experts
+
+    # ----- smoke-test reduction --------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        pattern_len = len(self.layer_pattern())
+        return dataclasses.replace(
+            self,
+            n_layers=pattern_len * 2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2) if self.n_experts else 0,
+            moe_group_size=32,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else 0,
+            n_frontend_tokens=16 if self.frontend != "none" else 0,
+            remat="none",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

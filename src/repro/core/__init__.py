@@ -1,0 +1,43 @@
+"""Core: the paper's gradient-compression framework (SuperNeurons, 2018).
+
+Public API:
+    FFTCompressor / FFTCompressorConfig  — the paper's pipeline (Fig. 5)
+    TimeDomainCompressor / QuantOnlyCompressor / NoCompression — ablations
+    baselines: TernGrad, QSGD, DGCTopK, AjiThreshold, OneBitSGD
+    quantizer: range-based N-bit float (Alg. 1)
+    schedules: theta schedules incl. Theorem 3.5
+"""
+
+from repro.core.compressor import (
+    FFTCompressor,
+    FFTCompressorConfig,
+    FFTPayload,
+    NoCompression,
+    QuantOnlyCompressor,
+    TimeDomainCompressor,
+)
+from repro.core.quantizer import (
+    FittedQuantizer,
+    RangeQuantConfig,
+    fit_quantizer,
+)
+from repro.core import baselines, error_feedback, fft, packing, schedules, sparsify, theory
+
+__all__ = [
+    "FFTCompressor",
+    "FFTCompressorConfig",
+    "FFTPayload",
+    "NoCompression",
+    "QuantOnlyCompressor",
+    "TimeDomainCompressor",
+    "FittedQuantizer",
+    "RangeQuantConfig",
+    "fit_quantizer",
+    "baselines",
+    "error_feedback",
+    "fft",
+    "packing",
+    "schedules",
+    "sparsify",
+    "theory",
+]

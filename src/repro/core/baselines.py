@@ -1,0 +1,180 @@
+"""Baseline gradient compressors the paper compares against (Table I, Fig. 12).
+
+* :class:`TernGrad`       — Wen et al. 2017: stochastic ternary {-1,0,1}*s.
+* :class:`QSGD`           — Alistarh et al. 2017: stochastic uniform levels.
+* :class:`DGCTopK`        — Lin et al. 2017 / Aji-Heafield 2017: time-domain
+                            top-k keeping raw fp32 values (+16-bit indices).
+* :class:`AjiThreshold`   — absolute-value thresholding variant.
+* :class:`OneBitSGD`      — Seide et al. 2014: sign + column mean, with the
+                            original's error feedback folded in by the caller.
+
+All follow the same duck-typed protocol as :class:`repro.core.compressor
+.FFTCompressor` so reducers/benchmarks treat them interchangeably.  Stochastic
+methods take an optional PRNG key (deterministic rounding if omitted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as cfft
+from repro.core import packing, sparsify
+
+__all__ = ["TernGrad", "QSGD", "DGCTopK", "AjiThreshold", "OneBitSGD"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ScaledCodes:
+    """codes + scale payload; orig_len is STATIC aux so the payload survives
+    all_gather + vmap in the reducers (a traced length cannot slice)."""
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+    orig_len: int
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), (self.orig_len,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+class TernGrad:
+    """g -> s * ternary, s = max|g|; E[compress(g)] = g (unbiased)."""
+
+    bits_per_value = 2
+
+    def compress(self, x_flat: jnp.ndarray, key=None) -> ScaledCodes:
+        s = jnp.maximum(jnp.max(jnp.abs(x_flat)), 1e-30)
+        p = jnp.abs(x_flat) / s
+        if key is None:
+            b = (p >= 0.5).astype(jnp.int8)
+        else:
+            b = jax.random.bernoulli(key, p).astype(jnp.int8)
+        codes = jnp.sign(x_flat).astype(jnp.int8) * b
+        return ScaledCodes(codes, s, x_flat.shape[0])
+
+    def decompress(self, payload: ScaledCodes) -> jnp.ndarray:
+        return payload.codes.astype(jnp.float32) * payload.scale
+
+    def wire_bits(self, n: int) -> int:
+        return self.bits_per_value * n + 32
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+class QSGD:
+    """Stochastic uniform quantization onto s levels of |g|/||g||_2.
+
+    Per-bucket norms (as in the QSGD paper's practical variant) — a single
+    global L2 norm over 1e8 elements would collapse every value to the lowest
+    level.
+    """
+
+    def __init__(self, levels: int = 16, bucket: int = 4096):  # 4-bit default
+        self.levels = levels
+        self.bucket = bucket
+
+    @property
+    def bits_per_value(self) -> int:
+        return max(1, (self.levels - 1).bit_length()) + 1  # + sign bit
+
+    def compress(self, x_flat: jnp.ndarray, key=None) -> ScaledCodes:
+        x2d, n = cfft.pad_to_chunks(x_flat, self.bucket)
+        norm = jnp.maximum(jnp.linalg.norm(x2d, axis=-1, keepdims=True), 1e-30)
+        y = jnp.abs(x2d) / norm * self.levels
+        lo = jnp.floor(y)
+        frac = y - lo
+        if key is None:
+            up = frac >= 0.5
+        else:
+            up = jax.random.bernoulli(key, frac)
+        q = jnp.clip(lo + up.astype(jnp.float32), 0, self.levels)
+        codes = (jnp.sign(x2d) * q).astype(jnp.int8)
+        return ScaledCodes(codes, norm, n)
+
+    def decompress(self, payload: ScaledCodes) -> jnp.ndarray:
+        dense = payload.codes.astype(jnp.float32) / self.levels * payload.scale
+        return dense.reshape(-1)[: payload.orig_len]
+
+    def wire_bits(self, n: int) -> int:
+        n_buckets = max(1, -(-n // self.bucket))
+        return self.bits_per_value * n + 32 * n_buckets
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+@dataclasses.dataclass
+class DGCTopK:
+    """Time-domain top-k with raw fp32 values (DGC's wire format)."""
+
+    theta: float = 0.99
+    chunk: int = cfft.DEFAULT_CHUNK
+    index_bits: int = 16
+
+    def compress(self, x_flat: jnp.ndarray, key=None):
+        x2d, n = cfft.pad_to_chunks(x_flat, self.chunk)
+        k = sparsify.keep_count(self.chunk, self.theta)
+        idx = sparsify.topk_select(jnp.abs(x2d), k)
+        vals = packing.pack_by_indices(x2d, idx)
+        return (vals, idx.astype(jnp.int32), n)
+
+    def decompress(self, payload) -> jnp.ndarray:
+        vals, idx, n = payload
+        dense = packing.unpack_by_indices(vals, idx, self.chunk)
+        return dense.reshape(-1)[:n]
+
+    def wire_bits(self, n: int) -> int:
+        n_chunks = max(1, -(-n // self.chunk))
+        k = sparsify.keep_count(self.chunk, self.theta)
+        return n_chunks * k * (32 + self.index_bits)
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+@dataclasses.dataclass
+class AjiThreshold:
+    """|g| >= tau thresholding; tau chosen per-call as the theta-quantile."""
+
+    theta: float = 0.99
+    chunk: int = cfft.DEFAULT_CHUNK
+
+    def compress(self, x_flat: jnp.ndarray, key=None):
+        # Static-shape version: theta-quantile == per-chunk top-k boundary.
+        return DGCTopK(self.theta, self.chunk).compress(x_flat)
+
+    def decompress(self, payload):
+        return DGCTopK(self.theta, self.chunk).decompress(payload)
+
+    def wire_bits(self, n: int) -> int:
+        return DGCTopK(self.theta, self.chunk).wire_bits(n)
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+class OneBitSGD:
+    """sign(g) * mean(|g|); caller maintains the error-feedback residual."""
+
+    def compress(self, x_flat: jnp.ndarray, key=None) -> ScaledCodes:
+        s = jnp.mean(jnp.abs(x_flat))
+        codes = (x_flat >= 0).astype(jnp.int8) * 2 - 1
+        return ScaledCodes(codes, s, x_flat.shape[0])
+
+    def decompress(self, payload: ScaledCodes) -> jnp.ndarray:
+        return payload.codes.astype(jnp.float32) * payload.scale
+
+    def wire_bits(self, n: int) -> int:
+        return n + 32
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)

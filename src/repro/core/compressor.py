@@ -1,0 +1,231 @@
+"""The composed gradient-compression pipeline (paper Fig. 5).
+
+    gradient --rFFT--> spectrum --theta-drop--> sparse --range-quant--> codes
+             --pack--> (values, indices) payload --> wire
+
+and the exact reverse on the receiver.  All stages are jit-compatible with
+static shapes; the payload is a registered pytree so it flows through
+``shard_map`` collectives unchanged.
+
+Key property used by the distributed reducer (beyond-paper, DESIGN.md §10):
+the FFT is linear, so workers can sum *spectra* after dequantize/unpack and run
+a single inverse FFT — ``decompress_spectrum`` exposes that path.
+
+Compressor protocol (duck-typed; baselines implement the same):
+
+    payload = comp.compress(x_flat, key=None)
+    x_hat   = comp.decompress(payload)
+    bits    = comp.wire_bits(n)         # static wire size estimate
+    ratio   = comp.ratio(n)             # 32*n / wire_bits
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as cfft
+from repro.core import packing, sparsify
+from repro.core.quantizer import (
+    FittedQuantizer,
+    RangeQuantConfig,
+    decode as q_decode,
+    encode as q_encode,
+    fit_quantizer,
+)
+
+__all__ = [
+    "FFTCompressorConfig",
+    "FFTPayload",
+    "FFTCompressor",
+    "TimeDomainCompressor",
+    "QuantOnlyCompressor",
+    "NoCompression",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FFTPayload:
+    """Wire payload: quantized kept spectrum + indices + quantizer params."""
+
+    re: jnp.ndarray  # (c, k) codes (uintN) or f32 when quantization is off
+    im: jnp.ndarray  # (c, k)
+    idx: jnp.ndarray  # (c, k) int32 bin indices (wire-counted as 16 bits)
+    quant: Optional[FittedQuantizer]  # None when quantization is off
+    orig_len: int = dataclasses.field(metadata={"static": True})
+    chunk: int = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return (self.re, self.im, self.idx, self.quant), (self.orig_len, self.chunk)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTCompressorConfig:
+    """Static knobs of the paper's pipeline."""
+
+    theta: float = 0.7  # frequency drop-out ratio (paper's main knob)
+    n_bits: int = 8  # range-based float width (paper uses 8)
+    m_bits: int = 3
+    chunk: int = cfft.DEFAULT_CHUNK
+    quantize: bool = True
+    range_mode: str = "auto"  # "auto": per-call min/max; "fixed": use fixed_range
+    fixed_range: Tuple[float, float] = (-1.0, 1.0)  # paper: [-1,1] AlexNet, [-6,6] ResNet
+    index_bits: int = 16
+
+    def with_theta(self, theta: float) -> "FFTCompressorConfig":
+        return dataclasses.replace(self, theta=theta)
+
+
+class FFTCompressor:
+    """Paper's full pipeline: FFT -> theta-drop -> range-quant -> pack."""
+
+    def __init__(self, config: FFTCompressorConfig = FFTCompressorConfig()):
+        self.config = config
+        self._qcfg = RangeQuantConfig(config.n_bits, config.m_bits)
+
+    # -- helpers -----------------------------------------------------------
+    def _keep_k(self) -> int:
+        f_bins = self.config.chunk // 2 + 1
+        return sparsify.keep_count(f_bins, self.config.theta)
+
+    def _fit(self, re: jnp.ndarray, im: jnp.ndarray) -> FittedQuantizer:
+        if self.config.range_mode == "fixed":
+            lo, hi = self.config.fixed_range
+            return fit_quantizer(lo, hi, self._qcfg)
+        lo = jnp.minimum(re.min(), im.min())
+        hi = jnp.maximum(re.max(), im.max())
+        return fit_quantizer(lo, hi, self._qcfg)
+
+    # -- protocol ----------------------------------------------------------
+    def compress(self, x_flat: jnp.ndarray, key=None) -> FFTPayload:
+        cfg = self.config
+        freqs, n = cfft.chunked_rfft(x_flat, cfg.chunk)
+        k = self._keep_k()
+        w = cfft.hermitian_weights(cfg.chunk)
+        mag = jnp.abs(freqs) * w
+        idx = sparsify.topk_select(mag, k)
+        kept = packing.pack_by_indices(freqs, idx)
+        re, im = jnp.real(kept), jnp.imag(kept)
+        if cfg.quantize:
+            quant = self._fit(re, im)
+            re, im = q_encode(re, quant), q_encode(im, quant)
+        else:
+            quant = None
+        # int16 indices: 2049 rfft bins fit; halves the index wire bytes
+        return FFTPayload(re, im, idx.astype(jnp.int16), quant, n, cfg.chunk)
+
+    def decompress_spectrum(self, payload: FFTPayload) -> jnp.ndarray:
+        """Payload -> dense complex spectrum (c, chunk//2+1)."""
+        re, im = payload.re, payload.im
+        if payload.quant is not None:
+            re, im = q_decode(re, payload.quant), q_decode(im, payload.quant)
+        kept = re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
+        f_bins = payload.chunk // 2 + 1
+        return packing.unpack_by_indices(kept, payload.idx, f_bins)
+
+    def decompress(self, payload: FFTPayload) -> jnp.ndarray:
+        spectrum = self.decompress_spectrum(payload)
+        return cfft.chunked_irfft(spectrum, payload.orig_len, payload.chunk)
+
+    # -- size accounting ----------------------------------------------------
+    def wire_bits(self, n: int) -> int:
+        cfg = self.config
+        n_chunks = max(1, -(-n // cfg.chunk))
+        k = self._keep_k()
+        value_bits = 2 * (cfg.n_bits if cfg.quantize else 32)  # re + im
+        per_chunk = k * (value_bits + cfg.index_bits)
+        overhead = 4 * 32  # quantizer params (eps, P, vmin, vmax)
+        return n_chunks * per_chunk + overhead
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+class TimeDomainCompressor:
+    """DGC/Aji-style top-k in the time domain + the same range quantizer.
+
+    Used for the paper's Fig. 12 comparison (frequency vs time domain at the
+    same theta).
+    """
+
+    def __init__(self, config: FFTCompressorConfig = FFTCompressorConfig()):
+        self.config = config
+        self._qcfg = RangeQuantConfig(config.n_bits, config.m_bits)
+
+    def compress(self, x_flat: jnp.ndarray, key=None):
+        cfg = self.config
+        x2d, n = cfft.pad_to_chunks(x_flat, cfg.chunk)
+        k = sparsify.keep_count(cfg.chunk, cfg.theta)
+        idx = sparsify.topk_select(jnp.abs(x2d), k)
+        vals = packing.pack_by_indices(x2d, idx)
+        if cfg.quantize:
+            quant = fit_quantizer(vals.min(), vals.max(), self._qcfg)
+            vals = q_encode(vals, quant)
+        else:
+            quant = None
+        return FFTPayload(vals, jnp.zeros_like(vals), idx.astype(jnp.int32), quant, n, cfg.chunk)
+
+    def decompress(self, payload: FFTPayload) -> jnp.ndarray:
+        vals = payload.re
+        if payload.quant is not None:
+            vals = q_decode(vals, payload.quant)
+        dense = packing.unpack_by_indices(
+            vals.astype(jnp.float32), payload.idx, payload.chunk
+        )
+        return dense.reshape(-1)[: payload.orig_len]
+
+    def wire_bits(self, n: int) -> int:
+        cfg = self.config
+        n_chunks = max(1, -(-n // cfg.chunk))
+        k = sparsify.keep_count(cfg.chunk, cfg.theta)
+        value_bits = cfg.n_bits if cfg.quantize else 32
+        return n_chunks * k * (value_bits + cfg.index_bits) + 4 * 32
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+class QuantOnlyCompressor:
+    """Range-based N-bit quantization without sparsification (ablation)."""
+
+    def __init__(self, n_bits: int = 8, m_bits: int = 3):
+        self._qcfg = RangeQuantConfig(n_bits, m_bits)
+        self.n_bits = n_bits
+
+    def compress(self, x_flat: jnp.ndarray, key=None):
+        quant = fit_quantizer(x_flat.min(), x_flat.max(), self._qcfg)
+        return (q_encode(x_flat, quant), quant)
+
+    def decompress(self, payload):
+        codes, quant = payload
+        return q_decode(codes, quant)
+
+    def wire_bits(self, n: int) -> int:
+        return n * self.n_bits + 4 * 32
+
+    def ratio(self, n: int) -> float:
+        return 32.0 * n / self.wire_bits(n)
+
+
+class NoCompression:
+    """Identity compressor (the paper's 'orig' baseline)."""
+
+    def compress(self, x_flat: jnp.ndarray, key=None):
+        return x_flat
+
+    def decompress(self, payload):
+        return payload
+
+    def wire_bits(self, n: int) -> int:
+        return 32 * n
+
+    def ratio(self, n: int) -> float:
+        return 1.0

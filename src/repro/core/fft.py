@@ -1,0 +1,77 @@
+"""Chunked real FFT used by the frequency-domain sparsifier (paper §III-B.1).
+
+The paper runs cuFFT over the flattened per-layer gradient.  On TPU we chunk
+the signal into fixed-size pieces (default 4096) and transform each chunk
+independently:
+
+* static shapes (XLA requirement) regardless of layer size;
+* each chunk's working set fits VMEM, and the Pallas ``fft4step`` kernel
+  implements the transform as two 64x64 DFT matmuls on the MXU;
+* chunks are embarrassingly parallel => trivially shardable.
+
+Because the input is real we use rFFT: a chunk of C reals produces F = C/2+1
+complex coefficients.  Parseval with Hermitian symmetry means bin energies are
+
+    E = (|X_0|^2 + 2*sum_{1..F-2} |X_k|^2 + |X_{F-1}|^2) / C
+
+so DC and Nyquist carry weight 1 and interior bins weight 2
+(:func:`hermitian_weights`).  Sparsification ranks bins by *weighted* magnitude
+so the dropped-energy accounting behind Assumption 3.1 is exact (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "DEFAULT_CHUNK",
+    "pad_to_chunks",
+    "chunked_rfft",
+    "chunked_irfft",
+    "hermitian_weights",
+    "chunk_energy",
+]
+
+DEFAULT_CHUNK = 4096
+
+
+def pad_to_chunks(x_flat: jnp.ndarray, chunk: int = DEFAULT_CHUNK) -> Tuple[jnp.ndarray, int]:
+    """Zero-pad a flat vector to a multiple of ``chunk`` and reshape.
+
+    Returns (chunks_2d, original_length).  Padding with zeros is exact for the
+    transform (adds no energy) and the tail is sliced off on inverse.
+    """
+    n = x_flat.shape[0]
+    n_chunks = max(1, -(-n // chunk))
+    padded = jnp.zeros((n_chunks * chunk,), x_flat.dtype).at[:n].set(x_flat)
+    return padded.reshape(n_chunks, chunk), n
+
+
+def chunked_rfft(x_flat: jnp.ndarray, chunk: int = DEFAULT_CHUNK) -> Tuple[jnp.ndarray, int]:
+    """Flat f32 -> (n_chunks, chunk//2+1) complex64, plus the original length."""
+    x2d, n = pad_to_chunks(x_flat.astype(jnp.float32), chunk)
+    return jnp.fft.rfft(x2d, axis=-1).astype(jnp.complex64), n
+
+
+def chunked_irfft(freqs: jnp.ndarray, orig_len: int, chunk: int = DEFAULT_CHUNK) -> jnp.ndarray:
+    """(n_chunks, chunk//2+1) complex64 -> flat f32 of ``orig_len``."""
+    x2d = jnp.fft.irfft(freqs, n=chunk, axis=-1)
+    return x2d.reshape(-1)[:orig_len].astype(jnp.float32)
+
+
+def hermitian_weights(chunk: int = DEFAULT_CHUNK) -> jnp.ndarray:
+    """Energy weights per rfft bin: [1, 2, 2, ..., 2, 1] (len chunk//2+1)."""
+    f = chunk // 2 + 1
+    w = jnp.full((f,), 2.0, jnp.float32)
+    w = w.at[0].set(1.0)
+    if chunk % 2 == 0:
+        w = w.at[-1].set(1.0)
+    return w
+
+
+def chunk_energy(freqs: jnp.ndarray, chunk: int = DEFAULT_CHUNK) -> jnp.ndarray:
+    """Per-chunk signal energy from rfft coefficients (Parseval)."""
+    w = hermitian_weights(chunk)
+    return jnp.sum(w * jnp.abs(freqs) ** 2, axis=-1) / chunk

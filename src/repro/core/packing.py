@@ -1,0 +1,126 @@
+"""Sparse-to-dense packing (paper §III-B.1's status-bitmap + prefix-sum pack).
+
+Two payload layouts, both static-shape (XLA requirement):
+
+* **index payload** (default): per-chunk top-k gives (values[(c,k)],
+  indices[(c,k)] int16).  Cost per kept coefficient: payload_bits + 16.
+  Smaller than the bitmap whenever (1-theta)*16 < 1 bit/elem, i.e. theta<0.9375
+  relative to a 1-bit map over a 4096 chunk — and it removes the prefix-sum
+  from the decompress critical path.
+* **bitmap payload** (paper-faithful): a status bitmap (1 bit/elem packed into
+  uint32 words) plus the dense value vector in chunk order.  The prefix-sum
+  pack of the paper maps to ``jnp.nonzero(..., size=k)`` under a static kept
+  budget; the Pallas ``pack`` kernel implements the same with a VMEM-local
+  cumulative sum.
+
+Both round-trip exactly (tests/test_packing.py, hypothesis sweeps).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pack_by_indices",
+    "unpack_by_indices",
+    "make_bitmap",
+    "bitmap_to_mask",
+    "pack_bitmap",
+    "unpack_bitmap",
+    "payload_bits_index",
+    "payload_bits_bitmap",
+]
+
+
+def pack_by_indices(x2d: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather per-row kept values: (c, n), (c, k) -> (c, k)."""
+    return jnp.take_along_axis(x2d, idx, axis=-1)
+
+
+def unpack_by_indices(values: jnp.ndarray, idx: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Scatter per-row values back to dense (c, n) with zeros elsewhere."""
+    zeros = jnp.zeros(values.shape[:-1] + (n,), values.dtype)
+    return jax.vmap(lambda row, i, v: row.at[i].set(v))(zeros, idx, values)
+
+
+# ---------------------------------------------------------------------------
+# Bitmap layout (paper-faithful status vector)
+# ---------------------------------------------------------------------------
+
+
+def make_bitmap(mask: jnp.ndarray) -> jnp.ndarray:
+    """Bool (c, n) -> packed uint32 words (c, ceil(n/32)). n must be mult of 32."""
+    c, n = mask.shape
+    assert n % 32 == 0, "bitmap requires chunk % 32 == 0"
+    bits = mask.reshape(c, n // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def bitmap_to_mask(words: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Packed uint32 words (c, n//32) -> bool mask (c, n)."""
+    c = words.shape[0]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(c, n).astype(bool)
+
+
+class BitmapPayload(NamedTuple):
+    """Paper layout: status bitmap + compacted dense values (chunk order)."""
+
+    words: jnp.ndarray  # (c, n//32) uint32
+    values: jnp.ndarray  # (c, k) compacted, chunk order, zero-filled tail
+    count: jnp.ndarray  # (c,) int32 actual nonzeros (<= k)
+
+
+def pack_bitmap(x2d: jnp.ndarray, mask: jnp.ndarray, k: int) -> BitmapPayload:
+    """Prefix-sum compaction under a static budget k (paper's parallel pack).
+
+    Elements beyond the k-th nonzero of a row are dropped (the thresholding
+    guarantees <= k nonzeros per row when used with top-k masks).
+    """
+    words = make_bitmap(mask)
+
+    def row_pack(row, m):
+        idx = jnp.nonzero(m, size=k, fill_value=row.shape[0] - 1)[0]
+        vals = row[idx] * (jnp.arange(k) < jnp.sum(m)).astype(row.dtype)
+        return vals
+
+    values = jax.vmap(row_pack)(x2d, mask)
+    return BitmapPayload(words, values, jnp.sum(mask, axis=-1).astype(jnp.int32))
+
+
+def unpack_bitmap(payload: BitmapPayload, n: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bitmap` -> dense (c, n)."""
+    mask = bitmap_to_mask(payload.words, n)
+
+    def row_unpack(m, vals):
+        # position of each element among the nonzeros of its row
+        pos = jnp.cumsum(m) - 1
+        gathered = vals[jnp.clip(pos, 0, vals.shape[0] - 1)]
+        return jnp.where(m, gathered, 0.0).astype(vals.dtype)
+
+    return jax.vmap(row_unpack)(mask, payload.values)
+
+
+# ---------------------------------------------------------------------------
+# Size accounting (feeds the §III-D break-even model and EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+
+def payload_bits_index(n: int, k: int, value_bits: int, index_bits: int = 16) -> int:
+    """Bits per chunk for the index layout (index_bits/coeff overhead)."""
+    return k * (value_bits + index_bits)
+
+
+def payload_bits_bitmap(n: int, k: int, value_bits: int) -> int:
+    """Bits per chunk for the paper's bitmap layout (n/k bits/coeff overhead).
+
+    Bitmap wins whenever 1/(1-theta) < index_bits, i.e. theta < 15/16 for
+    16-bit indices — the paper's theta<=0.9 regime ships the bitmap; DGC's
+    theta=0.999 regime ships indices.
+    """
+    return n + k * value_bits

@@ -1,0 +1,83 @@
+"""Theta (drop-out ratio) schedules (paper §IV-A1 and Theorem 3.5).
+
+The paper trains with a *static* theta <= 0.7 without accuracy loss, shows
+theta = 0.9+ degrades accuracy (Thm 3.4's noise-ball term), and fixes it by
+*shrinking* theta during training ("mixed comp": theta=0.99 early, 0 late).
+Thm 3.5 proves convergence when theta_t^2 = L * eta_t with a diminishing step
+size.  The paper also suggests polynomial / sigmoid decays, mirroring LR
+schedules.
+
+Schedules are plain step -> float callables evaluated OUTSIDE jit: a theta
+change alters the static kept-k, so the training loop re-instantiates the
+compiled step per distinct theta (a handful per run; see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Sequence, Tuple
+
+__all__ = [
+    "constant",
+    "step_decay",
+    "polynomial_decay",
+    "sigmoid_decay",
+    "thm35_schedule",
+    "quantize_theta",
+]
+
+ThetaSchedule = Callable[[int], float]
+
+
+def constant(theta: float) -> ThetaSchedule:
+    return lambda step: theta
+
+
+def step_decay(boundaries_and_values: Sequence[Tuple[int, float]]) -> ThetaSchedule:
+    """Piecewise-constant: [(step_boundary, theta_after), ...], sorted.
+
+    The paper's "mixed comp" is ``step_decay([(0, 0.99), (T, 0.0)])``.
+    """
+    table = sorted(boundaries_and_values)
+
+    def schedule(step: int) -> float:
+        theta = table[0][1]
+        for boundary, value in table:
+            if step >= boundary:
+                theta = value
+        return theta
+
+    return schedule
+
+
+def polynomial_decay(
+    theta0: float, total_steps: int, power: float = 1.0, theta_end: float = 0.0
+) -> ThetaSchedule:
+    def schedule(step: int) -> float:
+        frac = min(max(step / max(total_steps, 1), 0.0), 1.0)
+        return theta_end + (theta0 - theta_end) * (1.0 - frac) ** power
+
+    return schedule
+
+
+def sigmoid_decay(theta0: float, midpoint: int, steepness: float = 0.01) -> ThetaSchedule:
+    def schedule(step: int) -> float:
+        return theta0 / (1.0 + math.exp(steepness * (step - midpoint)))
+
+    return schedule
+
+
+def thm35_schedule(lipschitz: float, eta_schedule: Callable[[int], float]) -> ThetaSchedule:
+    """Theorem 3.5: theta_t = sqrt(L * eta_t), clipped to the lemma's
+    admissible region theta^2 <= 1/4 (i.e. theta <= 0.5)."""
+
+    def schedule(step: int) -> float:
+        return min(0.5, math.sqrt(max(lipschitz * eta_schedule(step), 0.0)))
+
+    return schedule
+
+
+def quantize_theta(theta: float, granularity: float = 0.05) -> float:
+    """Snap theta to a grid so a smooth schedule yields a bounded number of
+    recompilations (static kept-k changes only at grid boundaries)."""
+    return min(0.95, max(0.0, round(theta / granularity) * granularity))

@@ -1,0 +1,88 @@
+"""Sparsification in the frequency and time domains (paper §III-B.1).
+
+``theta`` is the paper's drop-out ratio: keep the top ``(1 - theta)`` fraction
+of coefficients by magnitude, zero the rest.  On TPU the selection is per-chunk
+``jax.lax.top_k`` with a *static* k — XLA needs static shapes, so a theta
+schedule (Thm 3.5) implies one recompile per distinct theta value (DESIGN.md
+§2).  The Pallas ``topk_threshold`` kernel provides the fused TPU hot path;
+this module is the reference/composable implementation.
+
+Frequency-domain selection ranks rfft bins by Hermitian-weighted magnitude so
+the dropped energy equals the time-domain energy loss exactly (Parseval).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as cfft
+
+__all__ = [
+    "keep_count",
+    "topk_select",
+    "topk_mask",
+    "frequency_sparsify",
+    "time_sparsify",
+    "threshold_sparsify",
+]
+
+
+def keep_count(n: int, theta: float) -> int:
+    """Static number of kept coefficients for drop ratio theta in [0, 1)."""
+    if not 0.0 <= theta < 1.0:
+        raise ValueError(f"theta must be in [0,1), got {theta}")
+    return max(1, int(round((1.0 - theta) * n)))
+
+
+def topk_select(mag: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Indices (…, k) of the k largest magnitudes along the last axis."""
+    _, idx = jax.lax.top_k(mag, k)
+    return idx
+
+
+def topk_mask(mag: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask keeping the per-row top-k by magnitude."""
+    idx = topk_select(mag, k)
+    mask = jnp.zeros(mag.shape, bool)
+    return jax.vmap(lambda m, i: m.at[i].set(True))(
+        mask.reshape(-1, mag.shape[-1]), idx.reshape(-1, idx.shape[-1])
+    ).reshape(mag.shape)
+
+
+def frequency_sparsify(
+    x_flat: jnp.ndarray, theta: float, chunk: int = cfft.DEFAULT_CHUNK
+) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """FFT -> drop theta fraction of bins -> return (freqs, kept_idx, orig_len).
+
+    ``freqs`` is the sparsified (zero-filled) complex spectrum; ``kept_idx`` is
+    the (n_chunks, k) static-shape index payload that pack/unpack uses.
+    """
+    freqs, n = cfft.chunked_rfft(x_flat, chunk)
+    f_bins = freqs.shape[-1]
+    k = keep_count(f_bins, theta)
+    w = cfft.hermitian_weights(chunk)
+    mag = jnp.abs(freqs) * w  # weighted magnitude = energy-faithful ranking
+    idx = topk_select(mag, k)
+    kept = jnp.take_along_axis(freqs, idx, axis=-1)
+    sparse = jnp.zeros_like(freqs)
+    sparse = jax.vmap(lambda row, i, v: row.at[i].set(v))(sparse, idx, kept)
+    return sparse, idx, n
+
+
+def time_sparsify(x_flat: jnp.ndarray, theta: float, chunk: int = cfft.DEFAULT_CHUNK):
+    """Time-domain per-chunk top-k (DGC / Aji-Heafield baseline path)."""
+    x2d, n = cfft.pad_to_chunks(x_flat, chunk)
+    k = keep_count(chunk, theta)
+    idx = topk_select(jnp.abs(x2d), k)
+    kept = jnp.take_along_axis(x2d, idx, axis=-1)
+    sparse = jnp.zeros_like(x2d)
+    sparse = jax.vmap(lambda row, i, v: row.at[i].set(v))(sparse, idx, kept)
+    return sparse, idx, n
+
+
+def threshold_sparsify(x: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """Magnitude thresholding (irregular sparsity; kept for the bitmap path)."""
+    return jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticConfig, SyntheticStream
+
+__all__ = ["SyntheticConfig", "SyntheticStream"]

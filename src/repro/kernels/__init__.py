@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's four compression hot spots
+(FFT, top-k select, precision conversion, pack) + the fused pipeline.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+jit'd wrappers in ops.py, pure-jnp oracles in ref.py.
+Validated in interpret mode on CPU; compiled via Mosaic on TPU.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: 4096-point FFT via Bailey's 4-step algorithm on the MXU.
+
+The paper leans on cuFFT.  TPUs have no FFT unit — but the MXU is a 128x128
+systolic matmul array, and Bailey's 4-step factorization turns an N-point DFT
+into sqrt(N) x sqrt(N) DFT *matmuls*:
+
+    view x as a (64, 64) matrix  xm[n1, n2] = x[n1*64 + n2]
+    A  = F64 @ xm                     (DFT along columns)        [stage 1]
+    B  = A * W,  W[k1,n2] = w^(k1*n2) (twiddle, elementwise)     [stage 2]
+    Xm = B @ F64^T                    (DFT along rows)           [stage 3]
+    X[k2*64 + k1] = Xm[k1, k2]        (transpose read-out)       [stage 4]
+
+Complex arithmetic is carried as separate real/imag planes (the MXU is real):
+stage 1 on a real input costs 2 real 64x64 matmuls, stage 3 costs 4 — six
+64x64x(64*B) matmuls per block of B chunks, batched along columns/rows so the
+MXU sees well-shaped (64, 64*B) operands.
+
+Napkin math (why this beats a "ported" radix-2 FFT on TPU): 4-step does
+~6*2*64^3*B = 3.1 MFLOP per 4096-chunk vs ~0.25 MFLOP for radix-2 — 12x more
+FLOPs — but runs on the MXU at 197 TFLOP/s(bf16)/~50(f32) with zero
+shuffle/bit-reverse ops, vs the VPU's ~4 TFLOP/s with heavy lane crossings.
+Net ≳ 4x, and the chunk never leaves VMEM.
+
+The inverse uses conj twiddles + 1/N.  ``rfft`` semantics (first 2049 bins)
+are applied by the ops.py wrapper; the kernel produces/consumes the full
+4096-bin spectrum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["fft4096_pallas", "CHUNK", "N1", "N2"]
+
+CHUNK = 4096
+N1 = 64
+N2 = 64
+
+
+@functools.lru_cache(maxsize=4)
+def _dft_constants(inverse: bool):
+    """(F64_re, F64_im, W_re, W_im) as float32 numpy arrays."""
+    sign = 2.0 if inverse else -2.0
+    k = np.arange(N1)[:, None]
+    n = np.arange(N1)[None, :]
+    f = np.exp(sign * 1j * np.pi * k * n / N1)
+    k1 = np.arange(N1)[:, None]
+    n2 = np.arange(N2)[None, :]
+    w = np.exp(sign * 1j * np.pi * k1 * n2 / CHUNK)  # w^(k1*n2), w = e^(-+2*pi*i/N)
+    return (
+        f.real.astype(np.float32),
+        f.imag.astype(np.float32),
+        w.real.astype(np.float32),
+        w.imag.astype(np.float32),
+    )
+
+
+def _fft_body(fre_ref, fim_ref, wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim_ref, *, inverse: bool):
+    b = xre_ref.shape[0]  # chunks in this block
+    fre, fim = fre_ref[...], fim_ref[...]  # (64, 64)
+    wre, wim = wre_ref[...], wim_ref[...]  # (64, 64)
+
+    # stage 0: matrix view — (b, 4096) -> (b, 64, 64) -> (64, b*64)
+    xre = xre_ref[...].reshape(b, N1, N2).transpose(1, 0, 2).reshape(N1, b * N2)
+    xim = xim_ref[...].reshape(b, N1, N2).transpose(1, 0, 2).reshape(N1, b * N2)
+
+    # stage 1: A = F64 @ xm (complex x complex as 4 real matmuls)
+    dot = functools.partial(jax.lax.dot, precision=jax.lax.Precision.HIGHEST)
+    are = dot(fre, xre) - dot(fim, xim)
+    aim = dot(fre, xim) + dot(fim, xre)
+
+    # stage 2: twiddle — W broadcast over the b chunks along columns
+    a_re = are.reshape(N1, b, N2)
+    a_im = aim.reshape(N1, b, N2)
+    w_re = wre[:, None, :]
+    w_im = wim[:, None, :]
+    bre = a_re * w_re - a_im * w_im
+    bim = a_re * w_im + a_im * w_re
+
+    # stage 3: Xm = B @ F64^T, batched along rows -> (b*64, 64)
+    bre2 = bre.transpose(1, 0, 2).reshape(b * N1, N2)
+    bim2 = bim.transpose(1, 0, 2).reshape(b * N1, N2)
+    ft_re, ft_im = fre.T, fim.T
+    xmre = dot(bre2, ft_re) - dot(bim2, ft_im)
+    xmim = dot(bre2, ft_im) + dot(bim2, ft_re)
+
+    # stage 4: transpose read-out X[k2*64 + k1] = Xm[k1, k2]
+    xmre = xmre.reshape(b, N1, N2).transpose(0, 2, 1).reshape(b, CHUNK)
+    xmim = xmim.reshape(b, N1, N2).transpose(0, 2, 1).reshape(b, CHUNK)
+    scale = (1.0 / CHUNK) if inverse else 1.0
+    ore_ref[...] = xmre * scale
+    oim_ref[...] = xmim * scale
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "block_chunks", "interpret"))
+def fft4096_pallas(
+    x_re: jnp.ndarray,
+    x_im: jnp.ndarray,
+    *,
+    inverse: bool = False,
+    block_chunks: int = 8,
+    interpret: bool = True,
+):
+    """Batched 4096-pt complex FFT: (rows, 4096) re/im -> (rows, 4096) re/im.
+
+    VMEM per block at block_chunks=8: 8*4096*4B*2(re,im)*3(live stages) ≈ 1.5MB
+    — comfortably under the ~16MB/core budget, leaving room for double
+    buffering.
+    """
+    rows, n = x_re.shape
+    assert n == CHUNK, f"kernel is specialized to {CHUNK}-pt chunks"
+    block_chunks = min(block_chunks, rows)
+    grid = (pl.cdiv(rows, block_chunks),)
+    fre, fim, wre, wim = (jnp.asarray(c) for c in _dft_constants(inverse))
+    const_spec = pl.BlockSpec((N1, N2), lambda i: (0, 0), memory_space=pltpu.VMEM)
+    data_spec = pl.BlockSpec((block_chunks, CHUNK), lambda i: (i, 0), memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        functools.partial(_fft_body, inverse=inverse),
+        grid=grid,
+        in_specs=[const_spec] * 4 + [data_spec] * 2,
+        out_specs=[data_spec] * 2,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, CHUNK), jnp.float32),
+            jax.ShapeDtypeStruct((rows, CHUNK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(fre, fim, wre, wim, x_re.astype(jnp.float32), x_im.astype(jnp.float32))

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: sparse->dense pack / dense->sparse unpack.
+
+The paper's GPU pack is: status bitmap -> parallel prefix sum -> scattered
+write (689x speedup over 1 thread on V100).  TPUs have no efficient in-VMEM
+scatter, so the adaptation (DESIGN.md §2) reformulates compaction as
+**cumsum + one-hot contraction**, both native TPU operations:
+
+    pos[i]   = cumsum(mask)[i] - 1                (position among kept)
+    vals[j]  = sum_i x[i]   * mask[i] * [pos[i] == j]
+    idx[j]   = sum_i i      * mask[i] * [pos[i] == j]
+
+The contraction is tiled over the k output slots (tile 128 = lane width) so
+the one-hot never materializes beyond a ``(rows, cols, 128)`` VMEM slab.
+Unpack is the transpose: ``dense[i] = sum_j vals[j] * [idx[j] == i]`` tiled
+over the dense axis.  Round-trips exactly against the jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["pack_pallas", "unpack_pallas"]
+
+_K_TILE = 128
+_F_TILE = 512
+
+
+def _pack_body(x_ref, tau_ref, vals_ref, idx_ref, *, k: int):
+    x = x_ref[...]  # (r, cols)
+    tau = tau_ref[...]  # (r, 1)
+    r, cols = x.shape
+    mask = (jnp.abs(x) >= tau).astype(jnp.float32)
+    pos = jnp.cumsum(mask, axis=-1) - 1.0  # (r, cols) position among kept
+    pos = jnp.where(mask > 0, pos, -1.0)  # dropped -> sentinel
+    col_iota = jax.lax.broadcasted_iota(jnp.float32, (r, cols), 1)
+
+    n_tiles = pl.cdiv(k, _K_TILE)
+    for t in range(n_tiles):  # static unroll: k is static
+        slot = jax.lax.broadcasted_iota(jnp.float32, (1, 1, _K_TILE), 2) + t * _K_TILE
+        onehot = (pos[:, :, None] == slot).astype(jnp.float32)  # (r, cols, K_TILE)
+        vals_t = jnp.sum(x[:, :, None] * onehot, axis=1)  # (r, K_TILE)
+        idx_t = jnp.sum(col_iota[:, :, None] * onehot, axis=1)
+        vals_ref[:, t * _K_TILE : (t + 1) * _K_TILE] = vals_t
+        idx_ref[:, t * _K_TILE : (t + 1) * _K_TILE] = idx_t.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_rows", "interpret"))
+def pack_pallas(
+    x2d: jnp.ndarray,
+    tau: jnp.ndarray,
+    *,
+    k: int,
+    block_rows: int = 4,
+    interpret: bool = True,
+):
+    """Compact per-row elements with |x| >= tau into (vals, idx) of width k.
+
+    ``k`` must be padded to a multiple of 128 by the caller (ops.py does).
+    Slots beyond the actual kept count hold (0.0, 0) — dequant-neutral.
+    """
+    rows, cols = x2d.shape
+    assert k % _K_TILE == 0, "pad k to a multiple of 128 (see ops.pad_k)"
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_pack_body, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k), jnp.float32),
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2d.astype(jnp.float32), tau.astype(jnp.float32))
+
+
+def _unpack_body(vals_ref, idx_ref, dense_ref, *, cols: int):
+    vals = vals_ref[...]  # (r, k)
+    idx = idx_ref[...].astype(jnp.float32)  # (r, k)
+    r, k = vals.shape
+    # slots with vals == 0 are padding; idx 0 collisions are harmless (add 0)
+    n_tiles = pl.cdiv(cols, _F_TILE)
+    for t in range(n_tiles):
+        col = jax.lax.broadcasted_iota(jnp.float32, (1, 1, _F_TILE), 2) + t * _F_TILE
+        onehot = (idx[:, :, None] == col).astype(jnp.float32)  # (r, k, F_TILE)
+        dense_t = jnp.sum(vals[:, :, None] * onehot, axis=1)  # (r, F_TILE)
+        dense_ref[:, t * _F_TILE : (t + 1) * _F_TILE] = dense_t
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "block_rows", "interpret"))
+def unpack_pallas(
+    vals: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    cols: int,
+    block_rows: int = 4,
+    interpret: bool = True,
+):
+    """Scatter (vals, idx) of width k back to a dense (rows, cols) array."""
+    rows, k = vals.shape
+    assert cols % _F_TILE == 0, "pad cols to a multiple of 512 (see ops.pad_cols)"
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_unpack_body, cols=cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(vals.astype(jnp.float32), idx.astype(jnp.int32))

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: range-based N-bit float encode/decode (paper Alg. 1).
+
+The precision conversion is one of the four compression primitives the paper
+optimizes on GPU ("embarrassingly data parallel ... take the benefit of GPU").
+On TPU it is a pure VPU elementwise pass: grid over row-blocks, each block a
+``(block_rows, cols)`` VMEM tile; quantizer parameters (eps, P, n_neg) ride in
+SMEM as scalars.
+
+Codes are emitted as uint8 (n_bits <= 8) — the memory-bandwidth win (4 bytes ->
+1 byte) is the entire point of the pass; see EXPERIMENTS.md §Perf for the
+fused variant that removes this pass's HBM round-trip altogether.
+
+Matches :mod:`repro.core.quantizer` bit-for-bit (tests/test_kernels.py sweeps
+shapes x dtypes against the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["encode_pallas", "decode_pallas"]
+
+
+def _encode_body(params_ref, x_ref, codes_ref, *, m_bits: int):
+    eps = params_ref[0]
+    p_codes = params_ref[1]  # f32-carried int
+    n_neg = params_ref[2]
+    m_scale = float(1 << m_bits)
+
+    x = x_ref[...]
+    a = jnp.abs(x)
+    pos = x >= 0
+
+    safe_a = jnp.maximum(a, eps)
+    q = jnp.floor(jnp.log2(safe_a) - jnp.log2(eps) + 1e-6)
+    seg_base = eps * jnp.exp2(q)
+    r = jnp.round((safe_a / seg_base - 1.0) * m_scale)
+    carry = r >= m_scale
+    q = jnp.where(carry, q + 1.0, q)
+    r = jnp.where(carry, 0.0, r)
+    idx = q * m_scale + r
+    # below-eps: nearest of {0, eps}
+    idx = jnp.where(a < eps, jnp.where(a * 2.0 >= eps, 0.0, -1.0), idx)
+    idx_pos = jnp.clip(idx, -1.0, p_codes - 1.0)
+    idx_neg = jnp.clip(idx, -1.0, jnp.maximum(n_neg, 1.0) - 1.0)
+
+    code = jnp.where(
+        pos,
+        jnp.where(idx_pos < 0, 0.0, idx_pos + 1.0),
+        jnp.where(idx_neg < 0, 0.0, p_codes + idx_neg + 1.0),
+    )
+    codes_ref[...] = code.astype(codes_ref.dtype)
+
+
+def _decode_body(params_ref, codes_ref, x_ref, *, m_bits: int):
+    eps = params_ref[0]
+    p_codes = params_ref[1]
+    m_scale = float(1 << m_bits)
+
+    c = codes_ref[...].astype(jnp.float32)
+    is_zero = c == 0.0
+    is_pos = (c >= 1.0) & (c <= p_codes)
+    idx = jnp.where(is_pos, c - 1.0, c - p_codes - 1.0)
+    idx = jnp.maximum(idx, 0.0)
+    q = jnp.floor(idx / m_scale)
+    r = idx - q * m_scale
+    mag = eps * jnp.exp2(q) * (1.0 + r / m_scale)
+    val = jnp.where(is_pos, mag, -mag)
+    x_ref[...] = jnp.where(is_zero, 0.0, val).astype(x_ref.dtype)
+
+
+def _params_vec(eps, p_codes, n_codes: int):
+    n_neg = n_codes - 1 - p_codes
+    return jnp.stack(
+        [
+            jnp.asarray(eps, jnp.float32),
+            p_codes.astype(jnp.float32),
+            n_neg.astype(jnp.float32),
+        ]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "m_bits", "block_rows", "interpret"))
+def encode_pallas(
+    x2d: jnp.ndarray,
+    eps: jnp.ndarray,
+    p_codes: jnp.ndarray,
+    *,
+    n_bits: int = 8,
+    m_bits: int = 3,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """f32 (rows, cols) -> uint8/uint16 codes, tiled over rows."""
+    rows, cols = x2d.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    out_dtype = jnp.uint8 if n_bits <= 8 else jnp.uint16
+    params = _params_vec(eps, p_codes, 1 << n_bits)
+    return pl.pallas_call(
+        functools.partial(_encode_body, m_bits=m_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), out_dtype),
+        interpret=interpret,
+    )(params, x2d.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_bits", "m_bits", "block_rows", "interpret"))
+def decode_pallas(
+    codes2d: jnp.ndarray,
+    eps: jnp.ndarray,
+    p_codes: jnp.ndarray,
+    *,
+    n_bits: int = 8,
+    m_bits: int = 3,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """codes (rows, cols) -> f32, tiled over rows."""
+    rows, cols = codes2d.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    params = _params_vec(jnp.float32(0) + eps, p_codes, 1 << n_bits)
+    return pl.pallas_call(
+        functools.partial(_decode_body, m_bits=m_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0), memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(params, codes2d)

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one kernel with straightforward jnp code; kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import (
+    FittedQuantizer,
+    RangeQuantConfig,
+    decode as _q_decode,
+    encode as _q_encode,
+)
+
+__all__ = [
+    "quant_encode_ref",
+    "quant_decode_ref",
+    "threshold_ref",
+    "pack_ref",
+    "unpack_ref",
+    "fft4096_ref",
+]
+
+
+def _quantizer_from(eps, p_codes, n_bits: int, m_bits: int) -> FittedQuantizer:
+    cfg = RangeQuantConfig(n_bits, m_bits)
+    # vmax/vmin unused by encode/decode math; fill for completeness
+    return FittedQuantizer(cfg, jnp.asarray(eps, jnp.float32), jnp.asarray(p_codes, jnp.int32),
+                           jnp.asarray(0.0), jnp.asarray(0.0))
+
+
+def quant_encode_ref(x2d, eps, p_codes, n_bits=8, m_bits=3):
+    return _q_encode(x2d, _quantizer_from(eps, p_codes, n_bits, m_bits))
+
+
+def quant_decode_ref(codes2d, eps, p_codes, n_bits=8, m_bits=3):
+    return _q_decode(codes2d, _quantizer_from(eps, p_codes, n_bits, m_bits))
+
+
+def threshold_ref(mag2d: jnp.ndarray, k: int):
+    """Exact k-th largest per row as the threshold (tau), plus count >= k."""
+    top, _ = jax.lax.top_k(mag2d, k)
+    tau = top[:, -1:]
+    count = jnp.sum(mag2d >= tau, axis=-1, keepdims=True).astype(jnp.int32)
+    return tau, count
+
+
+def pack_ref(x2d: jnp.ndarray, tau: jnp.ndarray, k: int):
+    """Compact |x| >= tau into (vals, idx) of static width k, in index order."""
+
+    def row(xr, tr):
+        mask = jnp.abs(xr) >= tr[0]
+        idx = jnp.nonzero(mask, size=k, fill_value=-1)[0]
+        valid = idx >= 0
+        vals = jnp.where(valid, xr[jnp.maximum(idx, 0)], 0.0)
+        return vals, jnp.where(valid, idx, 0).astype(jnp.int32)
+
+    return jax.vmap(row)(x2d, tau)
+
+
+def unpack_ref(vals: jnp.ndarray, idx: jnp.ndarray, cols: int):
+    """Scatter (vals, idx) to dense (rows, cols)."""
+
+    def row(v, i):
+        return jnp.zeros((cols,), v.dtype).at[i].add(v)
+
+    return jax.vmap(row)(vals, idx)
+
+
+def fft4096_ref(x_re: jnp.ndarray, x_im: jnp.ndarray, inverse: bool = False):
+    """Full 4096-bin complex FFT per row via jnp.fft."""
+    z = x_re.astype(jnp.complex64) + 1j * x_im.astype(jnp.complex64)
+    out = jnp.fft.ifft(z, axis=-1) if inverse else jnp.fft.fft(z, axis=-1)
+    return jnp.real(out).astype(jnp.float32), jnp.imag(out).astype(jnp.float32)

@@ -1,0 +1,363 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh ((16,16) or (2,16,16) = 512 chips),
+  2. builds ShapeDtypeStruct stand-ins for state/batch/caches (no allocation),
+  3. jax.jit(step, in_shardings, out_shardings).lower(...).compile(),
+  4. prints compiled.memory_analysis() (proves HBM fit) and cost_analysis(),
+  5. parses collective bytes out of the optimized HLO,
+  6. writes a JSON artifact consumed by EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2_2b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--out benchmarks/artifacts]
+  python -m repro.launch.dryrun --arch gemma2_2b --shape train_4k \
+      --mode hierarchical --theta 0.7     # compressed-exchange variants
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis.roofline import V5E, compute_roofline
+from repro.comms.reducers import ReducerConfig
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.models.sharding import abstract_params, count_params, spec_tree_to_pspecs
+from repro.models.transformer import MeshCtx
+from repro.optim import OptConfig
+from repro.serve.engine import build_decode_step, build_prefill_step
+from repro.train.state import abstract_state
+from repro.train.step import StepConfig, build_train_step
+
+# FSDP (params 2D-sharded over data x model) is the uniform TRAIN default:
+# replicated fp32 params+opt (12 bytes/param) blow 16GB/chip even at 2.6B
+# when attention heads can't divide the model axis, and the per-layer
+# allgather it costs is overlappable (the production default in MaxText too).
+# Serving weights (bf16, no opt state) only need 2D sharding above ~40B.
+FSDP_TRAIN_THRESHOLD = 0
+FSDP_SERVE_THRESHOLD = 40e9
+
+
+def _shardify(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _cache_pspecs(caches_abs, cfg, shape, mesh_axes):
+    """PartitionSpec per cache leaf (leaves carry a leading n_groups axis)."""
+    data_ok = shape.global_batch % mesh_axes.get("data", 1) == 0 and shape.global_batch > 1
+    kv_ok = cfg.n_kv_heads % mesh_axes.get("model", 1) == 0
+    model_n = mesh_axes.get("model", 1)
+
+    def leaf_spec(leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        if nd >= 2 and shp[1] == shape.global_batch and nd >= 4:
+            # (G, B, ...) state/cache tensors: 2-D sharding — batch over
+            # 'data' AND the first large divisible trailing axis (cache seq)
+            # over 'model'.  A 32k x 128 dense KV cache at 80 layers is
+            # 86 GiB/device unsharded; batch/16 + seq/16 leaves 0.34 GiB
+            # (§Perf decode iteration D1).
+            batch_ax = "data" if data_ok else None
+            rest = [None] * (nd - 2)
+            if not data_ok:
+                # long-context batch=1: seq takes 'data' instead
+                for i in range(nd - 2):
+                    if shp[2 + i] % mesh_axes.get("data", 1) == 0 and shp[2 + i] > 1:
+                        rest[i] = "data"
+                        break
+            for i in range(nd - 2):
+                if rest[i] is None and shp[2 + i] % model_n == 0 and shp[2 + i] >= model_n:
+                    rest[i] = "model"
+                    break
+            return P(None, batch_ax, *rest)
+        if nd == 2:  # (G, S) position arrays
+            return P(None, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map(leaf_spec, caches_abs)
+
+
+def _lower_cell(cfg, shape, mesh, mesh_axes, *, multi_pod, mode, theta):
+    """Lower + compile one cell for the given (possibly depth-reduced) cfg.
+
+    Returns (compiled, kind, tokens)."""
+    model = registry.build(cfg)
+    n_params = count_params(model.spec())
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    specs = registry.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(kind="adamw")
+        reducer = None
+        if mode != "pjit":
+            reducer = ReducerConfig(
+                kind="fft" if mode == "compressed_dp" else "hierarchical",
+                # hierarchical: only 'pod' is manual; 'data' reduction is
+                # auto-partitioned, so the reducer must not psum over it
+                axis="data" if mode == "compressed_dp" else None,
+                pod_axis="pod" if multi_pod else None,
+                theta=theta,
+            )
+        step_cfg = StepConfig(
+            mode=mode,
+            fsdp=n_params > FSDP_TRAIN_THRESHOLD,
+            multi_pod=multi_pod,
+            reducer=reducer,
+        )
+        state = abstract_state(model, opt_cfg)
+        step = build_train_step(model, opt_cfg, step_cfg, mesh, specs, donate=True)
+        lowered = step.lower(state, specs)
+        return lowered.compile(), "train", shape.tokens
+
+    fsdp = n_params > FSDP_SERVE_THRESHOLD
+    pspecs = spec_tree_to_pspecs(model.spec(), mesh_axes, fsdp=fsdp)
+    params_abs = abstract_params(model.spec(), jnp.bfloat16)
+    params_sh = _shardify(mesh, pspecs)
+    ctx = MeshCtx(batch=batch_axes if shape.global_batch > 1 else (),
+                  model_size=mesh_axes.get("model", 1),
+                  seq="data" if shape.global_batch == 1 else None)
+    if shape.kind == "prefill":
+        fn = build_prefill_step(model, ctx, max_seq=shape.seq_len)
+        batch_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(batch_axes)), specs)
+        caches_abs = jax.eval_shape(lambda: model.init_caches(
+            shape.global_batch, shape.seq_len))
+        cache_sh = _shardify(mesh, _cache_pspecs(caches_abs, cfg, shape, mesh_axes))
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                         out_shardings=(None, cache_sh))
+        lowered = jitted.lower(params_abs, specs)
+        return lowered.compile(), "prefill", shape.tokens
+    # decode
+    fn = build_decode_step(model, ctx)
+    caches_abs = specs["caches"]
+    cache_sh = _shardify(mesh, _cache_pspecs(caches_abs, cfg, shape, mesh_axes))
+    tok_sh = NamedSharding(mesh, P(batch_axes) if shape.global_batch > 1 else P())
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, cache_sh, tok_sh, NamedSharding(mesh, P())),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    lowered = jitted.lower(params_abs, caches_abs, specs["token"], specs["pos"])
+    return lowered.compile(), "decode", shape.global_batch
+
+
+def _cost_and_collectives(compiled):
+    cost = compiled.cost_analysis()
+    coll = hlo_mod.summarize(hlo_mod.parse_collectives(compiled.as_text()))
+    return cost, coll
+
+
+def _recurrent_correction(cfg, shape, mesh_axes, kind: str) -> float:
+    """Analytic per-device FLOPs for the per-timestep mLSTM/sLSTM scans.
+
+    The sLSTM time loop stays lax.scan even in the unrolled cost samples
+    (4096 iterations cannot be unrolled), so HLO counts one step per layer;
+    this adds the remaining (S-1) steps:
+        sLSTM step ~ 8*d^2 flops/token (h @ R recurrent matmul)
+    (mLSTM uses the chunkwise-parallel form whose chunk loop IS unrolled in
+    the samples, so it needs no correction.)  Batch is sharded over 'data'.
+    """
+    if cfg.family != "ssm":
+        return 0.0
+    steps = 1 if kind == "decode" else shape.seq_len
+    if steps <= 1:
+        return 0.0
+    b_local = max(1, shape.global_batch // mesh_axes.get("data", 1))
+    pattern = cfg.layer_pattern()
+    n_slstm = sum(k == "slstm" for k in pattern) * cfg.n_groups()
+    per_tok = n_slstm * 8.0 * cfg.d_model**2
+    return float((steps - 1) * b_local * per_tok)
+
+
+def _affine_extrapolate(c1, c2, g1: int, g2: int, g_full: int):
+    """f(G) = a + b*G from two samples; evaluated at g_full (>= exact for
+    affine-in-depth costs; XLA counts while bodies once, so sampling at true
+    depths 1 and 2 groups gives the exact per-group increment)."""
+    b = (c2 - c1) / (g2 - g1)
+    a = c1 - b * g1
+    return a + b * g_full
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mode: str = "pjit",
+             theta: float = 0.7, out_dir: str = "benchmarks/artifacts/dryrun",
+             verbose: bool = True, skip_cost: bool = False):
+    shape = SHAPES[shape_name]
+    skip = registry.cell_is_supported(arch, shape)
+    if skip:
+        result = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                  "mode": mode, "status": "skipped", "reason": skip}
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            tag = (f"{arch}__{shape_name}__"
+                   f"{'multi' if multi_pod else 'single'}__{mode}")
+            with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                json.dump(result, f, indent=1)
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_axes = dict(mesh.shape)
+    chips = mesh.devices.size
+    cfg = registry.get_config(arch)
+    model = registry.build(cfg)
+    n_params = count_params(model.spec())
+    n_active = cfg.active_param_count() if cfg.n_experts else n_params
+    plen = len(cfg.layer_pattern())
+    g_full = cfg.n_groups()
+
+    with jax.set_mesh(mesh):
+        # 1) FULL-depth compile: proves lowering + sharding + memory fit.
+        compiled, kind, tokens = _lower_cell(
+            cfg, shape, mesh, mesh_axes, multi_pod=multi_pod, mode=mode, theta=theta)
+        t_full = time.time() - t0
+
+        # 2) depth-1 / depth-2 UNROLLED compiles for cost extrapolation: XLA's
+        # cost_analysis visits while(scan) bodies ONCE regardless of trip
+        # count, so the shallow samples lower with straight-line HLO
+        # (scan_layers=False + flags.UNROLL_INNER) and the affine-in-depth
+        # extrapolation recovers exact totals.  The per-timestep xLSTM
+        # recurrences stay scans; their analytic correction is added below.
+        import dataclasses as _dc
+        from repro.models import flags as _flags
+
+        cost1 = cost2 = coll1 = coll2 = None
+        if skip_cost:
+            g_full = 1  # reuse the full compile's (undercounted) cost; the
+            # single-pod table is the roofline source, multi-pod proves
+            # lowering + HBM fit
+        if g_full > 1:
+            _flags.UNROLL_INNER = True
+            try:
+                cfg1 = _dc.replace(cfg, n_layers=plen * 1, scan_layers=False)
+                cfg2 = _dc.replace(cfg, n_layers=plen * 2, scan_layers=False)
+                comp1, _, _ = _lower_cell(cfg1, shape, mesh, mesh_axes,
+                                          multi_pod=multi_pod, mode=mode, theta=theta)
+                cost1, coll1 = _cost_and_collectives(comp1)
+                comp2, _, _ = _lower_cell(cfg2, shape, mesh, mesh_axes,
+                                          multi_pod=multi_pod, mode=mode, theta=theta)
+                cost2, coll2 = _cost_and_collectives(comp2)
+                del comp1, comp2
+            finally:
+                _flags.UNROLL_INNER = False
+
+    t_all = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    if g_full > 1:
+        cost = {
+            k: _affine_extrapolate(cost1.get(k, 0.0), cost2.get(k, 0.0), 1, 2, g_full)
+            for k in ("flops", "bytes accessed")
+        }
+        kinds = set(coll1) | set(coll2)
+        collectives = {}
+        for k in kinds:
+            z = {"count": 0, "raw_bytes": 0.0, "link_bytes": 0.0}
+            s1, s2 = coll1.get(k, z), coll2.get(k, z)
+            collectives[k] = {
+                f: _affine_extrapolate(s1[f], s2[f], 1, 2, g_full) for f in z
+            }
+    else:
+        cost, collectives = _cost_and_collectives(compiled)
+    cost["flops"] = cost.get("flops", 0.0) + _recurrent_correction(
+        cfg, shape, mesh_axes, kind)
+    terms = compute_roofline(
+        cost=cost, collectives=collectives, chips=chips,
+        n_active_params=n_active, tokens=tokens, kind=kind,
+    )
+
+    mem_dict = {
+        "argument_size_gib": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+        "output_size_gib": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+        "temp_size_gib": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+        "generated_code_size_gib": getattr(mem, "generated_code_size_in_bytes", 0) / 2**30,
+    }
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod, "mode": mode,
+        "status": "ok", "chips": chips, "kind": kind,
+        "n_params": n_params, "n_active_params": n_active, "tokens": tokens,
+        "memory": mem_dict,
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed") if k in cost},
+        "collectives": collectives,
+        "roofline": terms.as_dict(),
+        "full_compile_s": round(t_full, 1), "total_s": round(t_all, 1),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh={'multi' if multi_pod else 'single'} "
+              f"mode={mode}: OK (full compile {t_full:.0f}s, total {t_all:.0f}s)")
+        print(f"  memory/device: {mem_dict}")
+        print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms collective={terms.collective_s*1e3:.2f}ms "
+              f"dominant={terms.dominant} useful={terms.useful_ratio:.2f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}__{mode}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="pjit",
+                    choices=["pjit", "compressed_dp", "hierarchical"])
+    ap.add_argument("--theta", type=float, default=0.7)
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="full compile only (multi-pod fit/lowering proof)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        # enc-dec (seamless) compiles slowest on CPU-XLA; schedule it last so
+        # the rest of the table lands early
+        order = [a for a in registry.ARCH_NAMES if a != "seamless_m4t_large_v2"]
+        order.append("seamless_m4t_large_v2")
+        for arch in order:
+            for shape in SHAPES:
+                if os.path.exists(os.path.join(
+                        args.out, f"{arch}__{shape}__"
+                        f"{'multi' if args.multi_pod else 'single'}__{args.mode}.json")):
+                    continue  # resumable batch
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        try:
+            run_cell(arch, shape, multi_pod=args.multi_pod, mode=args.mode,
+                     theta=args.theta, out_dir=args.out,
+                     skip_cost=args.skip_cost)
+        except Exception:
+            failures += 1
+            print(f"[dryrun] {arch} x {shape} FAILED:")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Serving CLI: batched generation on a local or production mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --reduced
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_local_mesh
+from repro.models import registry
+from repro.serve import Engine, ServeConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b", choices=registry.ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = registry.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_local_mesh()
+    with jax.set_mesh(mesh):
+        engine = Engine(model, params, ServeConfig(
+            max_seq=args.prompt_len + args.new_tokens + 8,
+            batch=args.batch, temperature=args.temperature))
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+            cfg.vocab_size, jnp.int32)
+        out = engine.generate(prompts, args.new_tokens)
+    print(out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

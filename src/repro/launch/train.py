@@ -1,0 +1,124 @@
+"""Training CLI.
+
+Examples (CPU-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2_2b --reduced \\
+      --steps 50 --batch 8 --seq 128 --mode compressed_dp --theta 0.7
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm_1_3b --reduced \\
+      --steps 20 --ckpt-dir /tmp/ckpt
+
+On a real fleet the same entrypoint runs under the production mesh
+(--mesh production[:multi_pod]); on CPU it builds a mesh over however many
+host devices exist.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.comms.reducers import ReducerConfig
+from repro.core import schedules as theta_schedules
+from repro.data import SyntheticConfig, SyntheticStream
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import registry
+from repro.optim import OptConfig, lr_schedules
+from repro.train import TrainLoopConfig, init_state, train_loop
+from repro.train.step import StepConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_2b", choices=registry.ARCH_NAMES)
+    ap.add_argument("--reduced", action="store_true", help="smoke-size config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mode", default="pjit",
+                    choices=["pjit", "compressed_dp", "hierarchical"])
+    ap.add_argument("--reducer", default="fft",
+                    choices=["fft", "timedomain", "terngrad", "qsgd", "dense"])
+    ap.add_argument("--theta", type=float, default=0.7)
+    ap.add_argument("--theta-schedule", default="constant",
+                    choices=["constant", "step", "thm35"])
+    ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = registry.build(cfg)
+
+    if args.mesh == "local":
+        mesh = make_local_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi_pod")
+
+    reducer = None
+    if args.mode != "pjit":
+        reducer = ReducerConfig(
+            kind=args.reducer if args.mode == "compressed_dp" else "hierarchical",
+            axis="data",
+            pod_axis="pod" if "pod" in mesh.axis_names else None,
+            theta=args.theta,
+            error_feedback=args.error_feedback,
+        )
+    step_cfg = StepConfig(
+        mode=args.mode,
+        multi_pod="pod" in mesh.axis_names,
+        reducer=reducer,
+    )
+    opt_cfg = OptConfig(kind="adamw", lr=args.lr)
+
+    stream = SyntheticStream(SyntheticConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        frontend_dim=cfg.d_model if cfg.frontend != "none" else 0,
+        frontend_len=(args.seq if cfg.frontend == "audio_frames"
+                      else cfg.n_frontend_tokens),
+        seed=args.seed,
+    ))
+
+    theta_sched = None
+    if args.mode != "pjit":
+        if args.theta_schedule == "constant":
+            theta_sched = theta_schedules.constant(args.theta)
+        elif args.theta_schedule == "step":
+            theta_sched = theta_schedules.step_decay(
+                [(0, args.theta), (args.steps // 2, 0.0)])
+        else:
+            theta_sched = theta_schedules.thm35_schedule(
+                1.0, lambda s: args.lr * lr_schedules.rsqrt_decay()(s))
+
+    state = init_state(jax.random.PRNGKey(args.seed), model, opt_cfg,
+                       error_feedback=args.error_feedback)
+    if args.error_feedback:
+        # per-worker residual rows over the manual axes
+        import jax.numpy as jnp
+        w = 1
+        for ax in step_cfg.manual_axes:
+            w *= dict(mesh.shape)[ax]
+        n = state["residual"].shape[0]
+        state["residual"] = jnp.zeros((w, n), jnp.float32)
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        log_every=max(1, args.steps // 20),
+        theta_schedule=theta_sched,
+        lr_schedule=lr_schedules.warmup_cosine(max(2, args.steps // 10), args.steps),
+    )
+    with jax.set_mesh(mesh):
+        result = train_loop(model, opt_cfg, step_cfg, mesh, state, stream, loop_cfg)
+    for row in result["history"]:
+        print({k: (round(v, 4) if isinstance(v, float) else v) for k, v in row.items()})
+    return result
+
+
+if __name__ == "__main__":
+    main()

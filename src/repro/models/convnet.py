@@ -1,0 +1,104 @@
+"""Paper-era convnet (ResNet-32/CIFAR class) for the faithful convergence
+experiments (paper Fig. 11/12 trained AlexNet/VGG16/ResNet32 — the gradient
+compressor is architecture-agnostic, so the paper's own model family is
+reproduced with a compact residual CNN on synthetic 32x32 images).
+
+Pure-JAX: lax.conv + batch-stat-free norm (groupnorm-ish) + residual blocks.
+Used by benchmarks/convergence.py and tests; trains on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ParamSpec
+
+__all__ = ["ConvConfig", "ConvNet"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    n_classes: int = 10
+    widths: Tuple[int, ...] = (16, 32, 64)
+    blocks_per_stage: int = 2  # resnet-32 analog: deeper if desired
+    img_size: int = 32
+
+
+def _conv_spec(cin, cout, k=3):
+    return ParamSpec((k, k, cin, cout), (None, None, None, "ff"),
+                     scale=(2.0 / (k * k * cin)) ** 0.5)
+
+
+def _conv(params, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, params, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _norm(x, eps=1e-5):
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+class ConvNet:
+    def __init__(self, cfg: ConvConfig = ConvConfig()):
+        self.cfg = cfg
+
+    def spec(self):
+        cfg = self.cfg
+        spec = {"stem": _conv_spec(3, cfg.widths[0])}
+        cin = cfg.widths[0]
+        for s, w in enumerate(cfg.widths):
+            for b in range(cfg.blocks_per_stage):
+                spec[f"s{s}b{b}_c1"] = _conv_spec(cin if b == 0 else w, w)
+                spec[f"s{s}b{b}_c2"] = _conv_spec(w, w)
+                if b == 0 and cin != w:
+                    spec[f"s{s}b{b}_proj"] = _conv_spec(cin, w, k=1)
+            cin = w
+        spec["head"] = ParamSpec((cfg.widths[-1], cfg.n_classes), ("embed", None))
+        return spec
+
+    def init(self, key):
+        from repro.models.sharding import init_params
+
+        return init_params(key, self.spec())
+
+    def forward(self, params, images):
+        cfg = self.cfg
+        x = _conv(params["stem"], images)
+        for s, w in enumerate(cfg.widths):
+            for b in range(cfg.blocks_per_stage):
+                stride = 2 if (b == 0 and s > 0) else 1
+                h = jax.nn.relu(_norm(_conv(params[f"s{s}b{b}_c1"], x, stride)))
+                h = _norm(_conv(params[f"s{s}b{b}_c2"], h))
+                skip = x
+                if f"s{s}b{b}_proj" in params:
+                    skip = _conv(params[f"s{s}b{b}_proj"], x, stride)
+                elif stride != 1:
+                    skip = x[:, ::2, ::2]
+                x = jax.nn.relu(h + skip)
+        x = jnp.mean(x, axis=(1, 2))
+        return x @ params["head"]
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["images"])
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+        return jnp.mean(ce), {"acc": jnp.mean(
+            (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))}
+
+
+def synthetic_image_batch(key, cfg: ConvConfig, batch: int):
+    """Learnable synthetic task: class-conditional gaussian blobs + noise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (batch,), 0, cfg.n_classes)
+    protos = jax.random.normal(
+        jax.random.PRNGKey(7), (cfg.n_classes, cfg.img_size, cfg.img_size, 3))
+    images = protos[labels] + 0.5 * jax.random.normal(
+        k2, (batch, cfg.img_size, cfg.img_size, 3))
+    return {"images": images, "labels": labels}

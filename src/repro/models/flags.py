@@ -1,0 +1,39 @@
+"""Global lowering flags (set by launch/dryrun.py in its own process).
+
+``UNROLL_INNER`` — when True, the inner loops (flash-attention tiles, chunked
+CE, MoE token groups, SSM sequence chunks) lower as straight-line HLO instead
+of ``lax.scan``: XLA's cost_analysis visits a while body once regardless of
+trip count, so the dry-run's depth-1/depth-2 cost samples must be scan-free to
+count FLOPs/bytes/collectives correctly.  Production lowering keeps scans
+(compact HLO, fast compiles).
+
+The per-timestep mLSTM/sLSTM recurrences are exempt (unrolling 4096 steps is
+not viable); the dry-run adds their analytic per-step FLOPs instead
+(launch/dryrun.py::_recurrent_correction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNROLL_INNER = False
+
+
+def scan_inner(body, carry, xs, length=None):
+    """lax.scan unless UNROLL_INNER — then an unrolled python loop."""
+    if not UNROLL_INNER:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length
+    if n is None:
+        n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else jax.tree_util.tree_map(lambda l: l[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys

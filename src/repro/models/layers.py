@@ -1,0 +1,143 @@
+"""Shared neural layers: norms, MLPs, embeddings, RoPE, softcap.
+
+Convention: params are nested dicts of arrays; every function takes the param
+subtree as its first argument.  Activations flow in ``compute_dtype``
+(bf16 by default), params are stored f32 and cast at use (mixed precision);
+reductions (norms, softmax, loss) run in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ParamSpec
+
+__all__ = [
+    "COMPUTE_DTYPE",
+    "rmsnorm_spec",
+    "rmsnorm",
+    "mlp_spec",
+    "mlp",
+    "embedding_spec",
+    "embed",
+    "unembed",
+    "rope",
+    "softcap",
+]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """gemma2-style logit soft capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int) -> dict:
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU / ReLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, f: int, activation: str = "swiglu") -> dict:
+    spec = {
+        "up": ParamSpec((d, f), ("embed", "ff")),
+        "down": ParamSpec((f, d), ("ff", "embed")),
+    }
+    if activation in ("swiglu", "geglu"):
+        spec["gate"] = ParamSpec((d, f), ("embed", "ff"))
+    return spec
+
+
+def mlp(params: dict, x: jnp.ndarray, activation: str = "swiglu") -> jnp.ndarray:
+    dt = x.dtype
+    up = x @ params["up"].astype(dt)
+    if activation == "swiglu":
+        gate = x @ params["gate"].astype(dt)
+        h = jax.nn.silu(gate) * up
+    elif activation == "geglu":
+        gate = x @ params["gate"].astype(dt)
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif activation == "relu":
+        h = jax.nn.relu(up)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return h @ params["down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def padded_vocab(vocab: int, multiple: int = 128) -> int:
+    """Megatron-style vocab padding so the vocab axis shards over the model
+    axis (seamless 256206 and hymba 32001 are otherwise indivisible)."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def embedding_spec(vocab: int, d: int, tie: bool) -> dict:
+    vp = padded_vocab(vocab)
+    spec = {"table": ParamSpec((vp, d), ("vocab", "embed"))}
+    if not tie:
+        spec["head"] = ParamSpec((d, vp), ("embed", "vocab"))
+    return spec
+
+
+def embed(params: dict, tokens: jnp.ndarray, dtype=COMPUTE_DTYPE) -> jnp.ndarray:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jnp.ndarray, vocab: int = 0) -> jnp.ndarray:
+    """Returns f32 logits over the PADDED vocab; pad columns are masked to
+    -1e30 when the true ``vocab`` size is given (softmax then ignores them)."""
+    if "head" in params:
+        logits = (x @ params["head"].astype(x.dtype)).astype(jnp.float32)
+    else:
+        logits = (x @ params["table"].astype(x.dtype).T).astype(jnp.float32)
+    vp = logits.shape[-1]
+    if vocab and vocab < vp:
+        mask = (jnp.arange(vp) < vocab)
+        logits = jnp.where(mask, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (jnp.log(theta) / half)
+    )  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)

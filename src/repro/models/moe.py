@@ -1,0 +1,115 @@
+"""Mixture-of-Experts: GShard-style grouped one-hot dispatch (MXU-dense).
+
+Why this formulation (DESIGN.md §4): TPU wants static shapes and matmuls.
+Tokens are split into groups of ``moe_group_size`` (default 512); ALL groups
+are processed by batched einsums — the group axis ``g`` is sharded over the
+data axes (each device dispatches its own tokens) and the expert axis ``e``
+over ``model`` (expert parallelism), so the ``gsec->egcd`` dispatch einsum is
+exactly the GShard all-to-all.  Static capacity per expert per group:
+
+    C = ceil(group_size * top_k / n_experts * capacity_factor)
+
+with overflow dropped (capacity_factor 1.25 makes drops rare at balanced
+load).  Dispatch-einsum FLOPs are counted as non-useful in the roofline's
+MODEL_FLOPS/HLO_FLOPS ratio (EXPERIMENTS.md).
+
+Returns the Switch-style load-balancing aux loss alongside the output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import ParamSpec
+
+__all__ = ["moe_spec", "moe_apply", "capacity"]
+
+
+def moe_spec(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    spec = {
+        "router": ParamSpec((d, e), ("embed", "experts"), scale=0.02 / math.sqrt(d)),
+        "up": ParamSpec((e, d, f), ("experts", "embed", "ff")),
+        "down": ParamSpec((e, f, d), ("experts", "ff", "embed")),
+    }
+    if cfg.mlp_activation in ("swiglu", "geglu"):
+        spec["gate"] = ParamSpec((e, d, f), ("experts", "embed", "ff"))
+    return spec
+
+
+def capacity(cfg, group_size: Optional[int] = None) -> int:
+    sg = group_size or cfg.moe_group_size
+    c = math.ceil(sg * cfg.experts_per_token / cfg.n_experts * cfg.moe_capacity_factor)
+    return max(4, c)
+
+
+def _constrain(x, spec, ctx):
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_apply(params, x: jnp.ndarray, cfg, ctx=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    sg = min(cfg.moe_group_size, b * s)
+    cap = capacity(cfg, sg)
+    dt = x.dtype
+    batch_axes = ctx.batch if ctx is not None else None
+
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+    pad = (-t) % sg
+    tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    groups = tokens.reshape(-1, sg, d)  # (G, Sg, D)
+    groups = _constrain(groups, P(batch_axes, None, None), ctx)
+
+    # router in f32 for stable softmax
+    logits = jnp.einsum("gsd,de->gse", groups.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (G, Sg, k)
+    if cfg.router_normalize_topk:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: e * sum_e (fraction dispatched) * (mean prob)
+    onehot_e = jax.nn.one_hot(top_e, e, dtype=jnp.float32)  # (G, Sg, k, E)
+    f_e = jnp.mean(jnp.sum(onehot_e, axis=2), axis=(0, 1)) / k
+    p_e = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f_e * p_e)
+
+    # position of each (token, choice) within its expert, choice-major so
+    # primary experts claim capacity first (GShard priority semantics)
+    flat = onehot_e.transpose(0, 2, 1, 3).reshape(-1, k * sg, e)  # (G, k*Sg, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos_tok = jnp.sum(pos * flat, axis=-1).reshape(-1, k, sg).transpose(0, 2, 1)
+    within = pos_tok < cap  # (G, Sg, k)
+    onehot_c = jax.nn.one_hot(pos_tok, cap, dtype=jnp.float32) * within[..., None]
+
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot_e, onehot_c).astype(dt)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c,
+                         top_p.astype(jnp.float32)).astype(dt)
+
+    # all-to-all: (G sharded over data) x (E sharded over model)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, groups.astype(dt))
+    xe = _constrain(xe, P("model", batch_axes, None, None), ctx)
+    w_up = params["up"].astype(dt)
+    w_down = params["down"].astype(dt)
+    up = jnp.einsum("egcd,edf->egcf", xe, w_up)
+    if "gate" in params:
+        gate = jnp.einsum("egcd,edf->egcf", xe, params["gate"].astype(dt))
+        h = (jax.nn.silu(gate) if cfg.mlp_activation == "swiglu"
+             else jax.nn.gelu(gate, approximate=True)) * up
+    else:
+        h = jax.nn.relu(up)
+    ye = jnp.einsum("egcf,efd->egcd", h, w_down)
+    ye = _constrain(ye, P("model", batch_axes, None, None), ctx)
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye)  # back to token layout
+    out = y.reshape(-1, d)[: b * s].reshape(b, s, d)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,109 @@
+"""Architecture registry: name -> ArchConfig -> LM, plus input specs.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins for every model input of a
+given (arch, shape) cell — weak-type-correct, shardable, zero allocation —
+which is what the multi-pod dry-run lowers against.  ``make_batch`` produces
+small concrete batches for CPU smoke tests.
+
+Modality frontends are STUBS per the assignment: ``[audio]``/``[vlm]`` entries
+receive precomputed frame/patch embeddings of shape (B, n_frontend, d_model).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.transformer import LM
+
+__all__ = ["ARCH_NAMES", "get_config", "build", "input_specs", "make_batch",
+           "cell_is_supported"]
+
+ARCH_NAMES = [
+    "seamless_m4t_large_v2",
+    "internlm2_20b",
+    "qwen1_5_110b",
+    "gemma2_2b",
+    "phi3_medium_14b",
+    "hymba_1_5b",
+    "llama3_2_vision_11b",
+    "xlstm_1_3b",
+    "mixtral_8x22b",
+    "qwen3_moe_235b_a22b",
+]
+
+# archs with sub-quadratic / bounded-window sequence mixing run long_500k
+LONG_CONTEXT_OK = {"xlstm_1_3b", "hymba_1_5b", "gemma2_2b", "mixtral_8x22b"}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def build(cfg_or_name) -> LM:
+    cfg = get_config(cfg_or_name) if isinstance(cfg_or_name, str) else cfg_or_name
+    return LM(cfg)
+
+
+def cell_is_supported(name: str, shape: ShapeConfig) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else a skip reason (DESIGN.md §7)."""
+    if shape.name == "long_500k" and name not in LONG_CONTEXT_OK:
+        return "pure full-attention arch: 500k dense-KV decode out of scope"
+    return None
+
+
+def _frontend_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend == "audio_frames":
+        return seq_len  # encoder frames track the assigned sequence length
+    if cfg.frontend == "vision_patches":
+        return cfg.n_frontend_tokens or 1601
+    return 0
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct tree for the (train|prefill|decode) step inputs."""
+    b = shape.global_batch
+    s = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        fl = _frontend_len(cfg, s)
+        if fl:
+            specs["frontend"] = jax.ShapeDtypeStruct((b, fl, cfg.d_model), jnp.float32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        fl = _frontend_len(cfg, s)
+        if fl:
+            specs["frontend"] = jax.ShapeDtypeStruct((b, fl, cfg.d_model), jnp.float32)
+        return specs
+    # decode: one new token against caches of length seq_len
+    model = LM(cfg)
+    caches = jax.eval_shape(lambda: model.init_caches(b, s))
+    specs = {
+        "caches": caches,
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    return specs
+
+
+def make_batch(key, cfg: ArchConfig, batch: int, seq: int) -> Dict:
+    """Concrete random batch (smoke tests / examples)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+        "targets": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size, jnp.int32),
+    }
+    fl = _frontend_len(cfg, seq)
+    if fl:
+        out["frontend"] = jax.random.normal(k3, (batch, fl, cfg.d_model)) * 0.02
+    return out

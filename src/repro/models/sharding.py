@@ -1,0 +1,159 @@
+"""Logical-axis parameter sharding (MaxText-style rules).
+
+Every parameter is declared as a :class:`ParamSpec` with *logical* axis names
+(("vocab", "embed"), ("heads", "head_dim"), ...).  At mesh-bind time the rules
+map logical axes to mesh axes, with two safety valves:
+
+* divisibility — a logical axis only binds to a mesh axis whose size divides
+  the dimension; otherwise that dim is replicated (e.g. kv_heads=5 on a
+  model=16 mesh);
+* fsdp — when ``fsdp=True`` the FIRST yet-unsharded large axis of each param
+  additionally binds to the ``data`` axis (ZeRO-3-style parameter sharding;
+  required for the 110B/141B/235B configs to fit 16 GB/chip HBM).
+
+Gradient sync over the ``pod`` axis stays dense/compressed per the reducer —
+parameters are never sharded over ``pod`` (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamSpec",
+    "DEFAULT_RULES",
+    "resolve_pspec",
+    "spec_tree_to_pspecs",
+    "init_params",
+    "count_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + initializer."""
+
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; default 0.02 (normal)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (self.shape, self.logical_axes)
+
+
+# logical axis -> preferred mesh axis ("model" = tensor-parallel axis).
+# NOTE a head-count axis that cannot divide the model axis (gemma2's 8 q /
+# 4 kv heads on 16-way TP) REPLICATES rather than falling back to head_dim:
+# head_dim TP makes every score einsum all-reduce the full (q_chunk, kv_chunk)
+# tile — measured at 1.2 TB/step/device on gemma2 train_4k (EXPERIMENTS.md
+# §Perf, refuted hypothesis H-G1).  FSDP over 'data' keeps the replicated
+# weights memory-cheap.
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "xlstm_inner": "model",
+    "embed": None,  # fsdp may claim it
+    "head_dim": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+# axes eligible for FSDP claiming, in preference order (largest-dim first is
+# resolved per-param below; these are the axes allowed to carry it)
+_FSDP_ELIGIBLE = ("embed", "ff", "vocab", "heads", "experts", "ssm_inner", "xlstm_inner")
+
+
+def resolve_pspec(
+    spec: ParamSpec,
+    mesh_axis_sizes: Dict[str, int],
+    rules: Dict[str, Optional[str]] = DEFAULT_RULES,
+    fsdp: bool = False,
+    fsdp_axis: str = "data",
+) -> P:
+    """ParamSpec -> PartitionSpec under the given mesh."""
+    assignment: list = []
+    used_mesh_axes = set()
+    for dim, logical in zip(spec.shape, spec.logical_axes):
+        mesh_axis = rules.get(logical) if logical else None
+        if (
+            mesh_axis
+            and mesh_axis in mesh_axis_sizes
+            and mesh_axis not in used_mesh_axes
+            and dim % mesh_axis_sizes[mesh_axis] == 0
+        ):
+            assignment.append(mesh_axis)
+            used_mesh_axes.add(mesh_axis)
+        else:
+            assignment.append(None)
+
+    if fsdp and fsdp_axis in mesh_axis_sizes and fsdp_axis not in used_mesh_axes:
+        # claim the largest eligible unsharded dim divisible by the fsdp axis
+        best, best_dim = None, 0
+        for i, (dim, logical) in enumerate(zip(spec.shape, spec.logical_axes)):
+            if (
+                assignment[i] is None
+                and logical in _FSDP_ELIGIBLE
+                and dim % mesh_axis_sizes[fsdp_axis] == 0
+                and dim > best_dim
+            ):
+                best, best_dim = i, dim
+        if best is not None:
+            assignment[best] = fsdp_axis
+
+    return P(*assignment)
+
+
+def spec_tree_to_pspecs(spec_tree, mesh_axis_sizes, rules=DEFAULT_RULES, fsdp=False):
+    return jax.tree_util.tree_map(
+        lambda s: resolve_pspec(s, mesh_axis_sizes, rules, fsdp),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _init_one(key, spec: ParamSpec, dtype=jnp.float32):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = spec.scale if spec.scale is not None else 0.02
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def init_params(key, spec_tree, dtype=jnp.float32):
+    """Instantiate a ParamSpec tree into arrays (unique key per leaf)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, arrays)
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (no allocation) — dry-run path."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def count_params(spec_tree) -> int:
+    """Exact parameter count from the spec tree (authoritative for roofline)."""
+    leaves = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return sum(math.prod(s.shape) for s in leaves)

@@ -1,0 +1,191 @@
+"""Selective state-space (Mamba-style) mixer — the SSM half of hymba's blocks.
+
+Train/prefill path: **chunked associative scan** — the (B, S, d_inner, state)
+expanded tensor is never materialized beyond one sequence chunk
+(``seq_chunk``); chunks are walked by ``lax.scan`` carrying the (B, d_inner,
+state) hidden state, and within a chunk the recurrence
+
+    h_t = exp(delta_t * A) h_{t-1} + delta_t * B_t * x_t
+
+is a first-order linear scan solved with ``lax.associative_scan``.  Decode
+path: single-step recurrence with (conv_state, ssm_state) carried in the
+cache.
+
+The causal depthwise conv preceding the SSM is a ``lax.conv_general_dilated``
+with left padding; its (width-1)-deep tail is the conv cache at decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import scan_inner
+from repro.models.sharding import ParamSpec
+
+__all__ = ["ssm_spec", "ssm_apply", "ssm_decode_step", "init_ssm_state", "SSMState"]
+
+_DT_RANK = 16
+
+
+def ssm_spec(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    st = cfg.ssm_state
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, di), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec((di, _DT_RANK + 2 * st), ("ssm_inner", None)),
+        "dt_proj": ParamSpec((_DT_RANK, di), (None, "ssm_inner")),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec((di, st), ("ssm_inner", "state"), init="zeros"),
+        "d_skip": ParamSpec((di,), ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SSMState:
+    conv: jnp.ndarray  # (B, conv_width-1, d_inner)
+    h: jnp.ndarray  # (B, d_inner, state) f32
+
+    def tree_flatten(self):
+        return (self.conv, self.h), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_ssm_state(batch: int, cfg, dtype=jnp.bfloat16) -> SSMState:
+    di = cfg.ssm_expand * cfg.d_model
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+        h=jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _causal_conv(params, x, prefix=None):
+    """Depthwise causal conv along seq: x (B, S, di) -> (B, S, di)."""
+    w = params["conv_w"].astype(x.dtype)  # (width, di)
+    width = w.shape[0]
+    if prefix is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :],  # (width, 1, di)
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def _ssm_inner(params, xc, h0, cfg):
+    """Run the selective scan on conv'd activations xc (B, S, di).
+
+    Returns (y (B, S, di), h_final (B, di, state) f32)."""
+    st = cfg.ssm_state
+    proj = xc @ params["x_proj"].astype(xc.dtype)  # (B,S,dt_rank+2st)
+    dt_in, b_t, c_t = jnp.split(proj, [_DT_RANK, _DT_RANK + st], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ params["dt_proj"].astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,di) f32
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # (di, st)
+
+    from repro.models import flags as _flags
+    seq_chunk = min(64, xc.shape[1])
+    if _flags.UNROLL_INNER:
+        seq_chunk = min(max(64, -(-xc.shape[1] // 8)), xc.shape[1])
+    bsz, s, di = xc.shape
+    pad = (-s) % seq_chunk
+    xf = jnp.pad(xc.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    deltaf = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+    bf = jnp.pad(b_t.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    cf = jnp.pad(c_t.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+    n_chunks = xf.shape[1] // seq_chunk
+
+    def chunk_fn(h, inp):
+        xck, dk, bk, ck = inp  # (B, L, ...) for this chunk
+        da = jnp.exp(dk[..., None] * a)  # (B, L, di, st)
+        dbx = dk[..., None] * bk[:, :, None, :] * xck[..., None]  # (B,L,di,st)
+        # prepend carry as step 0 with decay 1
+        da_all = jnp.concatenate([jnp.ones_like(da[:, :1]), da], axis=1)
+        dbx_all = jnp.concatenate([h[:, None], dbx], axis=1)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (da_all, dbx_all), axis=1)
+        hs = hs[:, 1:]  # (B, L, di, st)
+        yk = jnp.sum(hs * ck[:, :, None, :], axis=-1)  # (B, L, di)
+        return hs[:, -1], yk
+
+    xck = xf.reshape(bsz, n_chunks, seq_chunk, di).transpose(1, 0, 2, 3)
+    dk = deltaf.reshape(bsz, n_chunks, seq_chunk, di).transpose(1, 0, 2, 3)
+    bk = bf.reshape(bsz, n_chunks, seq_chunk, st).transpose(1, 0, 2, 3)
+    ck = cf.reshape(bsz, n_chunks, seq_chunk, st).transpose(1, 0, 2, 3)
+    h_final, ys = scan_inner(chunk_fn, h0, (xck, dk, bk, ck))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, n_chunks * seq_chunk, di)[:, :s]
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    return y.astype(xc.dtype), h_final
+
+
+def ssm_apply(params, x: jnp.ndarray, cfg, state: SSMState = None):
+    """Full-sequence mixer: x (B, S, D) -> (y (B, S, D), final SSMState)."""
+    dt = x.dtype
+    xz = x @ params["in_proj"].astype(dt)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    prefix = state.conv if state is not None else None
+    xc = jax.nn.silu(_causal_conv(params, xs, prefix))
+    h0 = (
+        state.h
+        if state is not None
+        else jnp.zeros((x.shape[0], xs.shape[-1], cfg.ssm_state), jnp.float32)
+    )
+    y, h_final = _ssm_inner(params, xc, h0, cfg)
+    out = (y * jax.nn.silu(z)) @ params["out_proj"].astype(dt)
+    width = cfg.ssm_conv_width
+    # carry the last (width-1) of [prefix ++ xs]: robust to S < width-1
+    hist = xs if prefix is None else jnp.concatenate([prefix.astype(xs.dtype), xs], axis=1)
+    new_state = SSMState(conv=hist[:, hist.shape[1] - (width - 1):].astype(jnp.bfloat16), h=h_final)
+    return out, new_state
+
+
+def ssm_decode_step(params, x: jnp.ndarray, cfg, state: SSMState):
+    """One-token step: x (B, 1, D) -> (y (B, 1, D), state')."""
+    dt = x.dtype
+    xz = x @ params["in_proj"].astype(dt)
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B, 1, di)
+    conv_in = jnp.concatenate([state.conv.astype(dt), xs], axis=1)  # (B, w, di)
+    w = params["conv_w"].astype(dt)
+    xc = jax.nn.silu(
+        jnp.sum(conv_in * w[None], axis=1, keepdims=True) + params["conv_b"].astype(dt)
+    )  # (B, 1, di)
+    st = cfg.ssm_state
+    proj = xc @ params["x_proj"].astype(dt)
+    dt_in, b_t, c_t = jnp.split(proj, [_DT_RANK, _DT_RANK + st], axis=-1)
+    delta = jax.nn.softplus(
+        dt_in.astype(jnp.float32) @ params["dt_proj"].astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )[:, 0]  # (B, di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = jnp.exp(delta[..., None] * a)  # (B, di, st)
+    dbx = delta[..., None] * b_t.astype(jnp.float32)[:, 0, None, :] * xc.astype(jnp.float32)[:, 0, :, None]
+    h = da * state.h + dbx
+    y = jnp.sum(h * c_t.astype(jnp.float32)[:, 0, None, :], axis=-1)  # (B, di)
+    y = y + xc.astype(jnp.float32)[:, 0] * params["d_skip"].astype(jnp.float32)
+    out = (y[:, None].astype(dt) * jax.nn.silu(z)) @ params["out_proj"].astype(dt)
+    new_state = SSMState(conv=conv_in[:, 1:].astype(jnp.bfloat16), h=h)
+    return out, new_state

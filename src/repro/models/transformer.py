@@ -1,0 +1,603 @@
+"""Model assembly: layer-kind registry + scan-over-groups stacks + LM API.
+
+Every assigned architecture is a sequence of *layer kinds* (ArchConfig
+.layer_pattern()) repeated ``n_groups`` times.  Parameters for the repeating
+group are **stacked** on a leading "layers" axis and the stack is walked with
+``jax.lax.scan`` — HLO size and compile time are depth-independent (a 94-layer
+qwen3 compiles the same graph as a 2-layer smoke model).  Heterogeneous
+patterns (gemma2 [local, global], llama-vision [self x4, cross], xlstm
+[mLSTM x7, sLSTM]) simply make the scanned group hold several kinds.
+
+Three execution paths share the same parameters:
+  * train/teacher-forced full-sequence forward (no caches),
+  * prefill (full-sequence + emit caches, stacked per group),
+  * decode_step (one token, caches threaded through the scan).
+
+Activation sharding constraints are applied when a :class:`MeshCtx` is given
+(inside pjit with an ambient mesh); smoke tests pass ``mesh_ctx=None``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    embed,
+    embedding_spec,
+    mlp,
+    mlp_spec,
+    rmsnorm,
+    rmsnorm_spec,
+    softcap,
+    unembed,
+)
+from repro.models.flags import scan_inner
+from repro.models.sharding import ParamSpec
+
+__all__ = ["LM", "MeshCtx"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCtx:
+    """Activation-sharding axes (None = no constraints, e.g. CPU smoke)."""
+
+    batch: Tuple[str, ...] = ("data",)
+    model: Optional[str] = "model"  # None on pure-DP meshes
+    model_size: int = 16
+    seq: Optional[str] = None  # long_500k: shard sequence instead of batch
+
+
+def _constrain_bsd(x, ctx: Optional[MeshCtx]):
+    """Interior (within-layer) constraint: batch over data, seq REPLICATED
+    over model — attention/MLP internals stay free of seq-sharding (letting
+    seq-sharding propagate into the flash tile scans was measured at 51k
+    all-gathers / 6.6 TB/step on qwen1.5 train_4k; §Perf B1, first attempt)."""
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(ctx.batch, ctx.seq, None))
+
+
+def _constrain_stream(x, ctx: Optional[MeshCtx]):
+    """BOUNDARY (stored-carry) constraint — sequence parallelism (§Perf B1).
+
+    The (B,S,D) stream the layer scan CARRIES (and remat therefore stores,
+    n_groups copies of it) is sharded over the model axis on the sequence
+    dim: qwen1.5 train_4k stored-input memory 62 GiB -> 3.9 GiB/device.  One
+    allgather at group entry + one scatter at exit (Megatron-SP g/g-bar at
+    group granularity)."""
+    if ctx is None:
+        return x
+    seq_axes = ctx.seq
+    if (seq_axes is None and ctx.model and x.ndim == 3
+            and x.shape[1] % max(ctx.model_size, 1) == 0 and x.shape[1] > 1):
+        seq_axes = ctx.model
+    return jax.lax.with_sharding_constraint(x, P(ctx.batch, seq_axes, None))
+
+
+def _constrain_cache(cache, ctx: Optional[MeshCtx], kv_heads_ok: bool):
+    if ctx is None:
+        return cache
+    spec = P(ctx.batch, ctx.seq, ctx.model if kv_heads_ok else None, None)
+    k = jax.lax.with_sharding_constraint(cache.k, spec)
+    v = jax.lax.with_sharding_constraint(cache.v, spec)
+    return A.KVCache(k, v, cache.pos, cache.ring)
+
+
+# ---------------------------------------------------------------------------
+# layer kinds
+# ---------------------------------------------------------------------------
+
+
+def _attn_window(cfg, kind: str) -> int:
+    return cfg.sliding_window if "local" in kind else 0
+
+
+def _layer_spec(cfg, kind: str) -> dict:
+    d = cfg.d_model
+    spec: Dict[str, Any] = {"norm1": rmsnorm_spec(d)}
+    if kind.startswith("attn") or kind == "hybrid":
+        spec["attn"] = A.attention_spec(cfg)
+    if kind.startswith("cross_attn"):
+        spec["cross"] = A.attention_spec(cfg, cross=True)
+        spec["cross_gate"] = ParamSpec((1,), (None,), init="zeros")
+    if kind == "dec_cross_mlp":
+        spec["attn"] = A.attention_spec(cfg)
+        spec["cross"] = A.attention_spec(cfg, cross=True)
+        spec["norm_cross"] = rmsnorm_spec(d)
+    if kind == "hybrid":
+        spec["ssm"] = S.ssm_spec(cfg)
+        spec["norm_attn_out"] = rmsnorm_spec(d)
+        spec["norm_ssm_out"] = rmsnorm_spec(d)
+    if kind == "mlstm":
+        return {"norm1": rmsnorm_spec(d), "cell": X.mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"norm1": rmsnorm_spec(d), "cell": X.slstm_spec(cfg)}
+    # mlp half
+    if kind.endswith("moe"):
+        spec["norm2"] = rmsnorm_spec(d)
+        spec["moe"] = M.moe_spec(cfg)
+    elif kind.endswith("mlp"):
+        spec["norm2"] = rmsnorm_spec(d)
+        spec["mlp"] = mlp_spec(d, cfg.d_ff, cfg.mlp_activation)
+    return spec
+
+
+def _self_attention_full(p, x, cfg, positions, window, cache, ctx):
+    """Full-sequence self attention; returns (out, new_cache_or_None)."""
+    q, k, v = A.project_qkv(
+        p, x, x, q_positions=positions, kv_positions=positions,
+        rope_theta=cfg.rope_theta,
+    )
+    new_cache = None
+    if cache is not None:
+        new_cache = A.update_kv_cache(cache, k, v, jnp.int32(0))
+        new_cache = _constrain_cache(new_cache, ctx, cfg.n_kv_heads % 8 == 0)
+    out = A.flash_attention(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        causal=True, window=window, attn_softcap=cfg.attn_softcap,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+    )
+    return A.attend(p, out), new_cache
+
+
+def _self_attention_decode(p, x, cfg, pos, window, cache, ctx):
+    q, k, v = A.project_qkv(
+        p, x, x, q_positions=pos[None], kv_positions=pos[None],
+        rope_theta=cfg.rope_theta,
+    )
+    cache = A.update_kv_cache(cache, k, v, pos)
+    out = A.flash_attention(
+        q, cache.k, cache.v, q_positions=pos[None], kv_positions=cache.pos,
+        causal=True, window=window, attn_softcap=cfg.attn_softcap,
+        q_chunk=1, kv_chunk=min(4096, cache.k.shape[1]),
+    )
+    return A.attend(p, out), cache
+
+
+def _cross_attention(p, x, memory, cfg, cross_cache=None):
+    """Cross attention; memory (B, Sm, D) or cached K/V."""
+    if cross_cache is not None:
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        b, sq, h, dh = q.shape
+        kh = cross_cache.k.shape[2]
+        q = q.reshape(b, sq, kh, h // kh, dh)
+        k, v = cross_cache.k, cross_cache.v
+        kv_pos = cross_cache.pos
+    else:
+        q, k, v = A.project_qkv(p, x, memory)  # no rope on cross
+        kv_pos = jnp.arange(k.shape[1])
+    out = A.flash_attention(
+        q, k, v,
+        q_positions=jnp.zeros((q.shape[1],), jnp.int32),
+        kv_positions=kv_pos, causal=False,
+        attn_softcap=0.0,
+    )
+    return A.attend(p, out)
+
+
+# ---------------------------------------------------------------------------
+# single-layer application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer_full(kind, p, x, cfg, positions, memory, ctx, cache=None):
+    """Returns (x, aux, new_cache)."""
+    window = _attn_window(cfg, kind)
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+
+    if kind == "mlstm":
+        out, new_state = X.mlstm_apply(p["cell"], h, cfg, cache)
+        return x + out, aux, new_state
+    if kind == "slstm":
+        out, new_state = X.slstm_apply(p["cell"], h, cfg, cache)
+        return x + out, aux, new_state
+
+    if kind == "hybrid":
+        kv_cache = cache[0] if cache is not None else None
+        attn_out, new_kv = _self_attention_full(p["attn"], h, cfg, positions, window, kv_cache, ctx)
+        ssm_out, new_ssm = S.ssm_apply(p["ssm"], h, cfg, cache[1] if cache is not None else None)
+        fused = 0.5 * (
+            rmsnorm(p["norm_attn_out"], attn_out, cfg.norm_eps)
+            + rmsnorm(p["norm_ssm_out"], ssm_out, cfg.norm_eps)
+        )
+        x = x + fused
+        new_cache = (new_kv, new_ssm) if cache is not None else None
+    elif kind == "dec_cross_mlp":
+        attn_out, new_self = _self_attention_full(p["attn"], h, cfg, positions, window, cache[0] if cache is not None else None, ctx)
+        x = x + attn_out
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        cross_cache = cache[1] if cache is not None else None
+        x = x + _cross_attention(p["cross"], hc, memory, cfg, None)
+        if cache is not None:
+            # cache cross K/V once (memory is static through decode)
+            _, ck, cv = A.project_qkv(p["cross"], hc, memory)
+            new_cross = A.KVCache(ck, cv, jnp.arange(ck.shape[1], dtype=jnp.int32), False)
+            new_cache = (new_self, new_cross)
+        else:
+            new_cache = None
+    elif kind.startswith("cross_attn"):
+        gate = jnp.tanh(p["cross_gate"].astype(jnp.float32))[0]
+        x = x + gate.astype(x.dtype) * _cross_attention(p["cross"], h, memory, cfg)
+        if cache is not None:
+            _, ck, cv = A.project_qkv(p["cross"], h, memory)
+            new_cache = A.KVCache(ck, cv, jnp.arange(ck.shape[1], dtype=jnp.int32), False)
+        else:
+            new_cache = None
+    else:  # attn_*
+        attn_out, new_cache = _self_attention_full(p["attn"], h, cfg, positions, window, cache, ctx)
+        x = x + attn_out
+
+    x = _constrain_bsd(x, ctx)
+    if "moe" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        moe_out, aux = M.moe_apply(p["moe"], h2, cfg, ctx)
+        x = x + moe_out
+    elif "mlp" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.mlp_activation)
+    return _constrain_bsd(x, ctx), aux, new_cache
+
+
+def _apply_layer_decode(kind, p, x, cfg, pos, ctx, cache):
+    """One-token step. Returns (x, new_cache)."""
+    window = _attn_window(cfg, kind)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+
+    if kind == "mlstm":
+        out, new_state = X.mlstm_decode_step(p["cell"], h, cfg, cache)
+        return x + out, new_state
+    if kind == "slstm":
+        out, new_state = X.slstm_decode_step(p["cell"], h, cfg, cache)
+        return x + out, new_state
+
+    if kind == "hybrid":
+        attn_out, new_kv = _self_attention_decode(p["attn"], h, cfg, pos, window, cache[0], ctx)
+        ssm_out, new_ssm = S.ssm_decode_step(p["ssm"], h, cfg, cache[1])
+        fused = 0.5 * (
+            rmsnorm(p["norm_attn_out"], attn_out, cfg.norm_eps)
+            + rmsnorm(p["norm_ssm_out"], ssm_out, cfg.norm_eps)
+        )
+        x = x + fused
+        new_cache = (new_kv, new_ssm)
+    elif kind == "dec_cross_mlp":
+        attn_out, new_self = _self_attention_decode(p["attn"], h, cfg, pos, window, cache[0], ctx)
+        x = x + attn_out
+        hc = rmsnorm(p["norm_cross"], x, cfg.norm_eps)
+        x = x + _cross_attention(p["cross"], hc, None, cfg, cross_cache=cache[1])
+        new_cache = (new_self, cache[1])
+    elif kind.startswith("cross_attn"):
+        gate = jnp.tanh(p["cross_gate"].astype(jnp.float32))[0]
+        x = x + gate.astype(x.dtype) * _cross_attention(p["cross"], h, None, cfg, cross_cache=cache)
+        new_cache = cache
+    else:
+        attn_out, new_cache = _self_attention_decode(p["attn"], h, cfg, pos, window, cache, ctx)
+        x = x + attn_out
+
+    if "moe" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        moe_out, _ = M.moe_apply(p["moe"], h2, cfg, ctx)
+        x = x + moe_out
+    elif "mlp" in p:
+        h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h2, cfg.mlp_activation)
+    return x, new_cache
+
+
+def _init_layer_cache(kind, cfg, batch, max_seq, dtype=COMPUTE_DTYPE):
+    window = _attn_window(cfg, kind)
+    kv = lambda w: A.init_kv_cache(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, window=w, dtype=dtype)
+    if kind == "mlstm":
+        return X.init_mlstm_state(batch, cfg, dtype)
+    if kind == "slstm":
+        return X.init_slstm_state(batch, cfg, dtype)
+    if kind == "hybrid":
+        return (kv(window), S.init_ssm_state(batch, cfg, dtype))
+    if kind == "dec_cross_mlp":
+        mem = cfg.n_frontend_tokens or max_seq
+        cross = A.KVCache(
+            jnp.zeros((batch, mem, cfg.n_kv_heads, cfg.head_dim), dtype),
+            jnp.zeros((batch, mem, cfg.n_kv_heads, cfg.head_dim), dtype),
+            jnp.arange(mem, dtype=jnp.int32), False,
+        )
+        return (kv(window), cross)
+    if kind.startswith("cross_attn"):
+        mem = cfg.n_frontend_tokens or max_seq
+        return A.KVCache(
+            jnp.zeros((batch, mem, cfg.n_kv_heads, cfg.head_dim), dtype),
+            jnp.zeros((batch, mem, cfg.n_kv_heads, cfg.head_dim), dtype),
+            jnp.arange(mem, dtype=jnp.int32), False,
+        )
+    return kv(window)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+
+def _chunked_ce(params, hidden, targets, cfg):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks of ``ce_chunk`` positions; each chunk unembeds
+    (B, c, D) -> (B, c, V) f32, softmaxes, gathers the target, and is
+    checkpointed so backward recomputes the chunk instead of storing log-probs.
+    Working set drops from O(S*V) to O(ce_chunk*V) per device — this is what
+    keeps the train_4k cells inside 16 GB HBM at 152k-256k vocabs.
+    """
+    from repro.models import flags as _flags
+    b, s, d = hidden.shape
+    chunk = min(cfg.ce_chunk, s)
+    if _flags.UNROLL_INNER:
+        chunk = min(max(chunk, -(-s // 16)), s)
+    pad = (-s) % chunk
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    tp = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = hp.shape[1] // chunk
+    hp = hp.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    tp = tp.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        h_c, t_c = inp
+        logits = softcap(unembed(params["embed"], h_c, cfg.vocab_size),
+                         cfg.final_softcap)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        valid = t_c >= 0
+        ce = -jnp.take_along_axis(logp, jnp.maximum(t_c, 0)[..., None], axis=-1)[..., 0]
+        ce = jnp.where(valid, ce, 0.0)
+        return (carry[0] + jnp.sum(ce), carry[1] + jnp.sum(valid)), None
+
+    (total, count), _ = scan_inner(
+        chunk_loss, (jnp.zeros(()), jnp.zeros(())), (hp, tp)
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the LM
+# ---------------------------------------------------------------------------
+
+
+def _stack_spec(spec_tree, n: int):
+    """Add a leading stacked 'layers' axis to every ParamSpec."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.logical_axes, s.init, s.scale),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _scan_groups(body, carry, xs, n: int, *, scan: bool):
+    """lax.scan over the group stack, or an unrolled python loop.
+
+    The unrolled path exists for the dry-run's cost sampling: XLA's
+    cost_analysis visits a while-loop body ONCE regardless of trip count, so
+    depth-cost sampling needs straight-line HLO (launch/dryrun.py).
+    """
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for g in range(n):
+        x_g = jax.tree_util.tree_map(lambda leaf: leaf[g], xs)
+        carry, y = body(carry, x_g)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+class LM:
+    """A language model (decoder-only, enc-dec, vlm, ssm, hybrid, moe)."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.pattern = cfg.layer_pattern()
+        self.n_groups = cfg.n_groups()
+
+    # -- parameters ---------------------------------------------------------
+    def spec(self) -> dict:
+        cfg = self.cfg
+        group = {
+            f"l{i}_{kind}": _layer_spec(cfg, kind)
+            for i, kind in enumerate(self.pattern)
+        }
+        out = {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+            "layers": _stack_spec(group, self.n_groups),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+        if cfg.n_encoder_layers:
+            enc_layer = {
+                "norm1": rmsnorm_spec(cfg.d_model),
+                "attn": A.attention_spec(cfg),
+                "norm2": rmsnorm_spec(cfg.d_model),
+                "mlp": mlp_spec(cfg.d_model, cfg.d_ff, cfg.mlp_activation),
+            }
+            out["encoder"] = _stack_spec(enc_layer, cfg.n_encoder_layers)
+            out["encoder_norm"] = rmsnorm_spec(cfg.d_model)
+        return out
+
+    def init(self, key, dtype=jnp.float32):
+        from repro.models.sharding import init_params
+
+        return init_params(key, self.spec(), dtype)
+
+    # -- encoder (enc-dec only) ---------------------------------------------
+    def encode(self, params, frames: jnp.ndarray, ctx: Optional[MeshCtx] = None):
+        """frames: (B, S_enc, D) precomputed frontend embeddings (stub)."""
+        cfg = self.cfg
+        x = frames.astype(COMPUTE_DTYPE)
+        positions = jnp.arange(x.shape[1])
+
+        def body(x, p):
+            h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+            q, k, v = A.project_qkv(p["attn"], h, h, q_positions=positions,
+                                    kv_positions=positions, rope_theta=cfg.rope_theta)
+            out = A.flash_attention(q, k, v, q_positions=positions,
+                                    kv_positions=positions, causal=False)
+            x = x + A.attend(p["attn"], out)
+            h2 = rmsnorm(p["norm2"], x, cfg.norm_eps)
+            x = x + mlp(p["mlp"], h2, cfg.mlp_activation)
+            return _constrain_stream(x, ctx), None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = _scan_groups(body, x, params["encoder"],
+                            cfg.n_encoder_layers, scan=cfg.scan_layers)
+        return rmsnorm(params["encoder_norm"], x, cfg.norm_eps)
+
+    # -- full-sequence forward (train) --------------------------------------
+    def forward(self, params, tokens, *, memory=None, ctx: Optional[MeshCtx] = None,
+                return_hidden: bool = False):
+        """tokens (B,S) -> logits (B,S,V) f32; returns (logits, aux_loss).
+
+        ``return_hidden`` skips the unembed and returns the final hidden
+        states instead — the chunked-CE loss owns the unembed then (the
+        (B,S,V) f32 logits tensor never materializes; see ``_chunked_ce``)."""
+        cfg = self.cfg
+        x = embed(params["embed"], tokens)
+        x = _constrain_stream(x, ctx)
+        positions = jnp.arange(tokens.shape[1])
+
+        def body(carry, p_group):
+            x, aux = carry
+            # pin the SAVED residual to the seq-sharded form (the constraint
+            # on the raw input is what the remat residual buffer inherits),
+            # THEN gather for the interior compute
+            x = _constrain_stream(x, ctx)
+            x = _constrain_bsd(x, ctx)
+            for i, kind in enumerate(self.pattern):
+                x, a, _ = _apply_layer_full(
+                    kind, p_group[f"l{i}_{kind}"], x, cfg, positions, memory, ctx
+                )
+                aux = aux + a
+            return (_constrain_stream(x, ctx), aux), None
+
+        if cfg.remat != "none":
+            # prevent_cse=False: safe under scan and avoids the duplicated
+            # carry copy the CSE barrier otherwise forces (measured 2 GiB x
+            # n_groups on qwen1.5 train_4k; §Perf B1)
+            body = jax.checkpoint(
+                body,
+                prevent_cse=False,
+                policy=None if cfg.remat == "full"
+                else jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        (x, aux), _ = _scan_groups(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"],
+            self.n_groups, scan=cfg.scan_layers,
+        )
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if return_hidden:
+            return x, aux / max(cfg.n_layers, 1)
+        logits = unembed(params["embed"], x, cfg.vocab_size)[..., : cfg.vocab_size]
+        logits = softcap(logits, cfg.final_softcap)
+        return logits, aux / max(cfg.n_layers, 1)
+
+    # -- prefill -------------------------------------------------------------
+    def init_caches(self, batch: int, max_seq: int, dtype=COMPUTE_DTYPE):
+        """Stacked caches: each leaf has leading n_groups axis."""
+        per_group = {
+            f"l{i}_{kind}": _init_layer_cache(kind, self.cfg, batch, max_seq, dtype)
+            for i, kind in enumerate(self.pattern)
+        }
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.broadcast_to(leaf[None], (self.n_groups,) + leaf.shape).copy()
+            if hasattr(leaf, "shape") else leaf,
+            per_group,
+        )
+
+    def prefill(self, params, tokens, *, memory=None, ctx: Optional[MeshCtx] = None,
+                max_seq: Optional[int] = None, last_only: bool = False):
+        """Returns (logits, caches) with caches filled through S.
+
+        ``last_only`` unembeds only the final position — (B,1,V) — which is
+        what serving needs and avoids the (B,S,V) logits tensor at 32k."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        max_seq = max_seq or s
+        x = embed(params["embed"], tokens)
+        x = _constrain_stream(x, ctx)
+        positions = jnp.arange(s)
+        caches0 = self.init_caches(b, max_seq)
+
+        def body(x, scanned):
+            p_group, cache_group = scanned
+            x = _constrain_stream(x, ctx)
+            x = _constrain_bsd(x, ctx)
+            new_caches = {}
+            for i, kind in enumerate(self.pattern):
+                key = f"l{i}_{kind}"
+                x, _, new_cache = _apply_layer_full(
+                    kind, p_group[key], x, cfg, positions, memory, ctx,
+                    cache=cache_group[key],
+                )
+                new_caches[key] = new_cache
+            return _constrain_stream(x, ctx), new_caches
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, caches = _scan_groups(body, x, (params["layers"], caches0),
+                                 self.n_groups, scan=cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if last_only:
+            x = x[:, -1:]
+        logits = softcap(
+            unembed(params["embed"], x, cfg.vocab_size)[..., : cfg.vocab_size],
+            cfg.final_softcap)
+        return logits, caches
+
+    # -- decode --------------------------------------------------------------
+    def decode_step(self, params, caches, token, pos, *, ctx: Optional[MeshCtx] = None):
+        """token (B,1) int32, pos scalar int32 -> (logits (B,1,V), caches')."""
+        cfg = self.cfg
+        x = embed(params["embed"], token)
+
+        def body(x, scanned):
+            p_group, cache_group = scanned
+            new_caches = {}
+            for i, kind in enumerate(self.pattern):
+                key = f"l{i}_{kind}"
+                x, new_caches[key] = _apply_layer_decode(
+                    kind, p_group[key], x, cfg, pos, ctx, cache_group[key]
+                )
+            return x, new_caches
+
+        x, new_caches = _scan_groups(body, x, (params["layers"], caches),
+                                     self.n_groups, scan=cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = softcap(
+            unembed(params["embed"], x, cfg.vocab_size)[..., : cfg.vocab_size],
+            cfg.final_softcap)
+        return logits, new_caches
+
+    # -- loss ----------------------------------------------------------------
+    def loss(self, params, batch, *, ctx: Optional[MeshCtx] = None):
+        """batch: {tokens, targets[, frontend]} -> (loss, metrics)."""
+        cfg = self.cfg
+        memory = None
+        if cfg.n_encoder_layers:
+            memory = self.encode(params, batch["frontend"], ctx)
+        elif cfg.frontend != "none":
+            memory = batch["frontend"].astype(COMPUTE_DTYPE)
+        hidden, aux = self.forward(
+            params, batch["tokens"], memory=memory, ctx=ctx, return_hidden=True
+        )
+        loss = _chunked_ce(params, hidden, batch["targets"], cfg)
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "aux": aux}

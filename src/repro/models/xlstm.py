@@ -1,0 +1,331 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, exp gating).
+
+Implemented in the numerically *stabilized recurrent* form of the xLSTM paper
+(arXiv:2405.04517): both cells track a log-space stabilizer m_t so exponential
+input gates never overflow:
+
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    f'  = exp(log f_t + m_{t-1} - m_t),  i' = exp(log i_t - m_t)
+
+mLSTM:  C_t = f' C_{t-1} + i' v_t k_t^T ;  n_t = f' n_{t-1} + i' k_t
+        h_t = o_t * (C_t q_t) / max(|n_t . q_t|, 1)
+sLSTM:  c_t = f' c_{t-1} + i' tanh(z_t) ; n_t = f' n_{t-1} + i'
+        h_t = o_t * c_t / n_t
+
+The sequence loop is a ``lax.scan`` (the state is the whole point of the
+architecture — these cells are O(1)-state decoders, which is why xlstm-1.3b
+runs the long_500k cell).  A chunkwise-parallel mLSTM is a known optimization;
+the recurrent form is kept as the correctness baseline and the dry-run path
+(FLOP-equivalent; see DESIGN.md §Arch-applicability).
+
+x-gate precomputation: all input projections are batched matmuls over (B, S)
+OUTSIDE the scan; only the recurrent term rides the carry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import scan_inner
+from repro.models.layers import rmsnorm, rmsnorm_spec
+from repro.models.sharding import ParamSpec
+
+__all__ = [
+    "mlstm_spec", "mlstm_apply", "mlstm_decode_step", "init_mlstm_state",
+    "slstm_spec", "slstm_apply", "slstm_decode_step", "init_slstm_state",
+    "MLSTMState", "SLSTMState",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _di(cfg) -> int:
+    return int(cfg.xlstm_proj_factor * cfg.d_model)
+
+
+def mlstm_spec(cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    di = _di(cfg)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "xlstm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv_width, di), ("conv", "xlstm_inner")),
+        "conv_b": ParamSpec((di,), ("xlstm_inner",), init="zeros"),
+        "wq": ParamSpec((di, di), ("xlstm_inner", None)),
+        "wk": ParamSpec((di, di), ("xlstm_inner", None)),
+        "wv": ParamSpec((di, di), ("xlstm_inner", None)),
+        "w_i": ParamSpec((di, h), ("xlstm_inner", "heads")),
+        "b_i": ParamSpec((h,), ("heads",), init="zeros"),
+        "w_f": ParamSpec((di, h), ("xlstm_inner", "heads")),
+        "b_f": ParamSpec((h,), ("heads",), init="ones", scale=3.0),
+        "w_o": ParamSpec((di, di), ("xlstm_inner", None)),
+        "norm": rmsnorm_spec(di)["scale"],
+        "down": ParamSpec((di, d), ("xlstm_inner", "embed")),
+    }
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MLSTMState:
+    c: jnp.ndarray  # (B, H, dh, dh) f32
+    n: jnp.ndarray  # (B, H, dh) f32
+    m: jnp.ndarray  # (B, H) f32
+    conv: jnp.ndarray  # (B, width-1, di)
+
+    def tree_flatten(self):
+        return (self.c, self.n, self.m, self.conv), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_mlstm_state(batch: int, cfg, dtype=jnp.bfloat16) -> MLSTMState:
+    h = cfg.n_heads
+    di = _di(cfg)
+    dh = di // h
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, di), dtype),
+    )
+
+
+def _mlstm_gates_qkv(params, x, cfg, conv_prefix):
+    """Shared projection path: x (B,S,D) -> (q,k,v,(logi,logf,o), conv_tail)."""
+    dt = x.dtype
+    h = cfg.n_heads
+    di = _di(cfg)
+    dh = di // h
+    xz = x @ params["in_proj"].astype(dt)
+    xm, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+    w = params["conv_w"].astype(dt)
+    width = w.shape[0]
+    xp = jnp.concatenate([conv_prefix.astype(dt), xm], axis=1)
+    conv = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=di,
+    ) + params["conv_b"].astype(dt)
+    xc = jax.nn.silu(conv)
+    b, s = x.shape[0], x.shape[1]
+
+    def heads(t):
+        return t.reshape(b, s, h, dh)
+
+    q = heads(xc @ params["wq"].astype(dt))
+    k = heads(xc @ params["wk"].astype(dt)) / (dh**0.5)
+    v = heads(xm @ params["wv"].astype(dt))
+    log_i = (xm @ params["w_i"].astype(dt)).astype(jnp.float32) + params["b_i"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (xm @ params["w_f"].astype(dt)).astype(jnp.float32) + params["b_f"].astype(jnp.float32)
+    )
+    o = jax.nn.sigmoid(xm @ params["w_o"].astype(dt))
+    # conv state carries the last (width-1) of [prefix ++ xm] so it never
+    # shrinks even when S < width-1 (single-token decode)
+    return q, k, v, log_i, log_f, o, z, xp[:, xp.shape[1] - (width - 1):]
+
+
+def _mlstm_step(state, q_t, k_t, v_t, li_t, lf_t):
+    """One recurrence step; all f32. Shapes: q/k/v (B,H,dh), li/lf (B,H)."""
+    c, n, m = state
+    m_new = jnp.maximum(lf_t + m, li_t)
+    fp = jnp.exp(lf_t + m - m_new)[..., None]
+    ip = jnp.exp(li_t - m_new)[..., None]
+    c_new = fp[..., None] * c + ip[..., None] * (v_t[..., :, None] * k_t[..., None, :])
+    n_new = fp * n + ip * k_t
+    h_num = jnp.einsum("bhij,bhj->bhi", c_new, q_t)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q_t)), 1.0)
+    h_t = h_num / h_den[..., None]
+    return (c_new, n_new, m_new), h_t
+
+
+def _mlstm_chunk_parallel(carry, inp, time_chunk: int):
+    """Chunkwise-PARALLEL mLSTM (xLSTM paper's training form; §Perf B2).
+
+    Naive per-step BPTT must store the (B, H, dh, dh) matrix memory at every
+    timestep (4096 x 268 MB measured on xlstm train_4k).  The chunkwise form
+    expresses all intra-chunk interactions as masked attention-like einsums
+    (no per-step state materialized) and carries (C, n, m) only across chunk
+    boundaries — autodiff stores S/L boundary states instead of S.
+
+    With b_t = sum_{r<=t} log f_r (within the chunk) and boundary state
+    (C0, n0, m0):
+        m_t = max(b_t + m0, max_{j<=t}(b_t - b_j + li_j))
+        C_t = e^{b_t+m0-m_t} C0 + sum_{j<=t} e^{b_t-b_j+li_j-m_t} v_j k_j^T
+        y_t = C_t q_t ;  n_t analogous ;  h_t = y_t / max(|n_t . q_t|, 1)
+    """
+    c0, n0, m0 = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+    q, k, v, li, lf = inp  # (L,B,H,dh) x3, (L,B,H) x2
+    L = time_chunk
+
+    b_t = jnp.cumsum(lf, axis=0)  # (L,B,H) inclusive
+    # intra-chunk stabilizer: max_j<=t (b_t - b_j + li_j) = b_t + max_j<=t(li_j - b_j)
+    a_j = li - b_t  # (L,B,H): li_j - b_j
+    run_max = jax.lax.associative_scan(jnp.maximum, a_j, axis=0)
+    m_t = jnp.maximum(b_t + m0[None], b_t + run_max)  # (L,B,H)
+
+    # decay matrix D[t,j] = exp(b_t - b_j + li_j - m_t) for j<=t; mask in
+    # LOG space before exp so masked entries never produce inf (NaN-safe vjp)
+    log_d = (b_t[:, None] - b_t[None, :] + li[None, :] - m_t[:, None])  # (L,L,B,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    log_d = jnp.where(causal[:, :, None, None], log_d, -1e30)
+    d = jnp.exp(jnp.minimum(log_d, 30.0))  # m_t guarantees log_d <= 0; belt+braces
+
+    scores = jnp.einsum("tbhd,jbhd->tjbh", q, k)  # (L,L,B,H)
+    y_intra = jnp.einsum("tjbh,jbhd->tbhd", scores * d, v)
+    n_intra = jnp.einsum("tjbh,jbhd->tbhd", d, k)
+
+    inter_w = jnp.exp(b_t + m0[None] - m_t)  # (L,B,H)
+    y_inter = jnp.einsum("bhij,tbhj->tbhi", c0, q) * inter_w[..., None]
+    n_inter = n0[None] * inter_w[..., None]
+
+    y = y_intra + y_inter
+    n_t = n_intra + n_inter
+    den = jnp.maximum(jnp.abs(jnp.einsum("tbhd,tbhd->tbh", n_t, q)), 1.0)
+    h_t = y / den[..., None]  # (L,B,H,dh)
+
+    # chunk-end state
+    m1 = m_t[-1]
+    w_end = jnp.exp(b_t[-1][None] - b_t + li - m1[None])  # (L,B,H)
+    w_end = jnp.where(jnp.isfinite(w_end), w_end, 0.0)
+    c1 = (jnp.exp(b_t[-1] + m0 - m1)[..., None, None] * c0
+          + jnp.einsum("jbh,jbhd,jbhe->bhde", w_end, v, k))
+    n1 = jnp.exp(b_t[-1] + m0 - m1)[..., None] * n0 + jnp.einsum(
+        "jbh,jbhd->bhd", w_end, k)
+    return (c1, n1, m1), h_t
+
+
+def mlstm_apply(params, x: jnp.ndarray, cfg, state: MLSTMState = None):
+    """x (B,S,D) -> (out (B,S,D), final state)."""
+    import functools
+
+    dt = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    di = _di(cfg)
+    if state is None:
+        state = init_mlstm_state(b, cfg, dt)
+    q, k, v, log_i, log_f, o, z, conv_tail = _mlstm_gates_qkv(params, x, cfg, state.conv)
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        log_i.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    time_chunk = min(256, s)
+    pad = (-s) % time_chunk
+    if pad:
+        # padded steps are inert: log_f = 0 (state kept), log_i = -inf
+        xs = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), xs)
+        xs = (xs[0], xs[1], xs[2], xs[3].at[s:].set(-1e30), xs[4])
+    n_chunks = (s + pad) // time_chunk
+
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n_chunks, time_chunk) + a.shape[1:]), xs)
+    body = jax.checkpoint(
+        functools.partial(_mlstm_chunk_parallel, time_chunk=time_chunk))
+    (c, n, m), hs = scan_inner(body, (state.c, state.n, state.m), xs_c)
+    hs = hs.reshape((n_chunks * time_chunk,) + hs.shape[2:])[:s]
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, di).astype(dt)  # (B,S,di)
+    hs = rmsnorm({"scale": params["norm"]}, hs, cfg.norm_eps) * o
+    out = (hs * jax.nn.silu(z)) @ params["down"].astype(dt)
+    new_state = MLSTMState(c, n, m, conv_tail.astype(jnp.bfloat16))
+    return out, new_state
+
+
+def mlstm_decode_step(params, x: jnp.ndarray, cfg, state: MLSTMState):
+    """x (B,1,D) one-token step."""
+    out, new_state = mlstm_apply(params, x, cfg, state)
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg) -> dict:
+    d = cfg.d_model
+    f = max(1, int(d * 4 // 3))
+    return {
+        "w": ParamSpec((d, 4 * d), ("embed", None)),
+        "r": ParamSpec((d, 4 * d), ("embed", None)),
+        "b": ParamSpec((4 * d,), (None,), init="zeros"),
+        "ffn_gate": ParamSpec((d, f), ("embed", "ff")),
+        "ffn_up": ParamSpec((d, f), ("embed", "ff")),
+        "ffn_down": ParamSpec((f, d), ("ff", "embed")),
+        "ffn_norm": rmsnorm_spec(d)["scale"],
+    }
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SLSTMState:
+    c: jnp.ndarray  # (B, D) f32
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.c, self.n, self.h, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_slstm_state(batch: int, cfg, dtype=jnp.bfloat16) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=z + 1e-6, h=z, m=z - 1e30)
+
+
+def _slstm_step(params, carry, xw_t):
+    """xw_t: precomputed x @ W + b, (B, 4D) f32."""
+    c, n, h, m = carry
+    gates = xw_t + (h @ params["r"].astype(jnp.float32))
+    zt, it, ft, ot = jnp.split(gates, 4, axis=-1)
+    log_i = it
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, log_i)
+    fp = jnp.exp(log_f + m - m_new)
+    ip = jnp.exp(log_i - m_new)
+    c_new = fp * c + ip * jnp.tanh(zt)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_apply(params, x: jnp.ndarray, cfg, state: SLSTMState = None):
+    """x (B,S,D) -> (out (B,S,D), final state). Includes the post FFN."""
+    dt = x.dtype
+    b, s, d = x.shape
+    if state is None:
+        state = init_slstm_state(b, cfg, dt)
+    xw = (x @ params["w"].astype(dt)).astype(jnp.float32) + params["b"].astype(jnp.float32)
+
+    def step(carry, xw_t):
+        return _slstm_step(params, carry, xw_t)
+
+    (c, n, h, m), hs = jax.lax.scan(step, (state.c, state.n, state.h, state.m),
+                                    xw.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(dt)  # (B,S,D)
+    # post-FFN (proj factor 4/3 GLU) with its own pre-norm
+    yn = rmsnorm({"scale": params["ffn_norm"]}, y, cfg.norm_eps)
+    ff = (jax.nn.gelu(yn @ params["ffn_gate"].astype(dt), approximate=True)
+          * (yn @ params["ffn_up"].astype(dt))) @ params["ffn_down"].astype(dt)
+    out = y + ff
+    return out, SLSTMState(c, n, h, m)
+
+
+def slstm_decode_step(params, x: jnp.ndarray, cfg, state: SLSTMState):
+    return slstm_apply(params, x, cfg, state)

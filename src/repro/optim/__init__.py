@@ -1,0 +1,8 @@
+"""Optimizers built from scratch (no optax): SGD+momentum, AdamW, clipping."""
+
+from repro.optim.optimizers import OptConfig, init_opt_state, apply_updates
+from repro.optim.clipping import clip_by_global_norm
+from repro.optim import lr_schedules
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates",
+           "clip_by_global_norm", "lr_schedules"]

@@ -1,0 +1,21 @@
+"""Global-norm gradient clipping (paper §III-A relies on clipped, bounded
+gradients — Caffe used 35, MXNet 10; clipping is what makes the range-based
+quantizer's [min, max] well-defined)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["global_norm", "clip_by_global_norm"]
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), tree), norm

@@ -1,0 +1,71 @@
+"""SGD(+momentum) and AdamW, pytree-native.
+
+Optimizer state mirrors the parameter pytree (and inherits its sharding under
+pjit — momentum/Adam moments are sharded exactly like their parameters, which
+is what makes the 235B config fit: 12 bytes/param spread over all 256 chips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | sgd
+    lr: float = 3e-4  # base lr; schedule multiplies
+    momentum: float = 0.9  # sgd
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def init_opt_state(config: OptConfig, params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    if config.kind == "sgd":
+        return {"mu": zeros(), "count": jnp.zeros((), jnp.int32)}
+    if config.kind == "adamw":
+        return {"mu": zeros(), "nu": zeros(), "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(f"unknown optimizer {config.kind!r}")
+
+
+def apply_updates(
+    config: OptConfig, params, grads, state, lr_scale=1.0
+) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new_params, new_state). lr_scale: schedule multiplier."""
+    count = state["count"] + 1
+    lr = config.lr * lr_scale
+
+    if config.kind == "sgd":
+        mu = jax.tree_util.tree_map(
+            lambda m, g: config.momentum * m + g, state["mu"], grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, m: p - lr * (m + config.weight_decay * p), params, mu
+        )
+        return new_params, {"mu": mu, "count": count}
+
+    # adamw with bias correction
+    c = count.astype(jnp.float32)
+    b1c = 1.0 - config.b1**c
+    b2c = 1.0 - config.b2**c
+    mu = jax.tree_util.tree_map(
+        lambda m, g: config.b1 * m + (1 - config.b1) * g, state["mu"], grads
+    )
+    nu = jax.tree_util.tree_map(
+        lambda v, g: config.b2 * v + (1 - config.b2) * (g * g), state["nu"], grads
+    )
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        return p - lr * (mhat / (jnp.sqrt(vhat) + config.eps) + config.weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "count": count}

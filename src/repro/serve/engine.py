@@ -1,0 +1,93 @@
+"""Serving engine: batched prefill + decode with KV/SSM caches.
+
+``prefill_step`` and ``decode_step`` are the two functions the decode-shape
+dry-run cells lower (``decode_32k``/``long_500k`` lower decode_step against a
+cache of the assigned sequence length, per the assignment).
+
+The engine implements simple batched serving: requests are padded into a
+fixed batch, prefilled together, then decoded token-by-token with greedy or
+temperature sampling.  Continuous batching (slot reuse on completion) is a
+thin layer on top — ``Engine.generate`` exposes the batch API the examples
+use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM, MeshCtx
+
+__all__ = ["ServeConfig", "Engine", "build_prefill_step", "build_decode_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 2048
+    batch: int = 8
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: int = -1  # -1: never stop early
+
+
+def build_prefill_step(model: LM, ctx: Optional[MeshCtx] = None, max_seq=None):
+    def prefill_step(params, batch):
+        memory = None
+        if model.cfg.n_encoder_layers:
+            memory = model.encode(params, batch["frontend"], ctx)
+        elif model.cfg.frontend != "none":
+            memory = batch["frontend"].astype(jnp.bfloat16)
+        logits, caches = model.prefill(
+            params, batch["tokens"], memory=memory, ctx=ctx, max_seq=max_seq,
+            last_only=True,
+        )
+        return logits, caches
+
+    return prefill_step
+
+
+def build_decode_step(model: LM, ctx: Optional[MeshCtx] = None):
+    def decode_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos, ctx=ctx)
+
+    return decode_step
+
+
+class Engine:
+    """Batched generation on top of prefill/decode."""
+
+    def __init__(self, model: LM, params, config: ServeConfig,
+                 ctx: Optional[MeshCtx] = None):
+        self.model = model
+        self.params = params
+        self.config = config
+        self._prefill = jax.jit(build_prefill_step(model, ctx, config.max_seq))
+        self._decode = jax.jit(build_decode_step(model, ctx))
+
+    def _sample(self, logits, key):
+        if self.config.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        scaled = logits[:, -1] / self.config.temperature
+        return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+    def generate(self, prompts: jnp.ndarray, max_new_tokens: int,
+                 key=None, frontend=None) -> jnp.ndarray:
+        """prompts (B, S_prompt) int32 -> (B, S_prompt + max_new) tokens."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b, s = prompts.shape
+        batch = {"tokens": prompts}
+        if frontend is not None:
+            batch["frontend"] = frontend
+        logits, caches = self._prefill(self.params, batch)
+        tokens = [prompts]
+        tok = self._sample(logits, key)[:, None]
+        for i in range(max_new_tokens):
+            tokens.append(tok)
+            if i == max_new_tokens - 1:
+                break
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, caches, tok, jnp.int32(s + i))
+            tok = self._sample(logits, sub)[:, None]
+        return jnp.concatenate(tokens, axis=1)

@@ -1,0 +1,6 @@
+from repro.train.state import TrainState, init_state, abstract_state
+from repro.train.step import StepConfig, build_train_step
+from repro.train.loop import TrainLoopConfig, train_loop
+
+__all__ = ["TrainState", "init_state", "abstract_state", "StepConfig",
+           "build_train_step", "TrainLoopConfig", "train_loop"]

@@ -1,0 +1,106 @@
+"""The training loop: schedules, checkpoint/restart, failure recovery.
+
+Fault-tolerance contract (DESIGN.md §5):
+* auto-resume — on start, restore the newest checkpoint if one exists;
+* step-level recovery — a failing step rolls back to the last checkpoint
+  and continues (``max_retries`` guards livelock); a failure-injection hook
+  exercises this in tests;
+* theta/lr schedules — evaluated host-side per step; a *theta* change swaps
+  the compiled step function (static kept-k), which is the recompile-bounded
+  behaviour discussed in core/schedules.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.schedules import quantize_theta
+from repro.train import checkpoint as ckpt
+from repro.train.step import StepConfig, build_train_step
+
+__all__ = ["TrainLoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    max_retries: int = 2
+    theta_schedule: Optional[Callable[[int], float]] = None  # -> theta
+    lr_schedule: Optional[Callable[[int], float]] = None  # -> multiplier
+    failure_injector: Optional[Callable[[int], None]] = None  # tests raise here
+
+
+def train_loop(
+    model,
+    opt_cfg,
+    step_cfg: StepConfig,
+    mesh,
+    state,
+    stream,
+    loop_cfg: TrainLoopConfig,
+) -> Dict:
+    """Runs the loop; returns {"state": final_state, "history": [...]}."""
+    manager = (
+        ckpt.CheckpointManager(loop_cfg.ckpt_dir, loop_cfg.ckpt_every, loop_cfg.ckpt_keep)
+        if loop_cfg.ckpt_dir
+        else None
+    )
+
+    start_step = 0
+    if manager is not None and ckpt.latest_step(loop_cfg.ckpt_dir) is not None:
+        state, start_step = ckpt.restore(loop_cfg.ckpt_dir, state)
+        print(f"[loop] resumed from step {start_step}")
+
+    # compiled step cache keyed by (theta_bucket,) — schedule-driven rebuilds
+    step_fns: Dict[float, Callable] = {}
+
+    def get_step_fn(theta: Optional[float]):
+        key = -1.0 if theta is None else theta
+        if key not in step_fns:
+            cfg = step_cfg
+            if theta is not None and step_cfg.reducer is not None:
+                cfg = dataclasses.replace(
+                    step_cfg, reducer=dataclasses.replace(step_cfg.reducer, theta=theta)
+                )
+            example = stream.batch_at(0)
+            step_fns[key] = build_train_step(model, opt_cfg, cfg, mesh, example)
+        return step_fns[key]
+
+    history: List[Dict] = []
+    step = start_step
+    retries = 0
+    while step < loop_cfg.total_steps:
+        theta = None
+        if loop_cfg.theta_schedule is not None:
+            theta = quantize_theta(loop_cfg.theta_schedule(step))
+        lr_scale = loop_cfg.lr_schedule(step) if loop_cfg.lr_schedule else 1.0
+        try:
+            if loop_cfg.failure_injector is not None:
+                loop_cfg.failure_injector(step)
+            batch = stream.batch_at(step)
+            step_fn = get_step_fn(theta)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            if step % loop_cfg.log_every == 0:
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics.update(step=step, theta=theta, dt=time.perf_counter() - t0)
+                history.append(metrics)
+            step += 1
+            retries = 0
+            if manager is not None:
+                manager.maybe_save(step, state)
+        except RuntimeError as e:
+            retries += 1
+            if manager is None or retries > loop_cfg.max_retries:
+                raise
+            print(f"[loop] step {step} failed ({e}); rolling back to last checkpoint")
+            state, step = ckpt.restore(loop_cfg.ckpt_dir, state)
+    return {"state": state, "history": history}

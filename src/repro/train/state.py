@@ -1,0 +1,48 @@
+"""Train state: params + optimizer state + step counter (+ EF residual)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import OptConfig, init_opt_state
+
+__all__ = ["TrainState", "init_state", "abstract_state"]
+
+TrainState = Dict[str, Any]  # {"params", "opt", "step"[, "residual"]}
+
+
+def init_state(key, model, opt_cfg: OptConfig, *, error_feedback: bool = False,
+               dtype=jnp.float32) -> TrainState:
+    params = model.init(key, dtype)
+    state: TrainState = {
+        "params": params,
+        "opt": init_opt_state(opt_cfg, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if error_feedback:
+        n = sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
+        state["residual"] = jnp.zeros((n,), jnp.float32)
+    return state
+
+
+def abstract_state(model, opt_cfg: OptConfig, *, error_feedback: bool = False,
+                   dtype=jnp.float32) -> TrainState:
+    """ShapeDtypeStruct tree — dry-run path, no allocation."""
+    from repro.models.sharding import abstract_params
+
+    params = abstract_params(model.spec(), dtype)
+    state = jax.eval_shape(
+        lambda p: {
+            "opt": init_opt_state(opt_cfg, p),
+            "step": jnp.zeros((), jnp.int32),
+        },
+        params,
+    )
+    state["params"] = params
+    if error_feedback:
+        n = sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
+        state["residual"] = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return state

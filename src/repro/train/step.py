@@ -1,0 +1,244 @@
+"""Train-step builders: pjit baseline + the paper's compressed variants.
+
+Three modes (StepConfig.mode):
+
+* ``pjit`` — everything auto-sharded; XLA inserts all collectives.  This is
+  the dense baseline every dry-run cell lowers, and what the roofline table
+  measures.  FSDP (params additionally sharded over ``data``) turns on per
+  config for the >20B models.
+
+* ``compressed_dp`` — the paper's setting: pure data parallelism over the
+  (``pod``, ``data``) axes (manual via shard_map), tensor parallelism over
+  ``model`` stays AUTO (partial-manual shard_map).  Per-shard gradients are
+  exchanged with the configured reducer (FFT compression etc.).  Parameters
+  are replicated over the manual axes, so this mode fits <= ~7B models — which
+  covers the paper-faithful experiments (the paper ran AlexNet/VGG/ResNet).
+
+* ``hierarchical`` — the multi-pod adaptation for big FSDP models: only the
+  ``pod`` axis is manual; within a pod, XLA runs the usual FSDP collectives
+  over (``data``, ``model``); ACROSS pods the gradient sync is the compressed
+  exchange over DCN.  "Compress the bandwidth-limited hop" (DESIGN.md §2).
+
+All modes share: grad -> [reduce] -> global-norm clip -> optimizer -> new
+state, with theta threaded statically (a theta-schedule change rebuilds the
+step — bounded recompiles, see core/schedules.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comms.reducers import ReducerConfig, make_reducer
+from repro.models.sharding import spec_tree_to_pspecs
+from repro.models.transformer import MeshCtx
+from repro.optim import OptConfig, apply_updates, clip_by_global_norm
+
+__all__ = ["StepConfig", "build_train_step", "state_pspecs", "batch_pspecs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    mode: str = "pjit"  # pjit | compressed_dp | hierarchical
+    fsdp: bool = False
+    multi_pod: bool = False
+    clip_norm: float = 1.0
+    reducer: Optional[ReducerConfig] = None  # compressed modes
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    @property
+    def manual_axes(self):
+        if self.mode == "compressed_dp":
+            return tuple(self.batch_axes)
+        if self.mode == "hierarchical":
+            return ("pod",)
+        return ()
+
+
+def state_pspecs(model, opt_cfg: OptConfig, step_cfg: StepConfig, mesh) -> Dict:
+    """PartitionSpec tree for the TrainState under this mesh/mode."""
+    axis_sizes = dict(mesh.shape)
+    # params sharded over 'model' (+FSDP over 'data'); NEVER over 'pod'
+    fsdp = step_cfg.fsdp and step_cfg.mode != "compressed_dp"
+    param_specs = spec_tree_to_pspecs(model.spec(), axis_sizes, fsdp=fsdp)
+    out = {
+        "params": param_specs,
+        "opt": {"mu": param_specs, "count": P()},
+        "step": P(),
+    }
+    if opt_cfg.kind == "adamw":
+        out["opt"]["nu"] = param_specs
+    if step_cfg.reducer is not None and step_cfg.reducer.error_feedback:
+        out["residual"] = P(step_cfg.batch_axes)  # per-worker rows
+    return out
+
+
+def batch_pspecs(step_cfg: StepConfig, batch_tree) -> Dict:
+    """Batch rows over the batch axes (leading dim of every input)."""
+    return jax.tree_util.tree_map(lambda _: P(step_cfg.batch_axes), batch_tree)
+
+
+def _loss_and_grad(model, mesh_ctx):
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, ctx=mesh_ctx)
+        return loss, metrics
+
+    return jax.value_and_grad(loss_fn, has_aux=True)
+
+
+def _optimizer_update(opt_cfg, step_cfg, state, grads, lr_scale):
+    grads, gnorm = clip_by_global_norm(grads, step_cfg.clip_norm)
+    new_params, new_opt = apply_updates(
+        opt_cfg, state["params"], grads, state["opt"], lr_scale
+    )
+    new_state = dict(state)
+    new_state.update(params=new_params, opt=new_opt, step=state["step"] + 1)
+    return new_state, gnorm
+
+
+def build_train_step(
+    model,
+    opt_cfg: OptConfig,
+    step_cfg: StepConfig,
+    mesh,
+    batch_tree,
+    *,
+    lr_scale: float = 1.0,
+    donate: bool = True,
+) -> Callable:
+    """Returns jitted step(state, batch) -> (state, metrics).
+
+    ``batch_tree`` is any pytree with the batch's structure (abstract ok) —
+    used to build input shardings.
+    """
+    axes = dict(mesh.shape)
+    mesh_ctx = MeshCtx(
+        batch=step_cfg.batch_axes,
+        model="model" if "model" in axes else None,
+        model_size=axes.get("model", 1),
+    )
+    sharding = lambda spec_tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    batch_sh = sharding(batch_pspecs(step_cfg, batch_tree))
+
+    if step_cfg.mode == "pjit":
+        vg = _loss_and_grad(model, mesh_ctx)
+
+        def step(state, batch):
+            (loss, metrics), grads = vg(state["params"], batch)
+            new_state, gnorm = _optimizer_update(opt_cfg, step_cfg, state, grads, lr_scale)
+            metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_state, metrics
+
+        state_sh = sharding(state_pspecs(model, opt_cfg, step_cfg, mesh))
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,) if donate else (),
+        )
+
+        class _PjitStep:
+            # device_put against these before calling (freshly generated
+            # batches may be mesh-committed as replicated, which conflicts
+            # with explicit in_shardings)
+            batch_sharding = batch_sh
+            state_sharding = state_sh
+
+            def __call__(self, st, batch):
+                return jitted(st, jax.device_put(batch, batch_sh))
+
+            def lower(self, st, batch):
+                return jitted.lower(st, batch)
+
+        return _PjitStep()
+
+    # ---- compressed modes: partial-manual shard_map ------------------------
+    assert step_cfg.reducer is not None, "compressed modes need a ReducerConfig"
+    reducer = make_reducer(step_cfg.reducer)
+    manual = step_cfg.manual_axes
+    ef = step_cfg.reducer.error_feedback
+
+    # Inside the shard_map the manual axes are stripped; model-axis
+    # constraints still apply through the auto axes.  In hierarchical mode
+    # 'data' remains auto so batch constraints over it stay valid.
+    inner_ctx = None if step_cfg.mode == "compressed_dp" else MeshCtx(
+        batch=("data",),
+        model="model" if "model" in axes else None,
+        model_size=axes.get("model", 1),
+    )
+    vg_inner = _loss_and_grad(model, inner_ctx)
+
+    def inner(state, batch):
+        if ef:
+            state = dict(state, residual=state["residual"][0])
+        (loss, metrics), grads = vg_inner(state["params"], batch)
+        if ef:
+            grads, new_residual = reducer(grads, state["residual"])
+        else:
+            grads = reducer(grads)
+        loss = jax.lax.pmean(loss, manual)
+        metrics = jax.lax.pmean(metrics, manual)
+        new_state, gnorm = _optimizer_update(opt_cfg, step_cfg, state, grads, lr_scale)
+        if ef:
+            new_state["residual"] = new_residual[None]
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return new_state, metrics
+
+    def state_in_specs(state_like):
+        specs = jax.tree_util.tree_map(lambda _: P(), state_like)
+        if ef:
+            specs["residual"] = P(manual)
+        return specs
+
+    def step(state, batch):
+        # partial-manual shard_map: in_specs may reference MANUAL axes only;
+        # the auto ('data'/'model') sharding of the batch comes from the
+        # model's internal constraints
+        batch_specs = jax.tree_util.tree_map(lambda _: P(manual), batch)
+        step_sm = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(state_in_specs(state), batch_specs),
+            out_specs=(state_in_specs(state), P()),
+            axis_names=frozenset(manual),
+            check_vma=False,
+        )
+        return step_sm(state, batch)
+
+    def wrapped(state, batch):
+        with jax.set_mesh(mesh):
+            return jax.jit(step, donate_argnums=(0,) if donate else ())(state, batch)
+
+    # NOTE: composing jit-level in_shardings (FSDP over the auto axes) with
+    # the partial-manual shard_map check-fails inside XLA's SPMD partitioner
+    # (spmd_partitioner_util.cc:504; same family as b/433785288 pending the
+    # Shardy partitioner).  Until then the compressed modes run with params
+    # replicated over the manual axes — fine for the paper-scale models the
+    # compressed_dp mode targets; the hierarchical mode's FSDP composition is
+    # documented as blocked-on-upstream in EXPERIMENTS.md §Perf.
+    jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
+    batch_sh_manual = NamedSharding(mesh, P(manual))
+
+    class _Step:
+        batch_sharding = batch_sh_manual
+
+        def __call__(self, state, batch):
+            with jax.set_mesh(mesh):
+                return jitted(state, jax.device_put(batch, batch_sh_manual))
+
+        def lower(self, state, batch):
+            with jax.set_mesh(mesh):
+                return jitted.lower(state, batch)
+
+    return _Step()

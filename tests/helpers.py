@@ -1,0 +1,34 @@
+"""Test helpers: subprocess runner for multi-device (fake CPU devices) tests.
+
+XLA_FLAGS=--xla_force_host_platform_device_count must be set before jax
+imports, and the main test process must keep its single device (per the
+dry-run instructions), so multi-device tests run in a child process.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, devices: int = 8, timeout: int = 480) -> str:
+    """Run python ``code`` in a subprocess with N fake CPU devices.
+
+    The code should print results; raises on nonzero exit with full output.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
+        )
+    return proc.stdout

@@ -1,0 +1,90 @@
+"""Elastic remesh: checkpoints restore onto a different mesh (DESIGN.md §5)."""
+
+from helpers import run_with_devices
+
+
+def test_save_on_2x4_restore_on_8_and_4x2():
+    out = run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np, tempfile, os
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train import checkpoint as ckpt
+
+mesh_a = jax.make_mesh((2, 4), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+state = {
+    "params": {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+               "b": jnp.ones((8,))},
+    "step": jnp.int32(5),
+}
+sharded = jax.device_put(state, jax.tree.map(
+    lambda _: NamedSharding(mesh_a, P()), state))
+sharded["params"]["w"] = jax.device_put(
+    state["params"]["w"], NamedSharding(mesh_a, P("data", "model")))
+
+d = tempfile.mkdtemp()
+ckpt.save(d, 5, sharded)
+
+# restore onto a 1-D 8-way mesh with a different layout
+mesh_b = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+sh_b = jax.tree.map(lambda _: NamedSharding(mesh_b, P()), state)
+sh_b["params"]["w"] = NamedSharding(mesh_b, P("x", None))
+restored, step = ckpt.restore(d, state, shardings=sh_b)
+assert step == 5
+np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                              np.asarray(state["params"]["w"]))
+assert restored["params"]["w"].sharding.spec == P("x", None)
+
+# and onto a transposed 4x2 mesh
+mesh_c = jax.make_mesh((4, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh_c = jax.tree.map(lambda _: NamedSharding(mesh_c, P()), state)
+sh_c["params"]["w"] = NamedSharding(mesh_c, P("model", "data"))
+restored_c, _ = ckpt.restore(d, state, shardings=sh_c)
+np.testing.assert_array_equal(np.asarray(restored_c["params"]["w"]),
+                              np.asarray(state["params"]["w"]))
+print("REMESH_OK")
+""")
+    assert "REMESH_OK" in out
+
+
+def test_train_on_4_resume_on_2_devices():
+    """Full loop handoff across fleet sizes: same result as uninterrupted."""
+    code_template = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticConfig, SyntheticStream
+from repro.models.transformer import LM
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, init_state, train_loop
+from repro.train.step import StepConfig
+
+TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=64, remat="none")
+mesh = jax.make_mesh((len(jax.devices()),), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+model = LM(TINY)
+opt = OptConfig(kind="adamw", lr=1e-3)
+stream = SyntheticStream(SyntheticConfig(vocab_size=64, seq_len=16, global_batch=8))
+state = init_state(jax.random.PRNGKey(0), model, opt)
+with jax.set_mesh(mesh):
+    out = train_loop(model, opt, StepConfig(mode="pjit"), mesh, state, stream,
+                     TrainLoopConfig(total_steps=%(steps)d, ckpt_dir=%(ckpt)r,
+                                     ckpt_every=5, log_every=100))
+w = jax.tree_util.tree_leaves(out["state"]["params"])[0]
+print("SUM", float(jnp.sum(jnp.abs(w))))
+"""
+    import tempfile
+
+    d = tempfile.mkdtemp()
+    out4 = run_with_devices(code_template % {"steps": 5, "ckpt": d}, devices=4)
+    out2 = run_with_devices(code_template % {"steps": 10, "ckpt": d}, devices=2)
+    # uninterrupted reference on 2 devices (data order is device-count
+    # independent because batches are functions of the step only)
+    ref = run_with_devices(
+        code_template % {"steps": 10, "ckpt": tempfile.mkdtemp()}, devices=2)
+    got = float(out2.split("SUM")[1].split()[0])
+    want = float(ref.split("SUM")[1].split()[0])
+    # cross-replica reduction ORDER differs between 4- and 2-device meshes, so
+    # equality is to within accumulated f32 rounding, not bitwise
+    assert abs(got - want) < 5e-3, (got, want)

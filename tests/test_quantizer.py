@@ -1,0 +1,101 @@
+"""Range-based N-bit float (paper Alg. 1) — unit + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizer as Q
+
+CFG = Q.RangeQuantConfig(n_bits=8, m_bits=3)
+
+
+def test_roundtrip_relative_error():
+    q = Q.fit_quantizer(-1.0, 1.0, CFG)
+    x = jnp.linspace(-1, 1, 4001)
+    xr = Q.decode(Q.encode(x, q), q)
+    rel = jnp.abs(x - xr) / jnp.maximum(jnp.abs(x), q.eps)
+    # one mantissa step of slack on top of 2^-(m+1)
+    assert float(rel.max()) <= 2.0 ** (-(CFG.m_bits + 1)) * 1.05
+
+
+def test_zero_maps_to_zero():
+    q = Q.fit_quantizer(-1.0, 1.0, CFG)
+    assert float(Q.decode(Q.encode(jnp.zeros(4), q), q).max()) == 0.0
+
+
+def test_monotonicity():
+    q = Q.fit_quantizer(-2.0, 2.0, CFG)
+    x = jnp.linspace(-2, 2, 1000)
+    xr = Q.decode(Q.encode(x, q), q)
+    assert bool(jnp.all(jnp.diff(xr) >= 0))
+
+
+def test_density_concentrated_near_zero():
+    """Paper Fig. 8: representable values are denser around 0."""
+    q = Q.fit_quantizer(-1.0, 1.0, CFG)
+    vals = np.sort(np.array(Q.representable_values(q)))
+    gaps = np.diff(vals)
+    mid = len(vals) // 2
+    inner = gaps[mid - 8: mid + 8].mean()
+    outer = np.concatenate([gaps[:8], gaps[-8:]]).mean()
+    assert inner < outer / 8  # exponential spacing: inner gaps tiny
+
+
+def test_code_budget_balanced():
+    """solve_eps balances positive/negative codes for a symmetric range."""
+    eps, p = Q.solve_eps(jnp.float32(-1), jnp.float32(1), CFG)
+    assert abs(int(p) - 128) <= 1
+
+
+def test_heuristic_agrees_with_closed_form():
+    """Paper's x2 search lands within a factor of 2 of the closed form."""
+    for lo, hi in [(-1, 1), (-6, 6), (-0.1, 0.5)]:
+        e_h, _ = Q.tune_eps_heuristic(jnp.float32(lo), jnp.float32(hi), CFG)
+        e_s, _ = Q.solve_eps(jnp.float32(lo), jnp.float32(hi), CFG)
+        ratio = float(e_h / e_s)
+        assert 0.4 <= ratio <= 2.6, (lo, hi, ratio)
+
+
+def test_out_of_range_clips_to_boundary():
+    """Paper: 'numbers beyond the range are represented by the closest
+    boundary' — e.g. -2 -> -1 when the range is [-1, 1]."""
+    q = Q.fit_quantizer(-1.0, 1.0, CFG)
+    xr = Q.decode(Q.encode(jnp.array([-2.0, 2.0]), q), q)
+    assert float(xr[0]) == pytest.approx(float(q.vmin), rel=1e-6)
+    assert float(xr[1]) == pytest.approx(float(q.vmax), rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    hi=st.floats(1e-3, 1e3),
+    asym=st.floats(0.1, 10.0),
+    n_bits=st.sampled_from([6, 8, 12]),
+    m_bits=st.sampled_from([2, 3, 4]),
+)
+def test_property_roundtrip_any_range(hi, asym, n_bits, m_bits):
+    """Quantizer contract: |x - Q(x)| <= max(eps, rel_bound * |x|) for all
+    in-range x.  The absolute arm covers the denormal gap below eps (any
+    quantizer with a smallest-representable eps has it); the relative arm is
+    one mantissa step, 2^-(m+1), with log-approximation slack."""
+    cfg = Q.RangeQuantConfig(n_bits=n_bits, m_bits=m_bits)
+    lo = -hi * asym
+    q = Q.fit_quantizer(lo, hi, cfg)
+    x = jnp.clip(jnp.linspace(lo, hi, 513), q.vmin, q.vmax)
+    xr = Q.decode(Q.encode(x, q), q)
+    err = jnp.abs(x - xr)
+    bound = jnp.maximum(q.eps, 2.0 ** (-(m_bits + 1)) * 1.2 * jnp.abs(x)) + 1e-30
+    assert bool(jnp.all(err <= bound)), float((err / bound).max())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_gaussian_snr(seed):
+    """8-bit range quantization keeps >20 dB SNR on gaussian gradients."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (20000,)) * 0.1
+    q = Q.fit_quantizer(g.min(), g.max(), CFG)
+    gr = Q.decode(Q.encode(g, q), q)
+    mse = float(jnp.mean((g - gr) ** 2))
+    snr = 10 * np.log10(float(jnp.var(g)) / max(mse, 1e-20))
+    assert snr > 20.0

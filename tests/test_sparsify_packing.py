@@ -1,0 +1,123 @@
+"""Sparsification (freq + time domain) and packing — incl. the Assumption 3.1
+property the convergence theory rests on (paper §III-C)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fft as cfft
+from repro.core import packing, sparsify, theory
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig, TimeDomainCompressor
+
+
+def test_fft_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (10000,))
+    freqs, n = cfft.chunked_rfft(x)
+    xr = cfft.chunked_irfft(freqs, n)
+    np.testing.assert_allclose(np.array(x), np.array(xr), atol=1e-4)
+
+
+def test_parseval_energy_accounting():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    freqs, _ = cfft.chunked_rfft(x)
+    e_time = float(jnp.sum(x * x))
+    e_freq = float(jnp.sum(cfft.chunk_energy(freqs)))
+    assert e_freq == pytest.approx(e_time, rel=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), theta=st.sampled_from([0.3, 0.5, 0.7, 0.9]))
+def test_assumption31_sqrt_theta_bound(seed, theta):
+    """PROVABLE bound: dropping the theta-fraction smallest-|.| coefficients
+    discards <= theta of the energy => ||v - v_hat|| <= sqrt(theta)||v||.
+    Holds for ANY input, any theta (DESIGN.md §6)."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (8192,)) * jax.random.uniform(
+        jax.random.PRNGKey(seed + 1), (8192,)
+    )
+    sparse, _, n = sparsify.frequency_sparsify(v, theta)
+    v_hat = cfft.chunked_irfft(sparse, n)
+    err, norm_ratio = theory.assumption31_stats(v, v_hat)
+    assert float(err) <= theta**0.5 + 1e-3
+    assert float(norm_ratio) <= 1.0 + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_assumption31_linear_theta_on_gaussian(seed):
+    """On gaussian gradients (paper Fig. 3: the empirical case) the error is
+    far below the literal theta bound of Assumption 3.1."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (16384,)) * 0.05
+    for theta in (0.5, 0.7):
+        sparse, _, n = sparsify.frequency_sparsify(v, theta)
+        v_hat = cfft.chunked_irfft(sparse, n)
+        assert theory.assumption31_holds(v, v_hat, theta)
+
+
+def test_fft_preserves_signs_better_than_time_domain():
+    """Paper Fig. 7: frequency-domain sparsification preserves the sign of
+    dropped entries; time-domain zeroing does not."""
+    g = jax.random.normal(jax.random.PRNGKey(2), (65536,)) * 0.05
+    cfg = FFTCompressorConfig(theta=0.7, quantize=False)
+    fft_hat = FFTCompressor(cfg).decompress(FFTCompressor(cfg).compress(g))
+    time_hat = TimeDomainCompressor(cfg).decompress(TimeDomainCompressor(cfg).compress(g))
+    sign_fft = float(jnp.mean(jnp.sign(fft_hat) == jnp.sign(g)))
+    sign_time = float(jnp.mean(jnp.sign(time_hat) == jnp.sign(g)))
+    assert sign_fft > 0.75
+    assert sign_fft > sign_time + 0.3  # paper's qualitative claim, quantified
+
+
+def test_topk_mask_exact():
+    mag = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (4, 128)))
+    mask = sparsify.topk_mask(mag, 32)
+    assert mask.sum(-1).tolist() == [32] * 4
+    thresh = jnp.sort(mag, axis=-1)[:, -32]
+    assert bool(jnp.all(mag[mask].reshape(4, 32) >= thresh[:, None] - 1e-7))
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.sampled_from([8, 32, 96]))
+def test_index_pack_roundtrip(seed, k):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 128))
+    idx = sparsify.topk_select(jnp.abs(x), k)
+    vals = packing.pack_by_indices(x, idx)
+    dense = packing.unpack_by_indices(vals, idx, 128)
+    mask = sparsify.topk_mask(jnp.abs(x), k)
+    np.testing.assert_allclose(np.array(dense), np.array(x * mask), atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), theta=st.sampled_from([0.5, 0.75]))
+def test_bitmap_pack_roundtrip(seed, theta):
+    """Paper's status-bitmap + prefix-sum pack (parallel pack algorithm)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 256))
+    k = sparsify.keep_count(256, theta)
+    mask = sparsify.topk_mask(jnp.abs(x), k)
+    payload = packing.pack_bitmap(x, mask, k)
+    dense = packing.unpack_bitmap(payload, 256)
+    np.testing.assert_allclose(np.array(dense), np.array(x * mask), atol=1e-7)
+
+
+def test_bitmap_word_layout():
+    mask = jnp.zeros((1, 64), bool).at[0, 0].set(True).at[0, 33].set(True)
+    words = packing.make_bitmap(mask)
+    assert words.shape == (1, 2)
+    assert int(words[0, 0]) == 1 and int(words[0, 1]) == 2
+    back = packing.bitmap_to_mask(words, 64)
+    assert bool(jnp.all(back == mask))
+
+
+def test_payload_size_accounting():
+    # bitmap beats the index layout below theta = 15/16 (16-bit indices)
+    n, bits = 4096, 8
+    for theta, bitmap_smaller in [(0.7, True), (0.98, False)]:
+        k = sparsify.keep_count(n, theta)
+        idx_bits = packing.payload_bits_index(n, k, bits)
+        bm_bits = packing.payload_bits_bitmap(n, k, bits)
+        assert (bm_bits < idx_bits) == bitmap_smaller, (theta, bm_bits, idx_bits)

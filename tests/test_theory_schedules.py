@@ -1,0 +1,97 @@
+"""Theorem 3.4/3.5 helpers, theta schedules, cost model (Fig. 9), HLO parse."""
+
+import math
+
+import pytest
+
+from repro.analysis import hlo
+from repro.comms import cost_model as cm
+from repro.core import schedules, theory
+
+
+def test_thm34_bound_structure():
+    t = theory.thm34_bound(f0_minus_fstar=2.0, lipschitz=1.0, eta=0.1,
+                           theta=0.7, sigma_sq=1.0, batch=32, steps=100)
+    assert t.bound == pytest.approx(t.opt_term + t.noise_term)
+    # noise term grows with theta^2 (the paper's accuracy-drop mechanism)
+    t2 = theory.thm34_bound(2.0, 1.0, 0.1, 0.9, 1.0, 32, 100)
+    assert t2.noise_term > t.noise_term
+    # and shrinks with batch (Thm 3.4: increase b to tighten)
+    t3 = theory.thm34_bound(2.0, 1.0, 0.1, 0.7, 1.0, 128, 100)
+    assert t3.noise_term < t.noise_term
+
+
+def test_thm35_schedule_diminishes_with_lr():
+    eta = lambda s: 0.5 / math.sqrt(s + 1)
+    sched = schedules.thm35_schedule(lipschitz=1.0, eta_schedule=eta)
+    vals = [sched(s) for s in (0, 10, 100, 10_000)]
+    assert all(v <= 0.5 for v in vals)  # lemma admissibility
+    assert vals[0] > vals[1] > vals[2] > vals[3]
+    # theta_t^2 == L * eta_t once below the clip
+    assert vals[3] == pytest.approx(math.sqrt(eta(10_000)), rel=1e-6)
+
+
+def test_step_and_poly_schedules():
+    mixed = schedules.step_decay([(0, 0.99), (100, 0.0)])  # paper "mixed comp"
+    assert mixed(50) == 0.99 and mixed(100) == 0.0
+    poly = schedules.polynomial_decay(0.9, 100)
+    assert poly(0) == pytest.approx(0.9) and poly(100) == 0.0
+    sig = schedules.sigmoid_decay(0.9, midpoint=50, steepness=0.2)
+    assert sig(0) > 0.8 and sig(200) < 0.2
+
+
+def test_quantize_theta_bounds_recompiles():
+    grid = {schedules.quantize_theta(t / 1000) for t in range(1000)}
+    assert len(grid) <= 21  # bounded distinct compiled steps
+
+
+# --- §III-D cost model (Fig. 9) --------------------------------------------
+
+
+def test_kmin_monotone_in_bandwidth():
+    ks = [cm.k_min(bw, cm.TPU_V5E)
+          for bw in (1e9, 6e9, 12.5e9, 50e9)]
+    assert ks[0] < ks[1] < ks[2]  # faster network -> higher k needed
+    # paper insight: easier to win on slow networks
+    assert ks[0] < 1.5
+
+
+def test_kmin_infinite_when_network_outruns_compressor():
+    slow = cm.Throughputs(t_m=1e9, t_f=1e9, t_p=1e9, t_s=1e9)
+    assert cm.k_min(50e9, slow) == float("inf")
+
+
+def test_is_beneficial_consistent_with_kmin():
+    thr = cm.TPU_V5E
+    bw = 6e9
+    k_star = cm.k_min(bw, thr)
+    assert not cm.is_beneficial(1e8, bw, k_star * 0.9, thr)
+    assert cm.is_beneficial(1e8, bw, k_star * 1.5, thr)
+
+
+# --- HLO collective parsing -------------------------------------------------
+
+SAMPLE_HLO = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag.1 = bf16[64,512]{1,0} all-gather(bf16[16,512]{1,0} %y), replica_groups=[4,16]<=[64], dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(f32[256]{0} %z), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %cp = f32[1024]{0} collective-permute(f32[1024]{0} %w), source_target_pairs={{0,1},{1,0}}
+  %a2a = (f32[16,16]{1,0}) all-to-all(f32[16,16]{1,0} %v), replica_groups={{0,1}}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    stats = hlo.parse_collectives(SAMPLE_HLO)
+    assert stats["all-reduce"].count == 1
+    assert stats["all-reduce"].raw_bytes == 128 * 256 * 4
+    # ring model: 2 * bytes * (n-1)/n with n=4
+    assert stats["all-reduce"].link_bytes == pytest.approx(
+        2 * 128 * 256 * 4 * 3 / 4)
+    assert stats["all-gather"].count == 1
+    assert stats["all-gather"].raw_bytes == 64 * 512 * 2
+    # iota groups [4,16]: group size 16
+    assert stats["all-gather"].link_bytes == pytest.approx(
+        64 * 512 * 2 * 15 / 16)
+    assert stats["reduce-scatter"].link_bytes == pytest.approx(32 * 4 * 7)
+    assert stats["collective-permute"].link_bytes == 1024 * 4
+    assert stats["all-to-all"].count == 1
