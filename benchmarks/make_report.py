@@ -77,7 +77,7 @@ def build_table() -> str:
 
 def main():
     table = build_table()
-    exp_path = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+    exp_path = os.path.join(os.path.dirname(__file__), "..", "docs", "EXPERIMENTS.md")
     text = open(exp_path).read()
     marker = "<!-- ROOFLINE_TABLE -->"
     head, _, tail = text.partition(marker)

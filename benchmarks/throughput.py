@@ -1,25 +1,87 @@
-"""Paper Fig. 13/15: compression primitive cost breakdown.
+"""Paper Fig. 13/15: compression primitive cost breakdown + exchange sweep.
 
 Times each stage of the pipeline (FFT, select, pack, quantize, and the
 composed compress/decompress) on a 64 MB gradient, jit-compiled on this host,
 and derives projected TPU-v5e stage times from the §III-D throughput model
 (the CPU numbers validate plumbing; the v5e numbers feed the break-even
 analysis and EXPERIMENTS.md §Perf).
+
+Also sweeps bucket size × transport through the cost model (DESIGN.md §9/§11)
+— per-worker wire bits, modeled exchange time, overlap fraction, plus a
+measured host-side per-bucket compress — and writes the result to
+``BENCH_throughput.json`` at the repo root so the perf trajectory is recorded
+per PR.
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, time_fn
-from repro.comms import cost_model as cm
+from repro.comms import bucketing, cost_model as cm
 from repro.core import fft as cfft
 from repro.core import packing, sparsify
 from repro.core.compressor import FFTCompressor, FFTCompressorConfig
 from repro.core.quantizer import RangeQuantConfig, encode, fit_quantizer
 
 N = 1 << 24  # 16M floats = 64 MB
+
+SWEEP_WORKERS = 8
+SWEEP_BUCKET_MB = (None, 1, 4, 16)  # None = monolithic (seed behavior)
+SWEEP_TRANSPORTS = ("allgather", "sequenced", "psum")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_throughput.json")
+
+
+def _sweep_rows(comp: FFTCompressor) -> list:
+    """Bucket size × transport sweep: modeled wire/time + measured compress."""
+    m_bytes = 4 * N
+    payload_bits = comp.wire_bits(N)
+    g = jax.random.normal(jax.random.PRNGKey(1), (N,)) * 0.05
+    rows, records = [], []
+    for bucket_mb in SWEEP_BUCKET_MB:
+        bucket_bytes = None if bucket_mb is None else bucket_mb << 20
+        layout = bucketing.build_layout(N, bucket_bytes)
+        # measured: host-side per-bucket compression of the whole buffer
+        buckets = bucketing.split_buckets(g, layout)
+        compress_all = jax.jit(lambda *bs: [comp.compress(b) for b in bs])
+        us = time_fn(compress_all, *buckets, warmup=1, iters=3)
+        for transport in SWEEP_TRANSPORTS:
+            if transport == "allgather" and layout.n_buckets > 1:
+                continue  # monolithic by definition
+            plan = cm.exchange_time_s(
+                m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+                workers=SWEEP_WORKERS, transport=transport,
+                n_buckets=layout.n_buckets)
+            label = "mono" if bucket_mb is None else f"{bucket_mb}mb"
+            rows.append(Row(
+                name=f"exchange_sweep_{transport}_{label}",
+                us_per_call=round(us, 1),
+                n_buckets=layout.n_buckets,
+                wire_mbits_per_worker=round(plan.wire_bits_per_worker / 1e6, 1),
+                model_exchange_ms=round(plan.exchange_s * 1e3, 3),
+                overlap=round(plan.overlap, 3),
+            ))
+            records.append({
+                "transport": transport,
+                "bucket_mb": bucket_mb,
+                "n_buckets": layout.n_buckets,
+                "workers": SWEEP_WORKERS,
+                "message_mb": m_bytes / (1 << 20),
+                "host_compress_us": round(us, 1),
+                "wire_bits_per_worker": plan.wire_bits_per_worker,
+                "model_exchange_ms": plan.exchange_s * 1e3,
+                "overlap_fraction": plan.overlap,
+            })
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"benchmark": "throughput_exchange_sweep",
+                   "theta": comp.config.theta,
+                   "n_bits": comp.config.n_bits,
+                   "records": records}, f, indent=2)
+    return rows
 
 
 def run() -> list:
@@ -68,4 +130,5 @@ def run() -> list:
         wire_ms_k13_dcn=round(m_bytes / 13 / cm.NETWORKS["tpu-dcn-host"] * 1e3, 3),
         ratio=round(comp.ratio(N), 1),
     ))
+    rows.extend(_sweep_rows(comp))
     return rows

@@ -1,7 +1,22 @@
 """Distributed gradient exchange: dense / compressed / hierarchical reducers
-built on jax.lax collectives under shard_map (no NCCL/MPI emulation)."""
+built on jax.lax collectives under shard_map (no NCCL/MPI emulation).
 
+Three layers (DESIGN.md §8-§9): ``bucketing`` partitions the flat gradient
+into chunk-aligned buckets, ``transport`` exchanges each bucket through a
+pluggable collective strategy, and ``reducers`` composes both under the mesh
+axes (plus error feedback).  ``cost_model`` prices the choices."""
+
+from repro.comms import bucketing, collectives, cost_model, transport
 from repro.comms.reducers import ReducerConfig, make_reducer
-from repro.comms import collectives, cost_model
+from repro.comms.transport import get_transport, TRANSPORT_NAMES
 
-__all__ = ["ReducerConfig", "make_reducer", "collectives", "cost_model"]
+__all__ = [
+    "ReducerConfig",
+    "make_reducer",
+    "bucketing",
+    "collectives",
+    "cost_model",
+    "transport",
+    "get_transport",
+    "TRANSPORT_NAMES",
+]

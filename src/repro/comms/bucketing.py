@@ -1,0 +1,129 @@
+"""Deterministic, chunk-aligned bucketing of the flat gradient space.
+
+The seed reducer concatenated every gradient leaf into ONE flat buffer and
+exchanged it with a single collective — nothing could be pipelined against
+backprop and wire traffic grew O(workers).  This module is layer (1) of the
+bucketed exchange (DESIGN.md §8): it partitions the *flat index space*
+``[0, total)`` into size-targeted buckets whose interior boundaries are
+multiples of the FFT chunk, so that
+
+* every bucket except possibly the last is an exact number of chunks (no
+  padding waste, and per-chunk top-k selection is IDENTICAL to the monolithic
+  path — bucketing never changes which coefficients are kept);
+* unpadding is exact: each bucket remembers its own unpadded length and the
+  compressor slices its zero-padding tail off on inverse;
+* the error-feedback residual (one flat f32 vector, same length as the
+  gradient) is sliced per bucket with the same boundaries, so each bucket
+  owns an independent residual slice (DESIGN.md §8).
+
+The layout is a pure function of ``(total, bucket_bytes, chunk)`` — every
+worker derives the same layout from the same pytree, no negotiation needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as cfft
+
+__all__ = [
+    "BucketLayout",
+    "build_layout",
+    "split_buckets",
+    "concat_buckets",
+    "residual_size",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Partition of the flat index space ``[0, total)`` into buckets.
+
+    ``boundaries`` has ``n_buckets + 1`` entries, starts at 0, ends at
+    ``total``, is strictly increasing, and every interior boundary is a
+    multiple of ``chunk``.
+    """
+
+    total: int
+    boundaries: Tuple[int, ...]
+    chunk: int
+
+    def __post_init__(self):
+        b = self.boundaries
+        if len(b) < 2 or b[0] != 0 or b[-1] != self.total:
+            raise ValueError(f"bad boundaries {b} for total={self.total}")
+        if any(lo >= hi for lo, hi in zip(b, b[1:])):
+            raise ValueError(f"boundaries must be strictly increasing: {b}")
+        if any(x % self.chunk for x in b[1:-1]):
+            raise ValueError(f"interior boundaries must be chunk-aligned: {b}")
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.boundaries) - 1
+
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(
+            hi - lo for lo, hi in zip(self.boundaries, self.boundaries[1:])
+        )
+
+    def bounds(self, b: int) -> Tuple[int, int]:
+        return self.boundaries[b], self.boundaries[b + 1]
+
+
+def build_layout(
+    total: int,
+    bucket_bytes: Optional[int],
+    chunk: int = cfft.DEFAULT_CHUNK,
+    dtype_bytes: int = 4,
+) -> BucketLayout:
+    """Size-targeted partition: ~``bucket_bytes`` per bucket, chunk-aligned.
+
+    ``bucket_bytes=None`` (or a target at least as large as the buffer) yields
+    a single bucket — the seed's monolithic behavior.  The per-bucket element
+    target is rounded UP to a chunk multiple so no bucket is smaller than one
+    chunk; the final bucket absorbs the ragged tail.
+    """
+    if total <= 0:
+        raise ValueError(f"total must be positive, got {total}")
+    if bucket_bytes is None or bucket_bytes >= total * dtype_bytes:
+        return BucketLayout(total, (0, total), chunk)
+    target = max(1, bucket_bytes // dtype_bytes)
+    # round up to a whole number of chunks (alignment floor: one chunk)
+    target = max(chunk, -(-target // chunk) * chunk)
+    boundaries = list(range(0, total, target))
+    # a tail shorter than one chunk rides the previous bucket instead of
+    # becoming a degenerate sub-chunk bucket
+    if total - boundaries[-1] < chunk and len(boundaries) > 1:
+        boundaries.pop()
+    boundaries.append(total)
+    return BucketLayout(total, tuple(boundaries), chunk)
+
+
+def split_buckets(flat: jnp.ndarray, layout: BucketLayout) -> List[jnp.ndarray]:
+    """Static-shape views of the flat buffer, one per bucket."""
+    if flat.shape[0] != layout.total:
+        raise ValueError(f"flat has {flat.shape[0]} elems, layout {layout.total}")
+    return [flat[lo:hi] for lo, hi in zip(layout.boundaries, layout.boundaries[1:])]
+
+
+def concat_buckets(parts: Sequence[jnp.ndarray], layout: BucketLayout) -> jnp.ndarray:
+    """Inverse of :func:`split_buckets`; checks sizes match the layout."""
+    sizes = tuple(int(p.shape[0]) for p in parts)
+    if sizes != layout.sizes():
+        raise ValueError(f"part sizes {sizes} != layout sizes {layout.sizes()}")
+    return parts[0] if len(parts) == 1 else jnp.concatenate(list(parts))
+
+
+def residual_size(params) -> int:
+    """Flat residual length for error-feedback state allocation.
+
+    The residual is one flat vector over the whole gradient; per-bucket
+    residual slices are views through the same :class:`BucketLayout` that
+    splits the gradient, so state allocation needs no layout knowledge.
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(l.size) for l in leaves)

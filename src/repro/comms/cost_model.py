@@ -21,7 +21,9 @@ from __future__ import annotations
 import dataclasses
 
 __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
-           "saved_comm_s", "k_min", "is_beneficial", "NETWORKS"]
+           "saved_comm_s", "k_min", "is_beneficial", "NETWORKS",
+           "bucket_count", "transport_wire_bits", "overlap_fraction",
+           "exchange_time_s", "ExchangePlan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,4 +80,121 @@ def k_min(t_comm: float, thr: Throughputs) -> float:
 def is_beneficial(message_bytes: float, t_comm: float, k: float, thr: Throughputs) -> bool:
     return 2.0 * compression_cost_s(message_bytes, thr) < saved_comm_s(
         message_bytes, t_comm, k
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bucketed, transport-aware exchange model (DESIGN.md §9, §11)
+#
+# The seed model above prices ONE monolithic exchange.  The bucketed reducer
+# adds two degrees of freedom the model must reflect:
+#
+# * transport — which collective carries the payload and therefore how the
+#   per-worker wire volume scales with the worker count P;
+# * bucket count — independent per-bucket collectives let the compression of
+#   bucket i+1 hide behind the wire time of bucket i (software pipelining),
+#   so only the first bucket's compression is exposed.
+# ---------------------------------------------------------------------------
+
+
+def bucket_count(message_bytes: float, bucket_bytes, chunk: int = 4096,
+                 dtype_bytes: int = 4) -> int:
+    """Number of buckets the reducer splits a message into (≥ 1).
+
+    Derived from the SAME layout the reducer builds, so chunk rounding and
+    the sub-chunk tail merge are priced identically to how they execute.
+    """
+    from repro.comms.bucketing import build_layout
+
+    total = max(1, int(-(-message_bytes // dtype_bytes)))
+    return build_layout(total, bucket_bytes, chunk, dtype_bytes).n_buckets
+
+
+def transport_wire_bits(transport: str, payload_bits: float, workers: int) -> float:
+    """Per-worker wire bits to exchange one compressed payload among P workers.
+
+    * ``allgather``/``sequenced`` — every worker materializes all P payloads:
+      P·B per worker (sequenced ships the SAME volume, just split into
+      independent per-bucket collectives so it can be pipelined).
+    * ``psum`` — in-network reduction of the dequantized spectra: each worker
+      injects its kept coefficients once and the reduction happens inside the
+      collective (reduce-scatter over the frequency bins), so the per-worker
+      volume is B, independent of P — O(k) instead of O(P·k).  This is the
+      bandwidth-optimal model; it is what makes the psum transport's wire
+      volume ≤ 1/P of the all-gather transport's at equal theta.
+
+      CAVEAT: the current runtime transport (transport.py) realizes the psum
+      SEMANTICS with a dense-spectrum ``jax.lax.psum`` — its actual wire
+      volume is the dense spectrum, not B.  This function prices the
+      sparse-allreduce endpoint the transport abstraction is built for; use
+      it for trajectory planning, not for predicting today's XLA lowering.
+    """
+    if workers < 1:
+        raise ValueError(f"workers must be >= 1, got {workers}")
+    if transport in ("allgather", "sequenced"):
+        return workers * payload_bits
+    if transport == "psum":
+        return float(payload_bits)
+    raise ValueError(f"unknown transport {transport!r}")
+
+
+def overlap_fraction(n_buckets: int) -> float:
+    """Fraction of compression cost hidden by per-bucket pipelining.
+
+    With n independent bucket exchanges, buckets 2..n compress while earlier
+    buckets are on the wire: (n-1)/n of the compression pipeline is hidden.
+    One bucket means no overlap (the seed's monolithic behavior).
+    """
+    if n_buckets < 1:
+        raise ValueError(f"n_buckets must be >= 1, got {n_buckets}")
+    return (n_buckets - 1) / n_buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """A priced exchange configuration (used by benchmarks/throughput.py)."""
+
+    transport: str
+    n_buckets: int
+    workers: int
+    wire_bits_per_worker: float
+    exchange_s: float
+    overlap: float
+
+
+def exchange_time_s(
+    message_bytes: float,
+    payload_bits: float,
+    t_comm: float,
+    thr: Throughputs,
+    *,
+    workers: int,
+    transport: str = "allgather",
+    n_buckets: int = 1,
+) -> ExchangePlan:
+    """Modeled wall time of one compressed gradient exchange.
+
+    ``payload_bits`` is the compressed wire size of the WHOLE message (the
+    compressor's ``wire_bits``); compression+decompression cost comes from the
+    §III-D throughput model.  Per-bucket pipelining hides the overlap
+    fraction of whichever of (compress, wire) is smaller behind the other; the
+    monolithic transports serialize the two.
+    """
+    comp_s = 2.0 * compression_cost_s(message_bytes, thr)  # compress + decompress
+    wire_per_worker = transport_wire_bits(transport, payload_bits, workers)
+    wire_s = wire_per_worker / 8.0 / t_comm
+    if transport == "allgather" or n_buckets <= 1:
+        total = comp_s + wire_s
+        ov = 0.0
+    else:
+        # pipeline: first bucket's smaller stage fills, the rest overlaps
+        ov = overlap_fraction(n_buckets)
+        total = max(comp_s, wire_s) + min(comp_s, wire_s) * (1.0 - ov)
+    return ExchangePlan(
+        transport=transport,
+        n_buckets=n_buckets,
+        workers=workers,
+        wire_bits_per_worker=wire_per_worker,
+        exchange_s=total,
+        overlap=ov,
     )

@@ -5,9 +5,9 @@ or two named mesh axes.  Variants:
 
 * ``dense``        — jax.lax.pmean (the paper's "orig" baseline).
 * ``fft``          — the paper: per-shard FFT -> theta-drop -> range-quant ->
-                     pack -> **all-gather of payloads** -> frequency-domain sum
-                     -> single inverse FFT.  FFT linearity (sum of spectra =
-                     spectrum of sum) means one iFFT per step regardless of
+                     pack -> compressed exchange -> frequency-domain sum ->
+                     single inverse FFT per bucket.  FFT linearity (sum of
+                     spectra = spectrum of sum) means one iFFT regardless of
                      the worker count (beyond-paper; DESIGN.md §10).
 * ``timedomain``   — DGC/Aji-style top-k exchange (paper Fig. 12 baseline).
 * ``terngrad`` / ``qsgd`` — quantization baselines (paper Table I).
@@ -16,24 +16,42 @@ or two named mesh axes.  Variants:
                      all-gather intra-pod.  This is the faithful adaptation of
                      "compress the bandwidth-limited exchange" to a TPU fleet.
 
-Leaf bucketing: gradients are flattened and concatenated into one buffer
-before compression (better chunk utilization + one FFT dispatch), then split
-back.  Leaves smaller than ``min_leaf_size`` in aggregate still ride the
-bucket — correctness is unaffected because unpadding is exact.
+The compressed exchange is a three-layer subsystem (DESIGN.md §8-§9):
+
+1. **bucketing** — the gradient pytree is flattened, concatenated, and split
+   into size-targeted, chunk-aligned buckets (``comms.bucketing``).  With
+   ``bucket_bytes=None`` the whole buffer is one bucket (seed behavior).
+2. **transport** — each bucket rides a pluggable collective strategy
+   (``comms.transport``): ``allgather`` (one monolithic payload all_gather),
+   ``sequenced`` (one independent all_gather per bucket, overlappable by
+   XLA's latency-hiding scheduler), or ``psum`` (spectrum-psum: dequantize
+   locally, psum spectra, one iFFT — O(k) wire instead of O(P·k)).
+3. **this module** — flatten/split, hierarchical axis composition, and the
+   per-bucket error-feedback residual slices.
+
+Leaves smaller than a chunk still ride their bucket — correctness is
+unaffected because unpadding is exact, and because interior bucket boundaries
+are chunk multiples the per-chunk top-k selection is identical at every
+bucket granularity.
 
 Error feedback (optional, default off — the paper's method is memoryless):
 ``make_reducer`` returns a (reduce_fn, init_residual_fn) pair when
-``config.error_feedback`` is set; the train step threads the residual.
+``config.error_feedback`` is set; the train step threads the residual as one
+flat vector, and this module slices it per bucket with the same layout that
+splits the gradient, so each bucket accumulates exactly what ITS transport
+granularity dropped (per-bucket quantizers included).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.comms import bucketing
+from repro.comms.transport import TRANSPORT_NAMES, get_transport
 from repro.core import baselines as B
 from repro.core.compressor import (
     FFTCompressor,
@@ -41,7 +59,13 @@ from repro.core.compressor import (
     TimeDomainCompressor,
 )
 
-__all__ = ["ReducerConfig", "make_reducer", "flatten_tree", "unflatten_tree"]
+__all__ = [
+    "ReducerConfig",
+    "make_reducer",
+    "flatten_tree",
+    "unflatten_tree",
+    "residual_size",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +111,18 @@ class ReducerConfig:
     range_mode: str = "auto"
     fixed_range: Tuple[float, float] = (-1.0, 1.0)
     error_feedback: bool = False
+    # bucketed exchange (DESIGN.md §8-§9): target bucket size in bytes of the
+    # f32 gradient (None = one monolithic bucket) and the collective strategy
+    bucket_bytes: Optional[int] = None
+    transport: str = "allgather"  # allgather|sequenced|psum
+
+    def __post_init__(self):
+        if self.transport not in TRANSPORT_NAMES:
+            raise ValueError(
+                f"unknown transport {self.transport!r}; expected {TRANSPORT_NAMES}"
+            )
+        if self.bucket_bytes is not None and self.bucket_bytes <= 0:
+            raise ValueError(f"bucket_bytes must be positive, got {self.bucket_bytes}")
 
     def compressor_config(self) -> FFTCompressorConfig:
         return FFTCompressorConfig(
@@ -99,43 +135,23 @@ class ReducerConfig:
             fixed_range=self.fixed_range,
         )
 
+    def layout_for(self, total: int) -> bucketing.BucketLayout:
+        return bucketing.build_layout(total, self.bucket_bytes, self.chunk)
+
 
 def _mean_over(x, axis):
     return jax.lax.pmean(x, axis)
 
 
-def _fft_exchange(flat: jnp.ndarray, comp: FFTCompressor, axis: str) -> jnp.ndarray:
-    """Compressed allreduce of a flat buffer: payload all-gather + spectrum sum."""
-    payload = comp.compress(flat)
-    gathered = jax.lax.all_gather(payload, axis)  # leading axis: workers
-    spectra = jax.vmap(comp.decompress_spectrum)(gathered)
-    mean_spectrum = jnp.mean(spectra, axis=0)
-    from repro.core import fft as cfft
-
-    return cfft.chunked_irfft(mean_spectrum, payload.orig_len, payload.chunk)
-
-
-def _payload_exchange(flat: jnp.ndarray, comp, axis: str) -> jnp.ndarray:
-    """Generic compressed allreduce: all-gather payloads, decompress, average."""
-    payload = comp.compress(flat)
-    gathered = jax.lax.all_gather(payload, axis)
-    decompressed = jax.vmap(comp.decompress)(gathered)
-    return jnp.mean(decompressed, axis=0)
-
-
-def _make_flat_exchange(config: ReducerConfig) -> Callable[[jnp.ndarray, str], jnp.ndarray]:
+def _make_compressor(config: ReducerConfig):
     if config.kind in ("fft", "hierarchical"):
-        comp = FFTCompressor(config.compressor_config())
-        return lambda flat, axis: _fft_exchange(flat, comp, axis)
+        return FFTCompressor(config.compressor_config())
     if config.kind == "timedomain":
-        comp = TimeDomainCompressor(config.compressor_config())
-        return lambda flat, axis: _payload_exchange(flat, comp, axis)
+        return TimeDomainCompressor(config.compressor_config())
     if config.kind == "terngrad":
-        comp = B.TernGrad()
-        return lambda flat, axis: _payload_exchange(flat, comp, axis)
+        return B.TernGrad()
     if config.kind == "qsgd":
-        comp = B.QSGD()
-        return lambda flat, axis: _payload_exchange(flat, comp, axis)
+        return B.QSGD()
     raise ValueError(f"unknown compressed reducer kind {config.kind!r}")
 
 
@@ -161,7 +177,14 @@ def make_reducer(config: ReducerConfig):
 
         return dense_reduce
 
-    exchange = _make_flat_exchange(config)
+    comp = _make_compressor(config)
+    transport = get_transport(config.transport)
+
+    def _exchange_flat(flat: jnp.ndarray, axis: str) -> jnp.ndarray:
+        layout = config.layout_for(flat.shape[0])
+        buckets = bucketing.split_buckets(flat, layout)
+        means = transport.exchange(buckets, comp, axis)
+        return bucketing.concat_buckets(means, layout)
 
     def compressed_reduce(grads):
         flat, shapes, treedef = flatten_tree(grads)
@@ -173,9 +196,9 @@ def make_reducer(config: ReducerConfig):
                 flat = _mean_over(flat, config.axis)
             # 2) compressed exchange over the slow pod axis (DCN)
             if config.pod_axis is not None:
-                flat = exchange(flat, config.pod_axis)
+                flat = _exchange_flat(flat, config.pod_axis)
         else:
-            flat = exchange(flat, config.axis)
+            flat = _exchange_flat(flat, config.axis)
             if config.pod_axis is not None:
                 flat = _mean_over(flat, config.pod_axis)
         return unflatten_tree(flat, shapes, treedef)
@@ -183,24 +206,27 @@ def make_reducer(config: ReducerConfig):
     if not config.error_feedback:
         return compressed_reduce
 
-    comp_cfg = config.compressor_config()
-    comp = (
-        FFTCompressor(comp_cfg)
-        if config.kind in ("fft", "hierarchical")
-        else TimeDomainCompressor(comp_cfg)
-    )
-
     def ef_reduce(grads, residual_flat):
         flat, shapes, treedef = flatten_tree(grads)
         if config.kind == "hierarchical" and config.axis:
             flat = _mean_over(flat, config.axis)
-        corrected = flat + residual_flat
-        # local residual: what compression dropped on THIS worker
-        local_payload = comp.compress(corrected)
-        local_hat = comp.decompress(local_payload)
-        new_residual = corrected - local_hat
+        layout = config.layout_for(flat.shape[0])
+        corrected = [
+            b + r
+            for b, r in zip(
+                bucketing.split_buckets(flat, layout),
+                bucketing.split_buckets(residual_flat, layout),
+            )
+        ]
+        # per-bucket residual: what THIS transport's compression granularity
+        # dropped on this worker (matches per-bucket quantizer fits)
+        local_hats = transport.local_roundtrip(corrected, comp)
+        new_residual = bucketing.concat_buckets(
+            [c - h for c, h in zip(corrected, local_hats)], layout
+        )
         axis = config.pod_axis if config.kind == "hierarchical" else config.axis
-        mean_flat = exchange(corrected, axis)
+        means = transport.exchange(corrected, comp, axis)
+        mean_flat = bucketing.concat_buckets(means, layout)
         if config.kind != "hierarchical" and config.pod_axis is not None:
             mean_flat = _mean_over(mean_flat, config.pod_axis)
         return unflatten_tree(mean_flat, shapes, treedef), new_residual
@@ -210,5 +236,4 @@ def make_reducer(config: ReducerConfig):
 
 def residual_size(params) -> int:
     """Flat residual length for error-feedback state allocation."""
-    leaves = jax.tree_util.tree_leaves(params)
-    return sum(int(l.size) for l in leaves)
+    return bucketing.residual_size(params)

@@ -1,0 +1,175 @@
+"""Pluggable exchange strategies for compressed gradient buckets.
+
+Layer (2) of the bucketed exchange (DESIGN.md §9).  A transport turns a list
+of per-bucket flat gradients into the list of their cross-worker means, using
+one compressor.  All transports compute the SAME mean — mean over the axis of
+the per-worker dequantized reconstructions — they differ in which collective
+carries the bytes and at what granularity:
+
+========== =========================== ============================== =========
+name       collective                  per-worker wire (cost model)   overlap
+========== =========================== ============================== =========
+allgather  one all_gather of the       P · B  (P payloads land on     none
+           monolithic payload          every worker)
+sequenced  one all_gather PER BUCKET   P · B  total, issued as        buckets
+           (independent collectives)   n_buckets independent ops      pipeline
+psum       per-bucket psum of the      B      (in-network reduction:  buckets
+           locally dequantized         each worker injects its kept
+           spectrum                    coefficients once; P-free)
+========== =========================== ============================== =========
+
+``B = comp.wire_bits(n)`` at equal theta; see ``cost_model.transport_wire_bits``
+for the model the acceptance tests assert against (the psum column prices the
+sparse-allreduce endpoint; today's lowering is a dense-spectrum psum — see
+``_psum_mean_payload``).
+
+The psum transport exploits FFT linearity (DESIGN.md §10): sum of spectra ==
+spectrum of the sum, so workers dequantize locally, sum spectra with a single
+``psum``, and run ONE inverse FFT on the mean spectrum.  For non-spectral
+compressors (timedomain/terngrad/qsgd) it degrades gracefully to a psum of the
+dense local reconstruction — still numerically identical to the all-gather
+mean, still O(1) payloads per worker in the cost model.
+
+Quantizer granularity: the monolithic ``allgather`` transport fits ONE
+quantizer over the whole buffer (seed behavior); ``sequenced`` and ``psum``
+compress per bucket, so each bucket fits its own range (small buckets stop
+inheriting a global range — see ``FFTCompressor.compress_buckets``).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comms.collectives import axis_size
+from repro.core import fft as cfft
+
+__all__ = ["Transport", "get_transport", "TRANSPORT_NAMES"]
+
+TRANSPORT_NAMES = ("allgather", "sequenced", "psum")
+
+
+def _compress_all(buckets: Sequence[jnp.ndarray], comp) -> List:
+    """Per-bucket payloads; FFTCompressor fits one quantizer per bucket."""
+    if hasattr(comp, "compress_buckets"):
+        return comp.compress_buckets(buckets)
+    return [comp.compress(b) for b in buckets]
+
+
+def _gather_mean_payload(payload, comp, axis: str) -> jnp.ndarray:
+    """Seed exchange: all_gather one payload -> mean reconstruction.
+
+    For spectral compressors the mean is taken in the frequency domain and a
+    single inverse FFT recovers the time-domain mean (FFT linearity).
+    """
+    gathered = jax.lax.all_gather(payload, axis)  # leading axis: workers
+    if hasattr(comp, "decompress_spectrum"):
+        spectra = jax.vmap(comp.decompress_spectrum)(gathered)
+        mean_spectrum = jnp.mean(spectra, axis=0)
+        return cfft.chunked_irfft(mean_spectrum, payload.orig_len, payload.chunk)
+    decompressed = jax.vmap(comp.decompress)(gathered)
+    return jnp.mean(decompressed, axis=0)
+
+
+def _psum_mean_payload(payload, comp, axis: str) -> jnp.ndarray:
+    """Dequantize locally -> psum -> /P (-> one iFFT if spectral).
+
+    NOTE: ``jax.lax.psum`` here moves the DENSE dequantized spectrum — this
+    is the reference implementation of the psum semantics, not the O(k)
+    wire-optimal sparse allreduce the cost model prices (see
+    ``cost_model.transport_wire_bits``).  Even dense it beats the payload
+    all-gather once P > 2F/k, and XLA may further optimize the reduction.
+    """
+    inv_p = 1.0 / axis_size(axis)
+    if hasattr(comp, "decompress_spectrum"):
+        spec = comp.decompress_spectrum(payload)
+        # psum real/imag planes separately: complex psum support varies by
+        # backend, and two f32 reductions lower to one fused collective anyway
+        summed = jax.lax.psum(jnp.stack([spec.real, spec.imag]), axis)
+        mean_spectrum = (summed[0] + 1j * summed[1]) * inv_p
+        return cfft.chunked_irfft(mean_spectrum, payload.orig_len, payload.chunk)
+    return jax.lax.psum(comp.decompress(payload), axis) * inv_p
+
+
+class Transport:
+    """Exchange interface: per-bucket flats in, per-bucket means out.
+
+    ``local_roundtrip`` exposes the compress->decompress reconstruction at the
+    SAME granularity the transport ships at, so error feedback accumulates
+    exactly what this transport drops (per-bucket quantizers and all).
+    """
+
+    name: str = "base"
+
+    def exchange(self, buckets: Sequence[jnp.ndarray], comp, axis: str) -> List[jnp.ndarray]:
+        raise NotImplementedError
+
+    def local_roundtrip(self, buckets: Sequence[jnp.ndarray], comp) -> List[jnp.ndarray]:
+        return [comp.decompress(p) for p in _compress_all(buckets, comp)]
+
+
+class AllGatherTransport(Transport):
+    """Seed behavior: ONE monolithic payload all_gather, global quantizer."""
+
+    name = "allgather"
+
+    def exchange(self, buckets, comp, axis):
+        sizes = [int(b.shape[0]) for b in buckets]
+        flat = buckets[0] if len(buckets) == 1 else jnp.concatenate(list(buckets))
+        mean = _gather_mean_payload(comp.compress(flat), comp, axis)
+        return _resplit(mean, sizes)
+
+    def local_roundtrip(self, buckets, comp):
+        sizes = [int(b.shape[0]) for b in buckets]
+        flat = buckets[0] if len(buckets) == 1 else jnp.concatenate(list(buckets))
+        return _resplit(comp.decompress(comp.compress(flat)), sizes)
+
+
+class SequencedTransport(Transport):
+    """One all_gather PER BUCKET: n_buckets independent collectives.
+
+    The collectives have no data dependencies between them, so XLA's
+    latency-hiding scheduler is free to overlap bucket i's wire time with
+    bucket i+1's compression (and with backprop once the reducer is fused
+    into the step).  Each bucket fits its own quantizer range.
+    """
+
+    name = "sequenced"
+
+    def exchange(self, buckets, comp, axis):
+        payloads = _compress_all(buckets, comp)
+        return [_gather_mean_payload(p, comp, axis) for p in payloads]
+
+
+class SpectrumPsumTransport(Transport):
+    """Per-bucket psum of dequantized spectra: O(k) wire, P-independent."""
+
+    name = "psum"
+
+    def exchange(self, buckets, comp, axis):
+        payloads = _compress_all(buckets, comp)
+        return [_psum_mean_payload(p, comp, axis) for p in payloads]
+
+
+def _resplit(flat: jnp.ndarray, sizes: List[int]) -> List[jnp.ndarray]:
+    out, off = [], 0
+    for s in sizes:
+        out.append(flat[off : off + s])
+        off += s
+    return out
+
+
+_TRANSPORTS = {
+    t.name: t for t in (AllGatherTransport(), SequencedTransport(), SpectrumPsumTransport())
+}
+
+
+def get_transport(name: str) -> Transport:
+    try:
+        return _TRANSPORTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {name!r}; expected one of {TRANSPORT_NAMES}"
+        ) from None

@@ -54,7 +54,7 @@ class FFTPayload:
 
     re: jnp.ndarray  # (c, k) codes (uintN) or f32 when quantization is off
     im: jnp.ndarray  # (c, k)
-    idx: jnp.ndarray  # (c, k) int32 bin indices (wire-counted as 16 bits)
+    idx: jnp.ndarray  # (c, k) int16 bin indices (chunk <= 4096 fits; 16 wire bits)
     quant: Optional[FittedQuantizer]  # None when quantization is off
     orig_len: int = dataclasses.field(metadata={"static": True})
     chunk: int = dataclasses.field(metadata={"static": True})
@@ -79,6 +79,14 @@ class FFTCompressorConfig:
     range_mode: str = "auto"  # "auto": per-call min/max; "fixed": use fixed_range
     fixed_range: Tuple[float, float] = (-1.0, 1.0)  # paper: [-1,1] AlexNet, [-6,6] ResNet
     index_bits: int = 16
+
+    def __post_init__(self):
+        # payloads carry int16 indices (and bill index_bits=16 on the wire);
+        # a chunk beyond int16 range would silently wrap top-k indices
+        if self.chunk > 32767:
+            raise ValueError(f"chunk must be <= 32767 (int16 indices), got {self.chunk}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be positive, got {self.chunk}")
 
     def with_theta(self, theta: float) -> "FFTCompressorConfig":
         return dataclasses.replace(self, theta=theta)
@@ -135,6 +143,16 @@ class FFTCompressor:
         spectrum = self.decompress_spectrum(payload)
         return cfft.chunked_irfft(spectrum, payload.orig_len, payload.chunk)
 
+    def compress_buckets(self, bucket_flats) -> list:
+        """Per-bucket compression: each bucket fits its OWN quantizer range.
+
+        The monolithic path fits one (min, max) over the whole gradient, so a
+        small bucket whose spectrum lives in a narrow band inherits a global
+        range and wastes most of its codes.  Compressing per bucket keeps the
+        range local (DESIGN.md §8); the bucketed transports rely on this.
+        """
+        return [self.compress(b) for b in bucket_flats]
+
     # -- size accounting ----------------------------------------------------
     def wire_bits(self, n: int) -> int:
         cfg = self.config
@@ -171,7 +189,9 @@ class TimeDomainCompressor:
             vals = q_encode(vals, quant)
         else:
             quant = None
-        return FFTPayload(vals, jnp.zeros_like(vals), idx.astype(jnp.int32), quant, n, cfg.chunk)
+        # int16 indices, same as FFTPayload's frequency path: chunk <= 4096
+        # fits and the wire accounting (index_bits=16) matches the payload
+        return FFTPayload(vals, jnp.zeros_like(vals), idx.astype(jnp.int16), quant, n, cfg.chunk)
 
     def decompress(self, payload: FFTPayload) -> jnp.ndarray:
         vals = payload.re

@@ -26,6 +26,8 @@ import time
 import traceback
 
 import jax
+
+from repro import jaxcompat as compat
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -223,7 +225,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool, mode: str = "pjit",
     plen = len(cfg.layer_pattern())
     g_full = cfg.n_groups()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         # 1) FULL-depth compile: proves lowering + sharding + memory fit.
         compiled, kind, tokens = _lower_cell(
             cfg, shape, mesh, mesh_axes, multi_pod=multi_pod, mode=mode, theta=theta)

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.jaxcompat import make_auto_mesh
+
 __all__ = ["make_production_mesh", "make_local_mesh"]
 
 
@@ -18,9 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     ("pod", "data", "model") — 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)
 
 
 def make_local_mesh(shape=None, axes=None):
@@ -28,6 +28,4 @@ def make_local_mesh(shape=None, axes=None):
     n = len(jax.devices())
     if shape is None:
         shape, axes = (n,), ("data",)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_auto_mesh(shape, axes)

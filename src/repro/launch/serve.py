@@ -8,6 +8,8 @@ from __future__ import annotations
 import argparse
 
 import jax
+
+from repro import jaxcompat as compat
 import jax.numpy as jnp
 
 from repro.launch.mesh import make_local_mesh
@@ -31,7 +33,7 @@ def main(argv=None):
     model = registry.build(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mesh = make_local_mesh()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         engine = Engine(model, params, ServeConfig(
             max_seq=args.prompt_len + args.new_tokens + 8,
             batch=args.batch, temperature=args.temperature))

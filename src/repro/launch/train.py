@@ -17,6 +17,8 @@ import argparse
 
 import jax
 
+from repro import jaxcompat as compat
+
 from repro.comms.reducers import ReducerConfig
 from repro.core import schedules as theta_schedules
 from repro.data import SyntheticConfig, SyntheticStream
@@ -43,6 +45,12 @@ def main(argv=None):
     ap.add_argument("--theta-schedule", default="constant",
                     choices=["constant", "step", "thm35"])
     ap.add_argument("--error-feedback", action="store_true")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="bucketed exchange: target bucket size in MB "
+                         "(default: one monolithic bucket)")
+    ap.add_argument("--transport", default="allgather",
+                    choices=["allgather", "sequenced", "psum"],
+                    help="collective strategy for the compressed exchange")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -67,6 +75,8 @@ def main(argv=None):
             pod_axis="pod" if "pod" in mesh.axis_names else None,
             theta=args.theta,
             error_feedback=args.error_feedback,
+            bucket_bytes=int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None,
+            transport=args.transport,
         )
     step_cfg = StepConfig(
         mode=args.mode,
@@ -113,7 +123,7 @@ def main(argv=None):
         theta_schedule=theta_sched,
         lr_schedule=lr_schedules.warmup_cosine(max(2, args.steps // 10), args.steps),
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         result = train_loop(model, opt_cfg, step_cfg, mesh, state, stream, loop_cfg)
     for row in result["history"]:
         print({k: (round(v, 4) if isinstance(v, float) else v) for k, v in row.items()})

@@ -1,4 +1,10 @@
-"""Train state: params + optimizer state + step counter (+ EF residual)."""
+"""Train state: params + optimizer state + step counter (+ EF residual).
+
+The error-feedback residual is ONE flat f32 vector over the whole gradient,
+regardless of how the reducer buckets the exchange: the bucket layout is a
+pure function of the flat length (comms/bucketing.py), so per-bucket residual
+slices are views the reducer takes at trace time — state allocation and
+checkpoints stay layout-independent (rebucketing a restored run is free)."""
 
 from __future__ import annotations
 
@@ -7,6 +13,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.comms.bucketing import residual_size
 from repro.optim import OptConfig, init_opt_state
 
 __all__ = ["TrainState", "init_state", "abstract_state"]
@@ -23,8 +30,7 @@ def init_state(key, model, opt_cfg: OptConfig, *, error_feedback: bool = False,
         "step": jnp.zeros((), jnp.int32),
     }
     if error_feedback:
-        n = sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
-        state["residual"] = jnp.zeros((n,), jnp.float32)
+        state["residual"] = jnp.zeros((residual_size(params),), jnp.float32)
     return state
 
 
@@ -43,6 +49,6 @@ def abstract_state(model, opt_cfg: OptConfig, *, error_feedback: bool = False,
     )
     state["params"] = params
     if error_feedback:
-        n = sum(int(l.size) for l in jax.tree_util.tree_leaves(params))
+        n = residual_size(params)
         state["residual"] = jax.ShapeDtypeStruct((n,), jnp.float32)
     return state

@@ -22,6 +22,15 @@ Three modes (StepConfig.mode):
 All modes share: grad -> [reduce] -> global-norm clip -> optimizer -> new
 state, with theta threaded statically (a theta-schedule change rebuilds the
 step — bounded recompiles, see core/schedules.py).
+
+The compressed exchange is bucketed and transport-pluggable (DESIGN.md
+§8-§9): ``ReducerConfig.bucket_bytes`` splits the flat gradient into
+chunk-aligned buckets and ``ReducerConfig.transport`` picks the collective
+(``allgather`` | ``sequenced`` | ``psum``).  The ``sequenced`` transport
+issues one independent collective per bucket, which is what lets XLA's
+latency-hiding scheduler overlap bucket exchanges with the remaining
+backprop/optimizer compute inside this step.  The EF residual stays ONE flat
+vector in the state; per-bucket slices are taken inside the reducer.
 """
 
 from __future__ import annotations
@@ -33,6 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import jaxcompat as compat
 from repro.comms.reducers import ReducerConfig, make_reducer
 from repro.models.sharding import spec_tree_to_pspecs
 from repro.models.transformer import MeshCtx
@@ -206,19 +216,14 @@ def build_train_step(
         # the auto ('data'/'model') sharding of the batch comes from the
         # model's internal constraints
         batch_specs = jax.tree_util.tree_map(lambda _: P(manual), batch)
-        step_sm = jax.shard_map(
+        step_sm = compat.shard_map(
             inner,
-            mesh=mesh,
+            mesh,
             in_specs=(state_in_specs(state), batch_specs),
             out_specs=(state_in_specs(state), P()),
-            axis_names=frozenset(manual),
-            check_vma=False,
+            manual_axes=manual,
         )
         return step_sm(state, batch)
-
-    def wrapped(state, batch):
-        with jax.set_mesh(mesh):
-            return jax.jit(step, donate_argnums=(0,) if donate else ())(state, batch)
 
     # NOTE: composing jit-level in_shardings (FSDP over the auto axes) with
     # the partial-manual shard_map check-fails inside XLA's SPMD partitioner
@@ -234,11 +239,11 @@ def build_train_step(
         batch_sharding = batch_sh_manual
 
         def __call__(self, state, batch):
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 return jitted(state, jax.device_put(batch, batch_sh_manual))
 
         def lower(self, state, batch):
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 return jitted.lower(state, batch)
 
     return _Step()

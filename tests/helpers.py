@@ -1,8 +1,15 @@
-"""Test helpers: subprocess runner for multi-device (fake CPU devices) tests.
+"""Test helpers: subprocess runner for multi-device (fake CPU devices) tests,
+plus a hypothesis compatibility shim.
 
 XLA_FLAGS=--xla_force_host_platform_device_count must be set before jax
 imports, and the main test process must keep its single device (per the
 dry-run instructions), so multi-device tests run in a child process.
+
+Hypothesis shim: property tests import ``given``/``settings``/``st`` from
+here.  When hypothesis is installed they are the real thing; on a clean
+environment they fall back to a deterministic mini-runner that exercises each
+strategy's boundary examples, so the suite still runs (and still covers the
+properties at a few fixed points) without the dependency.
 """
 
 from __future__ import annotations
@@ -12,6 +19,62 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# ---------------------------------------------------------------------------
+# hypothesis-or-fallback: deterministic boundary examples when absent
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _Examples:
+        """A 'strategy' that is just a fixed list of boundary examples."""
+
+        def __init__(self, xs):
+            self.xs = list(xs)
+
+    class _FallbackStrategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Examples([lo, (lo + hi) // 2, hi])
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Examples([lo, (lo + hi) / 2.0, hi])
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Examples(xs)
+
+    st = _FallbackStrategies()
+
+    def settings(**_kwargs):  # noqa: D401 - mirrors hypothesis.settings
+        return lambda fn: fn
+
+    def given(**strategies):
+        """Run the test once per zipped-and-cycled boundary example set."""
+        n = max(len(s.xs) for s in strategies.values())
+        cases = [
+            {k: s.xs[i % len(s.xs)] for k, s in strategies.items()}
+            for i in range(n)
+        ]
+
+        def deco(fn):
+            def wrapper():
+                for case in cases:
+                    fn(**case)
+
+            # no functools.wraps: pytest would follow __wrapped__ back to the
+            # original signature and demand its parameters as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
 
 
 def run_with_devices(code: str, devices: int = 8, timeout: int = 480) -> str:

@@ -1,0 +1,153 @@
+"""Bucket layout invariants + the transport cost-model acceptance bound."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import given, settings, st
+
+from repro.comms import bucketing, cost_model as cm
+from repro.comms.transport import TRANSPORT_NAMES, get_transport
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+
+CHUNK = 4096
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    total=st.integers(1, 40 * CHUNK + 137),
+    bucket_chunks=st.integers(1, 8),
+)
+def test_layout_partitions_exactly(total, bucket_chunks):
+    layout = bucketing.build_layout(total, bucket_chunks * CHUNK * 4, CHUNK)
+    b = layout.boundaries
+    assert b[0] == 0 and b[-1] == total
+    assert all(lo < hi for lo, hi in zip(b, b[1:]))
+    assert all(x % CHUNK == 0 for x in b[1:-1])
+    assert sum(layout.sizes()) == total
+    # deterministic: same inputs -> same layout
+    assert layout == bucketing.build_layout(total, bucket_chunks * CHUNK * 4, CHUNK)
+
+
+def test_layout_monolithic_when_unset_or_large():
+    for bucket_bytes in (None, 10**12):
+        layout = bucketing.build_layout(3 * CHUNK + 5, bucket_bytes, CHUNK)
+        assert layout.n_buckets == 1
+        assert layout.boundaries == (0, 3 * CHUNK + 5)
+
+
+def test_layout_no_sub_chunk_tail_bucket():
+    # tail shorter than a chunk rides the previous bucket
+    total = 2 * CHUNK + 7
+    layout = bucketing.build_layout(total, CHUNK * 4, CHUNK)
+    assert layout.sizes()[-1] >= CHUNK or layout.n_buckets == 1
+    assert sum(layout.sizes()) == total
+
+
+def test_split_concat_roundtrip_with_ragged_tail():
+    total = 5 * CHUNK + 321
+    x = jnp.arange(total, dtype=jnp.float32)
+    layout = bucketing.build_layout(total, 2 * CHUNK * 4, CHUNK)
+    parts = bucketing.split_buckets(x, layout)
+    assert [int(p.shape[0]) for p in parts] == list(layout.sizes())
+    back = bucketing.concat_buckets(parts, layout)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_split_rejects_wrong_length():
+    layout = bucketing.build_layout(CHUNK, None, CHUNK)
+    with pytest.raises(ValueError):
+        bucketing.split_buckets(jnp.zeros(CHUNK + 1), layout)
+
+
+def test_residual_slices_partition_the_flat_space():
+    """Per-bucket residual slices are exactly the gradient's bucket bounds."""
+    params = {"w": jnp.zeros((3, CHUNK)), "b": jnp.zeros((17,))}
+    n = bucketing.residual_size(params)
+    assert n == 3 * CHUNK + 17
+    layout = bucketing.build_layout(n, CHUNK * 4, CHUNK)
+    covered = []
+    for i in range(layout.n_buckets):
+        lo, hi = layout.bounds(i)
+        covered.extend(range(lo, hi))
+    assert covered == list(range(n))
+
+
+def test_reducer_config_accepts_bucket_bytes_and_transport():
+    from repro.comms import ReducerConfig, make_reducer
+
+    cfg = ReducerConfig(kind="fft", axis="data", bucket_bytes=1 << 20,
+                        transport="psum")
+    assert cfg.layout_for(1 << 20).n_buckets == 4
+    assert callable(make_reducer(cfg))
+    with pytest.raises(ValueError):
+        ReducerConfig(kind="fft", transport="carrier-pigeon")
+    with pytest.raises(ValueError):
+        ReducerConfig(kind="fft", bucket_bytes=0)
+
+
+def test_transport_registry():
+    for name in TRANSPORT_NAMES:
+        assert get_transport(name).name == name
+    with pytest.raises(ValueError):
+        get_transport("nope")
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+
+def test_psum_wire_at_most_one_over_p_of_allgather():
+    """Acceptance bound: at equal theta, the spectrum-psum transport's
+    per-worker wire bits are <= 1/P of the all-gather transport's."""
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    n = 1 << 24
+    payload_bits = comp.wire_bits(n)
+    for workers in (2, 4, 8, 64, 256):
+        ag = cm.transport_wire_bits("allgather", payload_bits, workers)
+        ps = cm.transport_wire_bits("psum", payload_bits, workers)
+        assert ps <= ag / workers, (workers, ps, ag)
+
+
+def test_sequenced_ships_allgather_volume():
+    assert cm.transport_wire_bits("sequenced", 1000, 8) == cm.transport_wire_bits(
+        "allgather", 1000, 8
+    )
+
+
+def test_bucket_count_and_overlap():
+    assert cm.bucket_count(64 << 20, None) == 1
+    assert cm.bucket_count(64 << 20, 4 << 20) == 16
+    assert cm.overlap_fraction(1) == 0.0
+    assert cm.overlap_fraction(16) == pytest.approx(15 / 16)
+
+
+def test_pipelined_exchange_never_slower_than_monolithic():
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    m_bytes = 64 << 20
+    payload_bits = comp.wire_bits(m_bytes // 4)
+    for transport in ("sequenced", "psum"):
+        for n_buckets in (2, 4, 16):
+            mono = cm.exchange_time_s(
+                m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+                workers=8, transport=transport, n_buckets=1)
+            piped = cm.exchange_time_s(
+                m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+                workers=8, transport=transport, n_buckets=n_buckets)
+            assert piped.exchange_s <= mono.exchange_s + 1e-12
+            assert piped.overlap > 0.0
+
+
+def test_psum_exchange_faster_than_allgather_at_scale():
+    """The O(k) wire term makes psum win once P is large enough."""
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    m_bytes = 64 << 20
+    payload_bits = comp.wire_bits(m_bytes // 4)
+    t = cm.NETWORKS["tpu-dcn-host"]
+    ag = cm.exchange_time_s(m_bytes, payload_bits, t, cm.TPU_V5E,
+                            workers=64, transport="allgather", n_buckets=1)
+    ps = cm.exchange_time_s(m_bytes, payload_bits, t, cm.TPU_V5E,
+                            workers=64, transport="psum", n_buckets=1)
+    assert ps.exchange_s < ag.exchange_s

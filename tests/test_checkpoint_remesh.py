@@ -7,10 +7,10 @@ def test_save_on_2x4_restore_on_8_and_4x2():
     out = run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np, tempfile, os
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.jaxcompat import make_auto_mesh
 from repro.train import checkpoint as ckpt
 
-mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_a = make_auto_mesh((2, 4), ("data", "model"))
 state = {
     "params": {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
                "b": jnp.ones((8,))},
@@ -25,7 +25,7 @@ d = tempfile.mkdtemp()
 ckpt.save(d, 5, sharded)
 
 # restore onto a 1-D 8-way mesh with a different layout
-mesh_b = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh_b = make_auto_mesh((8,), ("x",))
 sh_b = jax.tree.map(lambda _: NamedSharding(mesh_b, P()), state)
 sh_b["params"]["w"] = NamedSharding(mesh_b, P("x", None))
 restored, step = ckpt.restore(d, state, shardings=sh_b)
@@ -35,8 +35,7 @@ np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
 assert restored["params"]["w"].sharding.spec == P("x", None)
 
 # and onto a transposed 4x2 mesh
-mesh_c = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_c = make_auto_mesh((4, 2), ("data", "model"))
 sh_c = jax.tree.map(lambda _: NamedSharding(mesh_c, P()), state)
 sh_c["params"]["w"] = NamedSharding(mesh_c, P("model", "data"))
 restored_c, _ = ckpt.restore(d, state, shardings=sh_c)
@@ -53,6 +52,7 @@ def test_train_on_4_resume_on_2_devices():
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import ArchConfig
 from repro.data import SyntheticConfig, SyntheticStream
+from repro.jaxcompat import make_auto_mesh, set_mesh
 from repro.models.transformer import LM
 from repro.optim import OptConfig
 from repro.train import TrainLoopConfig, init_state, train_loop
@@ -61,13 +61,12 @@ from repro.train.step import StepConfig
 TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=32,
                   n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
                   vocab_size=64, remat="none")
-mesh = jax.make_mesh((len(jax.devices()),), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_auto_mesh((len(jax.devices()),), ("data",))
 model = LM(TINY)
 opt = OptConfig(kind="adamw", lr=1e-3)
 stream = SyntheticStream(SyntheticConfig(vocab_size=64, seq_len=16, global_batch=8))
 state = init_state(jax.random.PRNGKey(0), model, opt)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     out = train_loop(model, opt, StepConfig(mode="pjit"), mesh, state, stream,
                      TrainLoopConfig(total_steps=%(steps)d, ckpt_dir=%(ckpt)r,
                                      ckpt_every=5, log_every=100))

@@ -5,7 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from helpers import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.configs.base import ArchConfig
 from repro.data import SyntheticConfig, SyntheticStream

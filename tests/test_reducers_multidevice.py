@@ -11,15 +11,16 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.comms import ReducerConfig, make_reducer
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jaxcompat import make_auto_mesh, shard_map
+mesh = make_auto_mesh((8,), ("data",))
 grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 4096)) * 0.1,
          "b": jax.random.normal(jax.random.PRNGKey(1), (8, 16)) * 0.1}
 expect = jax.tree.map(lambda x: x.mean(0), grads)
 
 def run(cfg):
     r = make_reducer(cfg)
-    f = jax.shard_map(lambda g: r(jax.tree.map(lambda x: x[0], g)),
-                      mesh=mesh, in_specs=P("data"), out_specs=P(), check_vma=False)
+    f = shard_map(lambda g: r(jax.tree.map(lambda x: x[0], g)),
+                      mesh=mesh, in_specs=P("data"), out_specs=P())
     return jax.jit(f)(grads)
 
 dense = run(ReducerConfig(kind="dense", axis="data"))
@@ -48,16 +49,16 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.comms import ReducerConfig, make_reducer
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.jaxcompat import make_auto_mesh, shard_map
+mesh = make_auto_mesh((2, 4), ("pod", "data"))
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 2048)) * 0.1
 expect = np.asarray(g.mean(0))
 
 r = make_reducer(ReducerConfig(kind="hierarchical", axis="data",
                                pod_axis="pod", theta=0.3))
-f = jax.shard_map(lambda v: r({"g": v[0]})["g"],
+f = shard_map(lambda v: r({"g": v[0]})["g"],
                   mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(),
-                  check_vma=False)
+                 )
 got = np.asarray(jax.jit(f)(g))
 rel = np.linalg.norm(got - expect) / np.linalg.norm(expect)
 # intra-pod mean is exact; only the pod-axis exchange is lossy
@@ -73,21 +74,22 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.comms.collectives import ring_all_reduce, ring_all_gather, ring_reduce_scatter
 
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jaxcompat import make_auto_mesh, shard_map
+mesh = make_auto_mesh((8,), ("d",))
 x = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
 
-f = jax.shard_map(lambda v: ring_all_reduce(v[0], "d")[None],
-                  mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)
+f = shard_map(lambda v: ring_all_reduce(v[0], "d")[None],
+                  mesh=mesh, in_specs=P("d"), out_specs=P("d"))
 out = np.asarray(jax.jit(f)(x))
 assert np.allclose(out, np.asarray(x.sum(0))[None].repeat(8, 0), atol=1e-5)
 
-g = jax.shard_map(lambda v: ring_all_gather(v[0], "d"),
-                  mesh=mesh, in_specs=P("d"), out_specs=P(None), check_vma=False)
+g = shard_map(lambda v: ring_all_gather(v[0], "d"),
+                  mesh=mesh, in_specs=P("d"), out_specs=P(None))
 got = np.asarray(jax.jit(g)(x))
 assert np.allclose(got, np.asarray(x), atol=1e-6)
 
-rs = jax.shard_map(lambda v: ring_reduce_scatter(v[0], "d")[None],
-                   mesh=mesh, in_specs=P("d"), out_specs=P("d"), check_vma=False)
+rs = shard_map(lambda v: ring_reduce_scatter(v[0], "d")[None],
+                   mesh=mesh, in_specs=P("d"), out_specs=P("d"))
 xs = jax.random.normal(jax.random.PRNGKey(3), (8, 8, 4))
 got = np.asarray(jax.jit(rs)(xs))
 expect = np.asarray(xs.sum(0)).reshape(8, 1, 4)
@@ -105,7 +107,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.comms.reducers import ReducerConfig, make_reducer, flatten_tree
 
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jaxcompat import make_auto_mesh, shard_map
+mesh = make_auto_mesh((4,), ("data",))
 cfg = ReducerConfig(kind="fft", axis="data", theta=0.97, error_feedback=True)
 r = make_reducer(cfg)
 g = {"w": jnp.tile(jnp.sin(jnp.arange(4096) / 50.0)[None] * 0.1, (4, 1))}
@@ -115,8 +118,8 @@ def step(res, grads):
     out, new_res = r(jax.tree.map(lambda x: x[0], grads), res[0])
     return out["w"], new_res[None]
 
-f = jax.shard_map(step, mesh=mesh, in_specs=(P("data"), P("data")),
-                  out_specs=(P(), P("data")), check_vma=False)
+f = shard_map(step, mesh=mesh, in_specs=(P("data"), P("data")),
+                  out_specs=(P(), P("data")))
 f = jax.jit(f)
 res = jnp.zeros((4, 4096))
 errs = []

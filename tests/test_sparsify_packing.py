@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from helpers import given, settings, st  # hypothesis or deterministic fallback
 
 from repro.core import fft as cfft
 from repro.core import packing, sparsify, theory

@@ -27,14 +27,15 @@ from repro.train.step import StepConfig
 TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
                   n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
                   vocab_size=64, remat="none")
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.jaxcompat import make_auto_mesh, set_mesh
+mesh = make_auto_mesh((4,), ("data",))
 model = LM(TINY)
 opt = OptConfig(kind="adamw", lr=3e-3)
 stream = SyntheticStream(SyntheticConfig(vocab_size=64, seq_len=32, global_batch=8))
 
 def run(step_cfg):
     state = init_state(jax.random.PRNGKey(0), model, opt)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out = train_loop(model, opt, step_cfg, mesh, state, stream,
                          TrainLoopConfig(total_steps=40, log_every=39))
     return out["history"][-1]["loss"]

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import jaxcompat as compat
 from repro.configs.base import ArchConfig
 from repro.data import SyntheticConfig, SyntheticStream
 from repro.launch.mesh import make_local_mesh
@@ -38,7 +39,7 @@ def test_loss_decreases_on_markov_data(tmp_path):
     stream = _stream()
     loop_cfg = TrainLoopConfig(total_steps=60, log_every=5,
                                lr_schedule=lr_schedules.constant())
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = train_loop(model, opt, step_cfg, mesh, state, stream, loop_cfg)
     hist = out["history"]
     first, last = hist[0]["loss"], hist[-1]["loss"]
@@ -72,7 +73,7 @@ def test_resume_is_bit_exact(tmp_path):
     def fresh_state():
         return init_state(jax.random.PRNGKey(2), model, opt)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out_straight = train_loop(
             model, opt, step_cfg, mesh, fresh_state(), stream,
             TrainLoopConfig(total_steps=20, log_every=100))
@@ -106,7 +107,7 @@ def test_failure_injection_rolls_back(tmp_path):
             fails["armed"] = False
             raise RuntimeError("injected node failure")
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = train_loop(
             model, opt, StepConfig(mode="pjit"), mesh,
             init_state(jax.random.PRNGKey(3), model, opt), stream,

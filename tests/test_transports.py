@@ -1,0 +1,137 @@
+"""Transport equivalence across 8 fake devices: every transport must produce
+the same mean as the seed all_gather path (ISSUE 1 acceptance), including the
+error-feedback and hierarchical modes.
+
+With quantization OFF the bucketed paths are bit-identical to the monolithic
+seed path (chunk-aligned bucket boundaries keep per-chunk top-k selection
+unchanged; FFT linearity keeps the means equal), so the comparison is exact
+up to f32 reduction order.  With quantization ON, per-bucket quantizer fits
+differ from the global fit, so agreement is within quantization tolerance.
+"""
+
+from helpers import run_with_devices
+
+SMAP_COMPAT = """
+import jax
+from repro.jaxcompat import make_auto_mesh, shard_map as smap
+"""
+
+
+def test_all_transports_match_seed_allgather_mean():
+    out = run_with_devices(SMAP_COMPAT + """
+import dataclasses
+import jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comms import ReducerConfig, make_reducer
+
+mesh = make_auto_mesh((8,), ("data",))
+grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 3 * 4096 + 173)) * 0.1,
+         "b": jax.random.normal(jax.random.PRNGKey(1), (8, 64)) * 0.1}
+dense = jax.tree.map(lambda x: np.asarray(x.mean(0)), grads)
+
+def run(cfg):
+    r = make_reducer(cfg)
+    f = smap(lambda g: r(jax.tree.map(lambda x: x[0], g)),
+             mesh=mesh, in_specs=P("data"), out_specs=P())
+    return jax.tree.map(np.asarray, jax.jit(f)(grads))
+
+def flat(t):
+    return np.concatenate([np.ravel(t[k]) for k in sorted(t)])
+
+for kind in ("fft", "timedomain"):
+    # seed path: monolithic all_gather, no bucketing
+    seed_cfg = ReducerConfig(kind=kind, axis="data", theta=0.5, quantize=False)
+    seed = run(seed_cfg)
+    for transport in ("allgather", "sequenced", "psum"):
+        got = run(dataclasses.replace(seed_cfg, transport=transport,
+                                      bucket_bytes=4096 * 4))
+        err = np.abs(flat(got) - flat(seed)).max()
+        assert err < 1e-5, (kind, transport, err)
+    # quantized: per-bucket fits agree with the global fit within quant tol
+    seed_q = run(dataclasses.replace(seed_cfg, quantize=True))
+    for transport in ("sequenced", "psum"):
+        got = run(dataclasses.replace(seed_cfg, quantize=True,
+                                      transport=transport, bucket_bytes=4096 * 4))
+        rel = (np.linalg.norm(flat(got) - flat(seed_q))
+               / np.linalg.norm(flat(seed_q)))
+        assert rel < 0.1, (kind, transport, rel)
+    # and every transport still approximates the dense mean (Assumption 3.1)
+    rel_dense = (np.linalg.norm(flat(seed) - flat(dense))
+                 / np.linalg.norm(flat(dense)))
+    assert rel_dense < 0.5 ** 0.5 + 1e-3, (kind, rel_dense)
+print("TRANSPORTS_OK")
+""")
+    assert "TRANSPORTS_OK" in out
+
+
+def test_error_feedback_identical_across_transports():
+    out = run_with_devices(SMAP_COMPAT + """
+import dataclasses
+import jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comms import ReducerConfig, make_reducer
+
+mesh = make_auto_mesh((4,), ("data",))
+n = 2 * 4096 + 301
+g = {"w": jnp.tile(jnp.sin(jnp.arange(n) / 50.0)[None] * 0.1, (4, 1))}
+
+def run_ef(cfg):
+    r = make_reducer(cfg)
+    def step(grads, res):
+        out, new_res = r(jax.tree.map(lambda x: x[0], grads), res[0])
+        return out["w"], new_res[None]
+    f = smap(step, mesh=mesh, in_specs=(P("data"), P("data")),
+             out_specs=(P(), P("data")))
+    res = jnp.zeros((4, n))
+    outs = []
+    for _ in range(3):
+        got, res = jax.jit(f)(g, res)
+        outs.append(np.asarray(got))
+    return outs, np.asarray(res)
+
+seed_cfg = ReducerConfig(kind="fft", axis="data", theta=0.9,
+                         error_feedback=True, quantize=False)
+seed_outs, seed_res = run_ef(seed_cfg)
+for transport in ("allgather", "sequenced", "psum"):
+    outs, res = run_ef(dataclasses.replace(seed_cfg, transport=transport,
+                                           bucket_bytes=4096 * 4))
+    for a, b in zip(outs, seed_outs):
+        assert np.abs(a - b).max() < 1e-5, transport
+    assert np.abs(res - seed_res).max() < 1e-5, transport
+# EF still does its job: residual is exactly what compression dropped
+assert np.linalg.norm(seed_res) > 0.0
+print("EF_TRANSPORTS_OK")
+""", devices=4)
+    assert "EF_TRANSPORTS_OK" in out
+
+
+def test_hierarchical_mode_across_transports():
+    out = run_with_devices(SMAP_COMPAT + """
+import dataclasses
+import jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comms import ReducerConfig, make_reducer
+
+mesh = make_auto_mesh((2, 4), ("pod", "data"))
+g = jax.random.normal(jax.random.PRNGKey(0), (8, 2 * 4096 + 87)) * 0.1
+expect = np.asarray(g.mean(0))
+
+def run(cfg):
+    r = make_reducer(cfg)
+    f = smap(lambda v: r({"g": v[0]})["g"],
+             mesh=mesh, in_specs=P(("pod", "data")), out_specs=P())
+    return np.asarray(jax.jit(f)(g))
+
+seed_cfg = ReducerConfig(kind="hierarchical", axis="data", pod_axis="pod",
+                         theta=0.3, quantize=False)
+seed = run(seed_cfg)
+for transport in ("allgather", "sequenced", "psum"):
+    got = run(dataclasses.replace(seed_cfg, transport=transport,
+                                  bucket_bytes=4096 * 4))
+    assert np.abs(got - seed).max() < 1e-5, transport
+    # intra-pod mean is exact; only the pod-axis exchange is lossy
+    rel = np.linalg.norm(got - expect) / np.linalg.norm(expect)
+    assert rel < 0.35, (transport, rel)
+print("HIER_TRANSPORTS_OK")
+""")
+    assert "HIER_TRANSPORTS_OK" in out
