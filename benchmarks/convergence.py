@@ -10,6 +10,12 @@ QSGD — and reports final loss + compression ratio.  Claims validated:
 
 CPU-sized by design: 2-layer d64 LM, 70 steps.  The same driver scales on
 real hardware via examples/convergence_paper.py.
+
+NOTE: this single-device benchmark predates the convergence lab
+(``src/repro/lab``, DESIGN.md §12), which runs the same claim matrix as real
+multi-worker end-to-end training with per-step evidence and executable
+claim checks — prefer ``python -m repro.lab.run`` for validation; this
+benchmark remains as the quick single-device Fig. 11/12 table.
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ import math
 import jax
 
 from benchmarks.common import Row
+from repro import jaxcompat as compat
 from repro.comms.reducers import ReducerConfig
 from repro.configs.base import ArchConfig
 from repro.core import schedules
@@ -44,7 +51,7 @@ def _run(reducer_cfg, theta_schedule=None) -> float:
     mode = "pjit" if reducer_cfg is None else "compressed_dp"
     step_cfg = StepConfig(mode=mode, reducer=reducer_cfg)
     state = init_state(jax.random.PRNGKey(0), model, opt)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = train_loop(model, opt, step_cfg, mesh, state, stream,
                          TrainLoopConfig(total_steps=STEPS, log_every=STEPS - 1,
                                          theta_schedule=theta_schedule))

@@ -9,6 +9,7 @@ import argparse
 
 import jax
 
+from repro import jaxcompat as compat
 from repro.comms.reducers import ReducerConfig
 from repro.configs.base import ArchConfig
 from repro.core import schedules
@@ -32,7 +33,7 @@ def run_variant(name, reducer_cfg, theta_schedule, steps):
                                              global_batch=8))
     mode = "pjit" if reducer_cfg is None else "compressed_dp"
     state = init_state(jax.random.PRNGKey(0), model, opt)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = train_loop(
             model, opt, StepConfig(mode=mode, reducer=reducer_cfg), mesh,
             state, stream,

@@ -23,7 +23,8 @@ import dataclasses
 __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "saved_comm_s", "k_min", "is_beneficial", "NETWORKS",
            "bucket_count", "transport_wire_bits", "overlap_fraction",
-           "exchange_time_s", "ExchangePlan"]
+           "exchange_time_s", "ExchangePlan", "dense_allreduce_bits",
+           "RunWireAccount", "run_wire_account"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,4 +198,75 @@ def exchange_time_s(
         wire_bits_per_worker=wire_per_worker,
         exchange_s=total,
         overlap=ov,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-run wire accounting (convergence lab)
+#
+# A training RUN is a sequence of exchanges whose payload size changes with
+# the theta schedule (each step's quantized theta fixes the kept-k and hence
+# wire_bits).  The lab prices the whole run so the report can state "this
+# curve cost X GiB on the wire vs the dense baseline's Y" — the paper's
+# accuracy-vs-traffic trade made concrete per experiment.
+# ---------------------------------------------------------------------------
+
+
+def dense_allreduce_bits(n_elems: int, workers: int, dtype_bits: int = 32) -> float:
+    """Per-worker wire bits of one dense ring all-reduce (the 'orig' baseline).
+
+    Ring all-reduce moves 2*(P-1)/P of the buffer past every worker
+    (reduce-scatter + all-gather phases) — the same model analysis/hlo.py
+    applies to measured HLO.
+    """
+    if workers <= 1:
+        return 0.0
+    return 2.0 * dtype_bits * n_elems * (workers - 1) / workers
+
+
+@dataclasses.dataclass(frozen=True)
+class RunWireAccount:
+    """Total modeled wire traffic of one training run, per worker."""
+
+    transport: str
+    workers: int
+    steps: int
+    dense_bits: float  # dense baseline: one ring all-reduce per step
+    compressed_bits: float  # sum of per-step transport_wire_bits
+    savings: float  # dense_bits / compressed_bits (inf when compressed is 0)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def run_wire_account(
+    n_elems: int,
+    per_step_payload_bits: "list[float]",
+    transport: str,
+    workers: int,
+    dtype_bits: int = 32,
+) -> RunWireAccount:
+    """Price a whole run: per-step compressed payloads vs the dense baseline.
+
+    ``per_step_payload_bits[t]`` is the compressor's ``wire_bits`` at step t's
+    (quantized) theta; a dense step is priced as the ring all-reduce instead
+    of a payload exchange (pass the step's entry as ``None``).
+    """
+    steps = len(per_step_payload_bits)
+    dense_step = dense_allreduce_bits(n_elems, workers, dtype_bits)
+    dense_total = dense_step * steps
+    compressed_total = 0.0
+    for payload in per_step_payload_bits:
+        if payload is None:
+            compressed_total += dense_step
+        else:
+            compressed_total += transport_wire_bits(transport, payload, workers)
+    savings = dense_total / compressed_total if compressed_total > 0 else float("inf")
+    return RunWireAccount(
+        transport=transport,
+        workers=workers,
+        steps=steps,
+        dense_bits=dense_total,
+        compressed_bits=compressed_total,
+        savings=savings,
     )

@@ -58,6 +58,23 @@ def _compress_all(buckets: Sequence[jnp.ndarray], comp) -> List:
     return [comp.compress(b) for b in buckets]
 
 
+def _ordered_worker_mean(stacked: jnp.ndarray) -> jnp.ndarray:
+    """Mean over the leading (worker) axis as a left-to-right fold.
+
+    The fold order matters for bitwise reproducibility, not correctness: the
+    CPU backend's all-reduce sums contributions in worker order, so folding the
+    gathered reconstructions the same way makes the gather transports produce
+    bit-identical means to the psum transport (seeded-determinism contract,
+    tests/test_transports.py).  ``jnp.mean``'s pairwise reduction would differ
+    by ~1 ulp and the divergence compounds over training steps.
+    """
+    p = stacked.shape[0]
+    acc = stacked[0]
+    for w in range(1, p):
+        acc = acc + stacked[w]
+    return acc * (1.0 / p)
+
+
 def _gather_mean_payload(payload, comp, axis: str) -> jnp.ndarray:
     """Seed exchange: all_gather one payload -> mean reconstruction.
 
@@ -67,10 +84,10 @@ def _gather_mean_payload(payload, comp, axis: str) -> jnp.ndarray:
     gathered = jax.lax.all_gather(payload, axis)  # leading axis: workers
     if hasattr(comp, "decompress_spectrum"):
         spectra = jax.vmap(comp.decompress_spectrum)(gathered)
-        mean_spectrum = jnp.mean(spectra, axis=0)
+        mean_spectrum = _ordered_worker_mean(spectra)
         return cfft.chunked_irfft(mean_spectrum, payload.orig_len, payload.chunk)
     decompressed = jax.vmap(comp.decompress)(gathered)
-    return jnp.mean(decompressed, axis=0)
+    return _ordered_worker_mean(decompressed)
 
 
 def _psum_mean_payload(payload, comp, axis: str) -> jnp.ndarray:

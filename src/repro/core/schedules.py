@@ -15,7 +15,7 @@ compiled step per distinct theta (a handful per run; see DESIGN.md §2).
 from __future__ import annotations
 
 import math
-from typing import Callable, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 __all__ = [
     "constant",
@@ -24,6 +24,8 @@ __all__ = [
     "sigmoid_decay",
     "thm35_schedule",
     "quantize_theta",
+    "make_schedule",
+    "schedule_curve",
 ]
 
 ThetaSchedule = Callable[[int], float]
@@ -81,3 +83,57 @@ def quantize_theta(theta: float, granularity: float = 0.05) -> float:
     """Snap theta to a grid so a smooth schedule yields a bounded number of
     recompilations (static kept-k changes only at grid boundaries)."""
     return min(0.95, max(0.0, round(theta / granularity) * granularity))
+
+
+# ---------------------------------------------------------------------------
+# Declarative construction + curve evaluation (convergence lab)
+# ---------------------------------------------------------------------------
+
+
+def make_schedule(kind: Optional[str], **params) -> Optional[ThetaSchedule]:
+    """Build a schedule from a JSON-serializable (kind, params) description.
+
+    The experiment lab declares schedules as data (``ExperimentSpec`` must
+    round-trip through JSON for the report artifact), so the callable is
+    constructed here from names::
+
+        make_schedule("constant", theta=0.7)
+        make_schedule("step_decay", points=[[0, 0.99], [30, 0.0]])
+        make_schedule("polynomial_decay", theta0=0.9, total_steps=50)
+        make_schedule("sigmoid_decay", theta0=0.9, midpoint=25)
+        make_schedule("thm35", lipschitz=1.0, eta=0.3)   # fixed-eta variant
+        make_schedule(None)                              # dense: no schedule
+    """
+    if kind is None:
+        return None
+    if kind == "constant":
+        return constant(params["theta"])
+    if kind == "step_decay":
+        return step_decay([(int(s), float(v)) for s, v in params["points"]])
+    if kind == "polynomial_decay":
+        return polynomial_decay(
+            params["theta0"], params["total_steps"],
+            params.get("power", 1.0), params.get("theta_end", 0.0))
+    if kind == "sigmoid_decay":
+        return sigmoid_decay(
+            params["theta0"], params["midpoint"], params.get("steepness", 0.01))
+    if kind == "thm35":
+        eta = params["eta"]
+        return thm35_schedule(params["lipschitz"], lambda s: eta)
+    raise ValueError(f"unknown schedule kind {kind!r}")
+
+
+def schedule_curve(
+    schedule: Optional[ThetaSchedule], steps: int, granularity: float = 0.05
+) -> Tuple[float, ...]:
+    """The quantized theta the training loop will realize at each step.
+
+    Mirrors the loop's contract (it snaps through :func:`quantize_theta`
+    before rebuilding the step), so a planned run can be priced before it
+    executes — and the lab runner asserts its recorded per-step thetas match
+    this curve exactly, so the two implementations cannot silently drift.
+    ``schedule=None`` (dense) yields all zeros.
+    """
+    if schedule is None:
+        return tuple(0.0 for _ in range(steps))
+    return tuple(quantize_theta(schedule(s), granularity) for s in range(steps))

@@ -1,3 +1,8 @@
-from repro.data.synthetic import SyntheticConfig, SyntheticStream
+from repro.data.synthetic import (
+    ImageConfig,
+    ImageStream,
+    SyntheticConfig,
+    SyntheticStream,
+)
 
-__all__ = ["SyntheticConfig", "SyntheticStream"]
+__all__ = ["SyntheticConfig", "SyntheticStream", "ImageConfig", "ImageStream"]

@@ -1,0 +1,24 @@
+"""Convergence lab: end-to-end multi-worker validation of the paper's claims.
+
+The lab turns the paper's accuracy statements (Fig. 11/12, Thm 3.4/3.5,
+Assumption 3.1) into executable, regression-gated checks:
+
+* ``spec``     — declarative :class:`ExperimentSpec` (model x compressor x
+  transport x theta-schedule x worker count) and the smoke/full matrices;
+* ``runner``   — drives ``train_loop`` on simulated multi-worker meshes while
+  recording per-step loss / grad-energy / compression ratio / modeled wire,
+  plus an Assumption 3.1 probe on live gradients;
+* ``evaluate`` — asserts the paper's claims against the recorded curves;
+* ``report``   — writes ``BENCH_convergence.json`` and the Convergence
+  results table in ``docs/EXPERIMENTS.md``;
+* ``run``      — ``python -m repro.lab.run [--smoke]`` CLI.
+
+This package must stay import-light: ``run.py`` sets
+``--xla_force_host_platform_device_count`` BEFORE the first jax import, so
+nothing at package import time may touch jax.  (``spec``/``report`` are
+jax-free; import ``runner``/``evaluate`` lazily.)
+"""
+
+from repro.lab.spec import ExperimentSpec, smoke_matrix, full_matrix  # noqa: F401
+
+__all__ = ["ExperimentSpec", "smoke_matrix", "full_matrix"]

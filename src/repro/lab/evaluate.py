@@ -1,0 +1,199 @@
+"""Evaluator: the paper's accuracy claims as executable checks.
+
+Consumes the JSON form of lab runs (``RunResult.to_dict()``) so the same code
+evaluates a live matrix and a loaded ``BENCH_convergence.json``.  Claims per
+model family (paper sections in brackets):
+
+* ``theta0.7_matches_dense`` — static theta <= 0.7 reaches a final loss within
+  ``loss_tol`` (5%) of the dense baseline [Fig. 11, Thm 3.4].
+* ``theta0.9_degrades`` — static theta = 0.9 lands measurably above the
+  theta = 0.7 run [Fig. 11's degradation, Thm 3.4's theta^2 noise ball].
+* ``mixed_recovers`` — the "mixed comp" schedule (high theta early, 0 late)
+  recovers to within ``loss_tol`` of dense [§IV-A1, Thm 3.5].
+* ``transports_identical`` — runs differing ONLY in transport trace identical
+  loss curves to ``transport_atol`` (they compute the same mean; DESIGN.md §9).
+* ``assumption31`` — every probed step's live-gradient reconstruction obeys
+  ``err <= 1.05*sqrt(theta) + quant_margin`` (the provable sqrt(theta) energy
+  bound of DESIGN.md §6 plus the range-quantizer's relative-error envelope),
+  checked through ``assumption31_holds_stats``.
+* ``thm34_envelope`` — the measured min-so-far gradient energy stays under the
+  Thm 3.4 bound evaluated with plug-in constants estimated from the same
+  curve (``core.theory.estimate_curve_constants``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.theory import (
+    assumption31_holds_stats,
+    curves_close,
+    estimate_curve_constants,
+    thm34_envelope,
+)
+
+__all__ = ["Claim", "Tolerances", "evaluate_results"]
+
+
+@dataclasses.dataclass
+class Claim:
+    name: str
+    passed: bool
+    detail: str
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tolerances:
+    loss_tol: float = 0.05  # "within 5% of dense"
+    degrade_margin: float = 0.01  # theta=0.9 must sit >=1% above theta=0.7
+    transport_atol: float = 1e-5  # pointwise curve divergence across transports
+    a31_sqrt_slack: float = 1.05  # on the provable sqrt(theta) energy bound
+    a31_quant_margin: float = 0.15  # additive headroom for the 8-bit quantizer
+    a31_norm_tol: float = 0.08  # ||v_hat||/||v|| headroom under quantization
+    thm34_slack: float = 1.0
+    final_tail: int = 5  # final loss = mean of the last N recorded steps
+
+
+def _final(run: Dict, tail: int) -> float:
+    curve = [r["loss"] for r in run["records"]]
+    tail = min(tail, len(curve))
+    return sum(curve[-tail:]) / tail
+
+
+def _loss_curve(run: Dict) -> List[float]:
+    return [r["loss"] for r in run["records"]]
+
+
+def _models(runs: Dict[str, Dict]) -> List[str]:
+    return sorted({r["spec"]["model"] for r in runs.values()})
+
+
+def _named(runs: Dict[str, Dict], name: str) -> Optional[Dict]:
+    return runs.get(name)
+
+
+def _rel_gap(x: float, base: float) -> float:
+    return (x - base) / max(abs(base), 1e-9)
+
+
+def evaluate_results(
+    runs: Dict[str, Dict], tol: Tolerances = Tolerances()
+) -> Tuple[List[Claim], bool]:
+    """Evaluate every claim against a {name: RunResult.to_dict()} matrix."""
+    claims: List[Claim] = []
+
+    def claim(name: str, passed: bool, detail: str) -> None:
+        claims.append(Claim(name, bool(passed), detail))
+
+    for m in _models(runs):
+        dense = _named(runs, f"{m}_dense")
+        t07 = _named(runs, f"{m}_fft_theta0.7")
+        t09 = _named(runs, f"{m}_fft_theta0.9")
+        mixed = _named(runs, f"{m}_fft_mixed")
+
+        if dense and t07:
+            fd, f7 = _final(dense, tol.final_tail), _final(t07, tol.final_tail)
+            gap = _rel_gap(f7, fd)
+            claim(f"{m}:theta0.7_matches_dense", gap <= tol.loss_tol,
+                  f"final dense {fd:.4f} vs theta0.7 {f7:.4f} (gap {gap:+.2%}, "
+                  f"tol {tol.loss_tol:.0%})")
+        else:
+            claim(f"{m}:theta0.7_matches_dense", False, "missing dense/theta0.7 run")
+
+        if t07 and t09:
+            f7, f9 = _final(t07, tol.final_tail), _final(t09, tol.final_tail)
+            gap = _rel_gap(f9, f7)
+            claim(f"{m}:theta0.9_degrades", gap >= tol.degrade_margin,
+                  f"final theta0.9 {f9:.4f} vs theta0.7 {f7:.4f} (gap {gap:+.2%}, "
+                  f"needs >= {tol.degrade_margin:+.0%})")
+        else:
+            claim(f"{m}:theta0.9_degrades", False, "missing theta0.9/theta0.7 run")
+
+        if dense and mixed:
+            fd, fm = _final(dense, tol.final_tail), _final(mixed, tol.final_tail)
+            gap = _rel_gap(fm, fd)
+            claim(f"{m}:mixed_recovers", gap <= tol.loss_tol,
+                  f"final dense {fd:.4f} vs mixed {fm:.4f} (gap {gap:+.2%}, "
+                  f"tol {tol.loss_tol:.0%})")
+        else:
+            claim(f"{m}:mixed_recovers", False, "missing dense/mixed run")
+
+        trio = [t07] + [
+            _named(runs, f"{m}_fft_theta0.7_{t}") for t in ("sequenced", "psum")
+        ]
+        if all(trio):
+            worst = 0.0
+            ok = True
+            base_curve = _loss_curve(trio[0])
+            for other in trio[1:]:
+                close, div = curves_close(
+                    base_curve, _loss_curve(other), tol.transport_atol)
+                ok &= close
+                worst = max(worst, div)
+            claim(f"{m}:transports_identical", ok,
+                  f"max pointwise loss divergence across "
+                  f"allgather/sequenced/psum: {worst:.2e} (atol {tol.transport_atol})")
+        else:
+            claim(f"{m}:transports_identical", False, "missing transport trio")
+
+        # -- Assumption 3.1 on live gradients (all probed compressed runs) --
+        probed = worst_a31 = 0
+        a31_ok, a31_detail = True, []
+        for name, run in runs.items():
+            if run["spec"]["model"] != m or run["spec"].get("reducer") not in (
+                    "fft", "timedomain"):
+                continue
+            quantized = run["spec"].get("quantize", True)
+            margin = tol.a31_quant_margin if quantized else 0.0
+            norm_tol = tol.a31_norm_tol if quantized else 1e-4
+            for rec in run["records"]:
+                if "err_ratio" not in rec:
+                    continue
+                probed += 1
+                theta = rec["theta"]
+                # the provable bound is sqrt(theta) (DESIGN.md §6); express it
+                # through the paper's slack*theta form
+                slack = (tol.a31_sqrt_slack * math.sqrt(theta) + margin) / theta
+                if not assumption31_holds_stats(
+                        rec["err_ratio"], rec["norm_ratio"], theta, slack, norm_tol):
+                    a31_ok = False
+                    worst_a31 += 1
+                    if len(a31_detail) < 3:
+                        a31_detail.append(
+                            f"{name}@{rec['step']}: err {rec['err_ratio']:.3f} "
+                            f"norm {rec['norm_ratio']:.3f} theta {theta}")
+        claim(f"{m}:assumption31", a31_ok and probed > 0,
+              f"{probed} probed steps, {worst_a31} violations"
+              + (f" ({'; '.join(a31_detail)})" if a31_detail else ""))
+
+        # -- Thm 3.4 envelope on every run of this model --
+        env_ok, env_detail = True, []
+        for name, run in runs.items():
+            if run["spec"]["model"] != m:
+                continue
+            spec = run["spec"]
+            loss = _loss_curve(run)
+            gsq = [r["grad_sq"] for r in run["records"]]
+            thetas = [r["theta"] or 0.0 for r in run["records"]]
+            constants = estimate_curve_constants(
+                loss, gsq, eta=spec["lr"], batch=spec["global_batch"],
+                fstar=run.get("entropy_floor", 0.0))
+            env = thm34_envelope(
+                gsq, constants, eta=spec["lr"], theta=max(thetas),
+                batch=spec["global_batch"], slack=tol.thm34_slack)
+            if not env.holds:
+                env_ok = False
+                if len(env_detail) < 3:
+                    worst = max(
+                        ms - b for ms, b in zip(env.min_so_far, env.bounds))
+                    env_detail.append(f"{name}: exceeds bound by {worst:.3g}")
+        claim(f"{m}:thm34_envelope", env_ok,
+              "measured min grad-energy under the plug-in Thm 3.4 bound"
+              + (f" EXCEPT {'; '.join(env_detail)}" if env_detail else ""))
+
+    return claims, all(c.passed for c in claims)

@@ -1,0 +1,89 @@
+"""CLI: run the convergence lab matrix and write the report artifacts.
+
+    PYTHONPATH=src python -m repro.lab.run --smoke          # tier-2 CI matrix
+    PYTHONPATH=src python -m repro.lab.run                  # full matrix
+    PYTHONPATH=src python -m repro.lab.run --smoke --workers 4
+
+Simulated multi-worker: the requested worker count is forced via
+``--xla_force_host_platform_device_count`` which must be set BEFORE jax's
+first import — so this module parses args and patches the environment before
+importing the (jax-heavy) runner.  Exit status is nonzero when any paper
+claim fails, which is what gates the CI ``lab-smoke`` job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+_COUNT_FLAG = re.compile(r"--xla_force_host_platform_device_count=(\d+)")
+
+
+def _ensure_devices(workers: int) -> None:
+    if "jax" in sys.modules:
+        import jax
+
+        if len(jax.devices()) < workers:
+            raise RuntimeError(
+                f"jax already imported with {len(jax.devices())} devices; "
+                f"need {workers}. Run via `python -m repro.lab.run` in a "
+                "fresh process.")
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = _COUNT_FLAG.search(flags)
+    if m is None:
+        flags = (flags + f" --xla_force_host_platform_device_count={workers}").strip()
+    elif int(m.group(1)) < workers:
+        # an inherited smaller pin would starve the mesh — raise it
+        flags = _COUNT_FLAG.sub(
+            f"--xla_force_host_platform_device_count={workers}", flags)
+    os.environ["XLA_FLAGS"] = flags
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description="convergence lab matrix")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI smoke matrix (convnet + tiny LM, all transports)")
+    p.add_argument("--workers", type=int, default=8,
+                   help="simulated worker count (default 8)")
+    p.add_argument("--out", default="BENCH_convergence.json",
+                   help="JSON artifact path")
+    p.add_argument("--docs", default="docs/EXPERIMENTS.md",
+                   help="EXPERIMENTS.md to splice the results table into "
+                        "('skip' to disable)")
+    p.add_argument("--quiet", action="store_true")
+    args = p.parse_args(argv)
+
+    _ensure_devices(args.workers)
+
+    # jax-touching imports only AFTER the device count is pinned
+    from repro.lab import report, spec
+    from repro.lab.evaluate import evaluate_results
+    from repro.lab.runner import run_matrix
+
+    matrix = (spec.smoke_matrix(args.workers) if args.smoke
+              else spec.full_matrix(args.workers))
+    results = run_matrix(matrix, verbose=not args.quiet)
+    runs = {name: r.to_dict() for name, r in results.items()}
+    claims, all_passed = evaluate_results(runs)
+
+    report.write_json(args.out, runs, [c.to_dict() for c in claims], all_passed)
+    print(f"[lab] wrote {args.out}")
+    if args.docs != "skip":
+        block = report.render_markdown(runs, [c.to_dict() for c in claims], all_passed)
+        if report.splice_experiments_md(args.docs, block):
+            print(f"[lab] updated {args.docs}")
+        else:
+            print(f"[lab] marker not found in {args.docs}; table not spliced")
+
+    for c in claims:
+        print(f"[lab] {'PASS' if c.passed else 'FAIL'} {c.name}: {c.detail}")
+    print(f"[lab] {'ALL CLAIMS PASS' if all_passed else 'CLAIM FAILURES'}")
+    return 0 if all_passed else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,273 @@
+"""Experiment runner: drives ``train_loop`` on a simulated multi-worker mesh
+while recording the per-step evidence the evaluator needs.
+
+Recorded per step (via the ``TrainLoopConfig.metrics_hook`` seam):
+
+* ``loss`` / ``acc`` — the step's averaged training metrics;
+* ``grad_sq`` — measured gradient energy ``||g||^2`` (pre-clip global norm),
+  the quantity Thm 3.4 bounds;
+* ``theta`` — the quantized theta the step actually ran;
+* ``payload_bits`` / ``compression_ratio`` — modeled wire payload at that
+  theta over the run's bucket layout (feeds ``cost_model.run_wire_account``);
+* Assumption 3.1 probe — every ``probe_every`` steps the LIVE full-batch
+  gradient at the current params is compressed and reconstructed with the
+  run's compressor at the step's theta, recording
+  ``err_ratio = ||g - g_hat||/||g||`` and ``norm_ratio = ||g_hat||/||g||``
+  (``core.theory.assumption31_stats``).
+
+Multi-worker simulation: the caller (``repro.lab.run`` CLI or the tier-2
+test) sets ``--xla_force_host_platform_device_count`` before jax's first
+import; this module only checks the device count is sufficient.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from repro import jaxcompat as compat
+from repro.comms import cost_model
+from repro.comms.reducers import ReducerConfig, flatten_tree
+from repro.configs.base import ArchConfig
+from repro.core import schedules as theta_schedules
+from repro.core.baselines import QSGD, TernGrad
+from repro.core.compressor import (
+    FFTCompressor,
+    FFTCompressorConfig,
+    TimeDomainCompressor,
+)
+from repro.core.theory import assumption31_stats
+from repro.data import ImageConfig, ImageStream, SyntheticConfig, SyntheticStream
+from repro.lab.spec import ExperimentSpec
+from repro.launch.mesh import make_local_mesh
+from repro.models.convnet import ConvConfig, ConvNet
+from repro.models.transformer import LM
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, init_state, train_loop
+from repro.train.step import StepConfig
+
+__all__ = ["RunResult", "run_experiment", "run_matrix"]
+
+# CPU-sized model/data recipes — the matrix multiplies runs, so each run must
+# stay tiny (2 cores in CI).  Scaling beyond smoke happens via spec overrides.
+_LM_ARCH = ArchConfig(
+    name="lab-lm", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=64, remat="none",
+)
+_CONV_CFG = ConvConfig(n_classes=8, widths=(8, 16), blocks_per_stage=1, img_size=16)
+
+
+@dataclasses.dataclass
+class RunResult:
+    """One completed experiment: the spec plus everything measured."""
+
+    spec: ExperimentSpec
+    records: List[Dict]  # one dict per step
+    n_elems: int  # flat gradient length
+    entropy_floor: float
+    wire: Optional[Dict]  # cost_model.RunWireAccount.to_dict()
+    walltime_s: float
+
+    @property
+    def loss_curve(self) -> List[float]:
+        return [r["loss"] for r in self.records]
+
+    @property
+    def grad_sq_curve(self) -> List[float]:
+        return [r["grad_sq"] for r in self.records]
+
+    def final_loss(self, tail: int = 5) -> float:
+        tail = min(tail, len(self.records))
+        return sum(self.loss_curve[-tail:]) / tail
+
+    def to_dict(self) -> Dict:
+        return {
+            "spec": self.spec.to_dict(),
+            "records": self.records,
+            "n_elems": self.n_elems,
+            "entropy_floor": self.entropy_floor,
+            "final_loss": self.final_loss(),
+            "wire": self.wire,
+            "walltime_s": round(self.walltime_s, 2),
+        }
+
+
+def _build_model_and_stream(spec: ExperimentSpec):
+    if spec.model == "lm":
+        model = LM(_LM_ARCH)
+        stream = SyntheticStream(SyntheticConfig(
+            vocab_size=_LM_ARCH.vocab_size, seq_len=32,
+            global_batch=spec.global_batch, seed=1234 + spec.seed))
+        return model, stream
+    model = ConvNet(_CONV_CFG)
+    stream = ImageStream(ImageConfig(
+        n_classes=_CONV_CFG.n_classes, img_size=_CONV_CFG.img_size,
+        global_batch=spec.global_batch, seed=1234 + spec.seed))
+    return model, stream
+
+
+def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
+    if spec.reducer is None:
+        return None
+    return ReducerConfig(
+        kind=spec.reducer, axis="data", theta=spec.theta,
+        quantize=spec.quantize, bucket_bytes=spec.bucket_bytes,
+        transport=spec.transport, error_feedback=spec.error_feedback,
+    )
+
+
+def _compressor_at(spec: ExperimentSpec, theta: float):
+    """The compressor a worker runs at this theta (for probe + wire model)."""
+    cfg = FFTCompressorConfig(theta=theta, quantize=spec.quantize)
+    if spec.reducer == "fft":
+        return FFTCompressor(cfg)
+    if spec.reducer == "timedomain":
+        return TimeDomainCompressor(cfg)
+    if spec.reducer == "terngrad":
+        return TernGrad()
+    if spec.reducer == "qsgd":
+        return QSGD()
+    return None
+
+
+def _payload_bits(spec: ExperimentSpec, theta: float, n_elems: int) -> Optional[float]:
+    """Modeled wire payload of one exchange at this theta, over the run's
+    bucket layout (per-bucket payloads sum; matches what the transport ships)."""
+    comp = _compressor_at(spec, theta)
+    if comp is None or not hasattr(comp, "wire_bits"):
+        return None
+    if spec.bucket_bytes is None:
+        return float(comp.wire_bits(n_elems))
+    from repro.comms.bucketing import build_layout
+
+    # price per bucket with the SAME layout the reducer builds
+    sizes = build_layout(n_elems, spec.bucket_bytes).sizes()
+    return float(sum(comp.wire_bits(s) for s in sizes))
+
+
+def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
+    """Run one spec end-to-end; returns the recorded evidence."""
+    n_devices = len(jax.devices())
+    if n_devices < spec.workers:
+        raise RuntimeError(
+            f"spec {spec.name!r} needs {spec.workers} workers but only "
+            f"{n_devices} devices exist; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={spec.workers} before "
+            "importing jax (the repro.lab.run CLI does this automatically)")
+
+    model, stream = _build_model_and_stream(spec)
+    opt = (OptConfig(kind="sgd", lr=spec.lr, momentum=0.9)
+           if spec.opt == "sgd" else OptConfig(kind="adamw", lr=spec.lr))
+    reducer = _reducer_config(spec)
+    mode = "pjit" if reducer is None else "compressed_dp"
+    step_cfg = StepConfig(mode=mode, reducer=reducer)
+    mesh = make_local_mesh((spec.workers,), ("data",))
+    state = init_state(jax.random.PRNGKey(spec.seed), model, opt,
+                       error_feedback=spec.error_feedback)
+    n_elems = sum(int(l.size) for l in jax.tree_util.tree_leaves(state["params"]))
+
+    schedule = (theta_schedules.make_schedule(**spec.schedule)
+                if spec.schedule else None)
+
+    # Assumption 3.1 probe: jitted per distinct quantized theta (bounded by
+    # the schedule's value grid, same recompile contract as the train step)
+    probe_cache: Dict[float, object] = {}
+
+    def probe_fn(theta: float):
+        if theta not in probe_cache:
+            comp = _compressor_at(spec, theta)
+
+            def probe(params, batch):
+                grads = jax.grad(
+                    lambda p: model.loss(p, batch, ctx=None)[0])(params)
+                flat, _, _ = flatten_tree(grads)
+                flat_hat = comp.decompress(comp.compress(flat))
+                return assumption31_stats(flat, flat_hat)
+
+            probe_cache[theta] = jax.jit(probe)
+        return probe_cache[theta]
+
+    records: List[Dict] = []
+    # payload size depends only on the quantized theta (bounded grid):
+    # memoize so the hot loop doesn't rebuild compressor + bucket layout
+    payload_cache: Dict[float, Optional[float]] = {}
+
+    def payload_at(theta: float) -> Optional[float]:
+        if theta not in payload_cache:
+            payload_cache[theta] = _payload_bits(spec, theta, n_elems)
+        return payload_cache[theta]
+
+    def hook(step: int, metrics: Dict, state) -> None:
+        theta = metrics.get("theta")
+        rec = {
+            "step": step,
+            "loss": metrics["loss"],
+            "grad_sq": metrics["grad_norm"] ** 2,
+            "theta": theta,
+        }
+        if "acc" in metrics:
+            rec["acc"] = metrics["acc"]
+        payload = (payload_at(theta if theta is not None else spec.theta)
+                   if spec.reducer is not None else None)
+        rec["payload_bits"] = payload
+        if payload:
+            rec["compression_ratio"] = 32.0 * n_elems / payload
+        probeable = (spec.reducer in ("fft", "timedomain")
+                     and spec.probe_every
+                     and step % spec.probe_every == 0
+                     and theta is not None and theta > 0.0)
+        if probeable:
+            err, norm = probe_fn(theta)(state["params"], stream.batch_at(step))
+            rec["err_ratio"] = float(err)
+            rec["norm_ratio"] = float(norm)
+        records.append(rec)
+        if verbose and step % 10 == 0:
+            print(f"[lab:{spec.name}] step {step} loss {metrics['loss']:.4f}")
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=spec.steps, log_every=max(spec.steps, 1),
+        theta_schedule=schedule, metrics_hook=hook,
+    )
+    t0 = time.perf_counter()
+    with compat.set_mesh(mesh):
+        train_loop(model, opt, step_cfg, mesh, state, stream, loop_cfg)
+    walltime = time.perf_counter() - t0
+
+    if schedule is not None:
+        # the loop's realized thetas must equal the declarative curve —
+        # guards schedule_curve and the loop's quantization from drifting
+        expected = theta_schedules.schedule_curve(schedule, spec.steps)
+        realized = tuple(r["theta"] for r in records)
+        if realized != expected:
+            raise RuntimeError(
+                f"{spec.name}: realized theta curve diverged from "
+                f"schedule_curve: {realized} != {expected}")
+
+    wire = None
+    if spec.reducer is not None:
+        wire = cost_model.run_wire_account(
+            n_elems, [r["payload_bits"] for r in records],
+            spec.transport, spec.workers,
+        ).to_dict()
+
+    return RunResult(
+        spec=spec, records=records, n_elems=n_elems,
+        entropy_floor=stream.entropy_floor(), wire=wire, walltime_s=walltime,
+    )
+
+
+def run_matrix(specs: List[ExperimentSpec], verbose: bool = True) -> Dict[str, RunResult]:
+    """Run every spec; returns {spec.name: RunResult} in matrix order."""
+    out: Dict[str, RunResult] = {}
+    for i, spec in enumerate(specs):
+        if verbose:
+            print(f"[lab] ({i + 1}/{len(specs)}) {spec.name}")
+        out[spec.name] = run_experiment(spec, verbose=verbose)
+        if verbose:
+            r = out[spec.name]
+            print(f"[lab] {spec.name}: final {r.final_loss():.4f} "
+                  f"({r.walltime_s:.1f}s)")
+    return out

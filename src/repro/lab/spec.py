@@ -1,0 +1,164 @@
+"""Declarative experiment specs for the convergence lab (jax-free module).
+
+An :class:`ExperimentSpec` is the full recipe for one end-to-end training
+run: model x compressor x transport x theta-schedule x worker count.  Specs
+are plain data (JSON round-trippable) so the whole matrix lands verbatim in
+``BENCH_convergence.json`` and a future session can re-run any row.
+
+The *smoke* matrix is the tier-2 CI gate (8 simulated workers, two model
+families, every transport); the *full* matrix adds the remaining compressor
+baselines, schedules, and worker counts for the manual
+``python -m repro.lab.run`` sweep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+__all__ = ["ExperimentSpec", "smoke_matrix", "full_matrix", "group_by_model"]
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """One end-to-end training run, declaratively.
+
+    ``reducer=None`` is the dense (pjit all-reduce) baseline; everything else
+    runs ``compressed_dp`` over a (workers,)-shaped ``data`` mesh.
+    ``schedule`` is a ``core.schedules.make_schedule`` description, e.g.
+    ``{"kind": "constant", "theta": 0.7}``; ``None`` means no theta schedule
+    (the reducer's static theta runs unscheduled — only sensible for dense).
+    """
+
+    name: str
+    model: str = "lm"  # lm | convnet
+    reducer: Optional[str] = "fft"  # None | fft | timedomain | terngrad | qsgd
+    transport: str = "allgather"  # allgather | sequenced | psum
+    bucket_bytes: Optional[int] = None
+    theta: float = 0.7
+    schedule: Optional[Dict] = None  # make_schedule(**...) description
+    workers: int = 8
+    steps: int = 50
+    global_batch: int = 16
+    opt: str = "adamw"  # adamw | sgd (sgd runs momentum 0.9, paper-style)
+    lr: float = 3e-3
+    seed: int = 0
+    quantize: bool = True
+    error_feedback: bool = False
+    # Assumption 3.1 probe cadence: 1 = every step (smoke default); 0 = off
+    probe_every: int = 1
+
+    def __post_init__(self):
+        if self.model not in ("lm", "convnet"):
+            raise ValueError(f"unknown model {self.model!r}")
+        if self.reducer is None and self.schedule is not None:
+            raise ValueError("dense baseline cannot take a theta schedule")
+        if self.workers < 1 or self.global_batch % self.workers:
+            raise ValueError(
+                f"global_batch {self.global_batch} must divide by workers {self.workers}"
+            )
+        # theta and schedule encode the same knob: where the schedule's
+        # initial value is derivable, the static theta must agree, so the
+        # artifact's recipe can never contradict what actually ran
+        if self.schedule is not None:
+            kind = self.schedule.get("kind")
+            initial = None
+            if kind == "constant":
+                initial = self.schedule["theta"]
+            elif kind == "step_decay":
+                initial = sorted(self.schedule["points"])[0][1]
+            elif kind in ("polynomial_decay", "sigmoid_decay"):
+                initial = self.schedule["theta0"]
+            if initial is not None and abs(self.theta - initial) > 1e-9:
+                raise ValueError(
+                    f"theta={self.theta} disagrees with the schedule's "
+                    f"initial value {initial}; set them equal")
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ExperimentSpec":
+        return cls(**d)
+
+
+def _matrix(model: str, *, workers: int, steps: int, seed: int = 0) -> List[ExperimentSpec]:
+    """The per-model claim matrix: dense baseline, the paper's theta points,
+    mixed comp, and the transport trio (same config, only transport varies).
+
+    The transport trio runs monolithic payloads (``bucket_bytes=None``): with
+    one bucket the per-bucket quantizer fit equals the global fit, so all
+    three transports realize the SAME mean and the curves must be identical
+    (the equivalence claim).  Bucketed quantized runs differ by design
+    (per-bucket ranges) and are exercised by tests/test_transports.py instead.
+    """
+    base = dict(model=model, workers=workers, steps=steps, seed=seed)
+    if model == "convnet":
+        # paper-faithful CNN training: momentum SGD (adam's per-coordinate
+        # normalization amplifies compression noise on the tiny convnet)
+        base.update(opt="sgd", lr=0.1)
+    # paper §IV-A1 "mixed comp": high theta early, fully dense late.  The
+    # switch sits at one sixth of the run so the dense phase has room to
+    # close the early-compression gap within a smoke-sized budget (momentum
+    # SGD on the convnet needs most of the run to recover).
+    mixed_points = [[0, 0.99], [max(steps // 6, 1), 0.0]]
+    specs = [
+        ExperimentSpec(name=f"{model}_dense", reducer=None, **base),
+        ExperimentSpec(
+            name=f"{model}_fft_theta0.7", theta=0.7,
+            schedule={"kind": "constant", "theta": 0.7}, **base),
+        ExperimentSpec(
+            name=f"{model}_fft_theta0.9", theta=0.9,
+            schedule={"kind": "constant", "theta": 0.9}, **base),
+        ExperimentSpec(
+            name=f"{model}_fft_mixed", theta=0.99,
+            schedule={"kind": "step_decay", "points": mixed_points}, **base),
+    ]
+    for transport in ("sequenced", "psum"):
+        specs.append(ExperimentSpec(
+            name=f"{model}_fft_theta0.7_{transport}", theta=0.7, transport=transport,
+            schedule={"kind": "constant", "theta": 0.7}, **base))
+    return specs
+
+
+def smoke_matrix(workers: int = 8) -> List[ExperimentSpec]:
+    """CI smoke: convnet + tiny transformer, 8 simulated workers."""
+    return (_matrix("lm", workers=workers, steps=50)
+            + _matrix("convnet", workers=workers, steps=50))
+
+
+def full_matrix(workers: int = 8) -> List[ExperimentSpec]:
+    """The manual sweep: smoke + compressor baselines + extra schedules."""
+    specs = smoke_matrix(workers)
+    for model, steps in (("lm", 50), ("convnet", 50)):
+        base = dict(model=model, workers=workers, steps=steps)
+        if model == "convnet":
+            base.update(opt="sgd", lr=0.1)
+        specs += [
+            ExperimentSpec(name=f"{model}_timedomain_theta0.7", reducer="timedomain",
+                           theta=0.7, schedule={"kind": "constant", "theta": 0.7}, **base),
+            ExperimentSpec(name=f"{model}_terngrad", reducer="terngrad", **base),
+            ExperimentSpec(name=f"{model}_qsgd", reducer="qsgd", **base),
+            ExperimentSpec(name=f"{model}_fft_thm35", theta=0.5,
+                           schedule={"kind": "thm35", "lipschitz": 1.0, "eta": 0.3}, **base),
+            ExperimentSpec(name=f"{model}_fft_theta0.7_bucketed_ef", theta=0.7,
+                           bucket_bytes=4096 * 4, transport="sequenced",
+                           error_feedback=True,
+                           schedule={"kind": "constant", "theta": 0.7}, **base),
+        ]
+    # worker-count scaling point (claims are worker-count independent);
+    # derived from the requested count so e.g. --workers 2 never demands
+    # more devices than the CLI pinned
+    alt = max(workers // 2, 1)
+    if alt != workers:
+        specs.append(ExperimentSpec(
+            name=f"lm_fft_theta0.7_w{alt}", model="lm", workers=alt, steps=50,
+            theta=0.7, schedule={"kind": "constant", "theta": 0.7}))
+    return specs
+
+
+def group_by_model(specs: List[ExperimentSpec]) -> Dict[str, List[ExperimentSpec]]:
+    out: Dict[str, List[ExperimentSpec]] = {}
+    for s in specs:
+        out.setdefault(s.model, []).append(s)
+    return out

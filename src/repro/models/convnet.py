@@ -63,10 +63,10 @@ class ConvNet:
         spec["head"] = ParamSpec((cfg.widths[-1], cfg.n_classes), ("embed", None))
         return spec
 
-    def init(self, key):
+    def init(self, key, dtype=jnp.float32):
         from repro.models.sharding import init_params
 
-        return init_params(key, self.spec())
+        return init_params(key, self.spec(), dtype)
 
     def forward(self, params, images):
         cfg = self.cfg
@@ -85,7 +85,10 @@ class ConvNet:
         x = jnp.mean(x, axis=(1, 2))
         return x @ params["head"]
 
-    def loss(self, params, batch):
+    def loss(self, params, batch, *, ctx=None):
+        # ctx accepted for train-step compatibility (LM threads a MeshCtx for
+        # sharding constraints); the convnet is pure data-parallel so the
+        # constraint-free forward is already correct under shard_map
         logits = self.forward(params, batch["images"])
         logp = jax.nn.log_softmax(logits)
         ce = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)

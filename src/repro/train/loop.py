@@ -36,6 +36,11 @@ class TrainLoopConfig:
     theta_schedule: Optional[Callable[[int], float]] = None  # -> theta
     lr_schedule: Optional[Callable[[int], float]] = None  # -> multiplier
     failure_injector: Optional[Callable[[int], None]] = None  # tests raise here
+    # Called EVERY step (not just log_every) with (step, metrics, state) after
+    # the step commits; metrics values are host floats.  The convergence lab
+    # hangs its per-step recorder (loss / grad-energy / Assumption 3.1 probe)
+    # here without changing the history contract below.
+    metrics_hook: Optional[Callable[[int, Dict, Dict], None]] = None
 
 
 def train_loop(
@@ -89,6 +94,10 @@ def train_loop(
             step_fn = get_step_fn(theta)
             t0 = time.perf_counter()
             state, metrics = step_fn(state, batch)
+            if loop_cfg.metrics_hook is not None:
+                hook_metrics = {k: float(v) for k, v in metrics.items()}
+                hook_metrics.update(step=step, theta=theta, dt=time.perf_counter() - t0)
+                loop_cfg.metrics_hook(step, hook_metrics, state)
             if step % loop_cfg.log_every == 0:
                 metrics = {k: float(v) for k, v in metrics.items()}
                 metrics.update(step=step, theta=theta, dt=time.perf_counter() - t0)

@@ -1,0 +1,104 @@
+"""analysis/hlo.py replica-group parsing against captured HLO text fixtures.
+
+The fixtures are post-optimization HLO lines in the two replica-group formats
+XLA prints — explicit ``{{0,1},{2,3}}`` lists and the iota
+``[8,64]<=[512]`` form — plus scalar-shape operands and async ``-start``
+variants (the shapes/attributes mirror real ``compiled.as_text()`` dumps from
+the dry-run path)."""
+
+import pytest
+
+from repro.analysis import hlo
+
+EXPLICIT_FIXTURE = """\
+HloModule jit_step, entry_computation_layout={(f32[1024]{0})->f32[1024]{0}}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add.1 = f32[] add(f32[] %a, f32[] %b)
+}
+
+ENTRY %main {
+  %p0 = f32[1024]{0} parameter(0)
+  %all-reduce.1 = f32[1024]{0} all-reduce(f32[1024]{0} %p0), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %mul = f32[1024]{0} multiply(f32[1024]{0} %all-reduce.1, f32[1024]{0} %p0)
+  ROOT %copy = f32[1024]{0} copy(f32[1024]{0} %mul)
+}
+"""
+
+IOTA_FIXTURE = """\
+ENTRY %main {
+  %p0 = f32[1,128]{1,0} parameter(0)
+  %all-gather.7 = f32[8,128]{1,0} all-gather(f32[1,128]{1,0} %p0), channel_id=1, replica_groups=[8,64]<=[512], dimensions={0}, use_global_device_ids=true
+  %reduce-scatter.2 = f32[1,128]{1,0} reduce-scatter(f32[8,128]{1,0} %all-gather.7), channel_id=2, replica_groups=[64,8]<=[512], dimensions={0}, to_apply=%add
+  ROOT %copy = f32[1,128]{1,0} copy(f32[1,128]{1,0} %reduce-scatter.2)
+}
+"""
+
+SCALAR_FIXTURE = """\
+ENTRY %main {
+  %loss = f32[] parameter(0)
+  %all-reduce.3 = f32[] all-reduce(f32[] %loss), replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add
+  %all-reduce-start.1 = f32[512]{0} all-reduce-start(f32[512]{0} %g), replica_groups={{0,1,2,3}}, to_apply=%add
+  %all-reduce-done.1 = f32[512]{0} all-reduce-done(f32[512]{0} %all-reduce-start.1)
+  %cp = f32[2,4]{1,0} collective-permute(f32[2,4]{1,0} %x), source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def test_explicit_replica_groups_and_ring_model():
+    stats = hlo.parse_collectives(EXPLICIT_FIXTURE)
+    assert set(stats) == {"all-reduce"}
+    ar = stats["all-reduce"]
+    assert ar.count == 1
+    assert ar.raw_bytes == 1024 * 4
+    # group size 2 -> ring all-reduce moves 2*B*(n-1)/n = B bytes per device
+    assert ar.link_bytes == pytest.approx(2 * 1024 * 4 * (2 - 1) / 2)
+
+
+def test_iota_replica_groups_group_size():
+    stats = hlo.parse_collectives(IOTA_FIXTURE)
+    ag, rs = stats["all-gather"], stats["reduce-scatter"]
+    assert ag.count == 1 and rs.count == 1
+    # iota [8,64]<=[512]: 8 groups of size 64
+    assert ag.raw_bytes == 8 * 128 * 4
+    assert ag.link_bytes == pytest.approx(8 * 128 * 4 * (64 - 1) / 64)
+    # reduce-scatter result is the scattered shard; iota [64,8]: group size 8
+    assert rs.raw_bytes == 1 * 128 * 4
+    assert rs.link_bytes == pytest.approx(1 * 128 * 4 * (8 - 1))
+
+
+def test_scalar_shapes_async_starts_and_permute():
+    stats = hlo.parse_collectives(SCALAR_FIXTURE)
+    ar = stats["all-reduce"]
+    # the scalar all-reduce AND the -start count; the -done must NOT
+    assert ar.count == 2
+    assert ar.raw_bytes == 4 + 512 * 4
+    scalar_link = 2 * 4 * (8 - 1) / 8
+    start_link = 2 * 512 * 4 * (4 - 1) / 4
+    assert ar.link_bytes == pytest.approx(scalar_link + start_link)
+    cp = stats["collective-permute"]
+    assert cp.count == 1
+    assert cp.raw_bytes == 2 * 4 * 4
+    assert cp.link_bytes == 2 * 4 * 4  # permute: payload crosses one link
+
+
+def test_default_group_size_applies_when_unannotated():
+    text = "  %ar = f32[100]{0} all-reduce(f32[100]{0} %x), to_apply=%add\n"
+    stats = hlo.parse_collectives(text, default_group=4)
+    assert stats["all-reduce"].link_bytes == pytest.approx(2 * 400 * 3 / 4)
+    # group size 1 (no annotation, default 1): nothing crosses links
+    stats1 = hlo.parse_collectives(text)
+    assert stats1["all-reduce"].link_bytes == 0.0
+
+
+def test_summarize_shape():
+    out = hlo.summarize(hlo.parse_collectives(EXPLICIT_FIXTURE))
+    assert out == {
+        "all-reduce": {
+            "count": 1,
+            "raw_bytes": 1024 * 4.0,
+            "link_bytes": pytest.approx(4096.0),
+        }
+    }

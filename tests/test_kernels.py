@@ -98,6 +98,49 @@ def test_composed_kernel_pipeline_matches_core():
     np.testing.assert_allclose(np.array(ghat_k), np.array(ghat_c), atol=1e-5)
 
 
+@pytest.mark.parametrize("k_keep", [127, 128, 129])
+def test_fused_golden_at_tile_boundary_keep_counts(k_keep):
+    """Golden-value check of the fused kernel vs the ref.py oracles at keep
+    counts straddling the 128-lane tile: 127 (pad fills one slot), 128
+    (exact), 129 (spills into a second tile).  The payload slots beyond the
+    true keep count must stay code-0/index-0 padding."""
+    from repro.core import fft as cfft
+    from repro.kernels import fused_compress
+
+    cols = 513  # 1024-chunk rfft bins: tests a non-4096 plane too
+    q = fit_quantizer(-2.0, 2.0, RangeQuantConfig(8, 3))
+    key = jax.random.PRNGKey(k_keep)
+    re = jax.random.normal(key, (3, cols)) * 0.05
+    im = jax.random.normal(jax.random.fold_in(key, 1), (3, cols)) * 0.05
+    w = cfft.hermitian_weights(1024)
+
+    rec_f, imc_f, idx_f, tau_f = fused_compress.fused_compress_pallas(
+        re, im, w, q.eps, q.p_codes, k_keep=k_keep, interpret=True)
+
+    # oracle: exact k-th order statistic threshold, then index-ordered pack
+    mag = jnp.sqrt(re * re + im * im) * w[None, :]
+    tau_r, _ = ref.threshold_ref(mag, k_keep)
+    k_pad = ops.pad_k(k_keep)
+    mvals, idx_r = ref.pack_ref(mag, tau_r, k_pad)
+    valid = mvals != 0
+    re_k = jnp.take_along_axis(re, idx_r, axis=-1) * valid
+    im_k = jnp.take_along_axis(im, idx_r, axis=-1) * valid
+    rec_r = jnp.where(valid, ref.quant_encode_ref(re_k, q.eps, q.p_codes), 0)
+    imc_r = jnp.where(valid, ref.quant_encode_ref(im_k, q.eps, q.p_codes), 0)
+
+    assert rec_f.shape == (3, k_pad)  # 127->128, 128->128, 129->256
+    np.testing.assert_allclose(
+        np.array(tau_f).ravel(), np.array(tau_r).ravel(), rtol=1e-4)
+    np.testing.assert_array_equal(np.array(idx_f), np.array(idx_r))
+    np.testing.assert_array_equal(np.array(rec_f), np.array(rec_r))
+    np.testing.assert_array_equal(np.array(imc_f), np.array(imc_r))
+    # padding slots beyond k_keep carry no payload
+    n_kept = int(np.sum(np.array(mag) >= np.array(tau_r), axis=-1).max())
+    assert n_kept == k_keep  # continuous data: no threshold ties
+    assert not np.any(np.array(rec_f)[:, k_keep:])
+    assert not np.any(np.array(idx_f)[:, k_keep:])
+
+
 def test_fused_matches_unfused():
     """fused_compress (threshold+pack+quant in one VMEM pass) == unfused."""
     from repro.core import fft as cfft

@@ -1,0 +1,258 @@
+"""Convergence lab: tier-1 unit tests for the spec/evaluator/report layers
+(pure logic, fabricated curves) plus the tier-2 ``-m lab`` smoke matrix that
+actually trains on 8 simulated workers via the CLI."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from helpers import REPO
+
+from repro.comms import cost_model
+from repro.lab import report
+from repro.lab.evaluate import Tolerances, evaluate_results
+from repro.lab.spec import ExperimentSpec, full_matrix, smoke_matrix
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_roundtrip():
+    for spec in full_matrix():
+        d = spec.to_dict()
+        json.loads(json.dumps(d))  # JSON-serializable
+        assert ExperimentSpec.from_dict(d) == spec
+
+
+def test_smoke_matrix_covers_the_claims():
+    names = {s.name for s in smoke_matrix()}
+    for model in ("lm", "convnet"):
+        assert f"{model}_dense" in names
+        assert f"{model}_fft_theta0.7" in names
+        assert f"{model}_fft_theta0.9" in names
+        assert f"{model}_fft_mixed" in names
+        for transport in ("sequenced", "psum"):
+            assert f"{model}_fft_theta0.7_{transport}" in names
+
+
+def test_spec_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", model="mlp")
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", reducer=None,
+                       schedule={"kind": "constant", "theta": 0.5})
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", workers=8, global_batch=12)
+
+
+# ---------------------------------------------------------------------------
+# evaluator on fabricated curves
+# ---------------------------------------------------------------------------
+
+
+def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
+              err_ratio=0.5, lr=3e-3):
+    records = []
+    for i, loss in enumerate(losses):
+        rec = {"step": i, "loss": loss, "grad_sq": max(loss - 1.0, 0.05),
+               "theta": None if reducer is None else theta}
+        if reducer in ("fft", "timedomain"):
+            rec["err_ratio"] = err_ratio
+            rec["norm_ratio"] = 0.95
+            rec["payload_bits"] = 1e5
+            rec["compression_ratio"] = 10.0
+        records.append(rec)
+    return {
+        "spec": ExperimentSpec(
+            name=name, model=model, reducer=reducer, theta=theta,
+            schedule=schedule, lr=lr).to_dict(),
+        "records": records,
+        "n_elems": 10000,
+        "entropy_floor": 1.0,
+        "final_loss": losses[-1],
+        "wire": None,
+    }
+
+
+def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None):
+    dense = [4.0, 3.0, 2.5, 2.2, 2.0, 2.0]
+    t07 = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02]
+    trio = trio_losses if trio_losses is not None else t07
+    sched = {"kind": "constant", "theta": 0.7}
+    return {
+        "lm_dense": _fake_run("lm_dense", None, dense),
+        "lm_fft_theta0.7": _fake_run("lm_fft_theta0.7", "fft", t07, schedule=sched),
+        "lm_fft_theta0.9": _fake_run(
+            "lm_fft_theta0.9", "fft", dense[:-1] + [t09_final], theta=0.9,
+            schedule={"kind": "constant", "theta": 0.9}),
+        "lm_fft_mixed": _fake_run(
+            "lm_fft_mixed", "fft", dense[:-1] + [mixed_final], theta=0.99,
+            schedule={"kind": "step_decay", "points": [[0, 0.99], [2, 0.0]]}),
+        "lm_fft_theta0.7_sequenced": _fake_run(
+            "lm_fft_theta0.7_sequenced", "fft", trio, schedule=sched),
+        "lm_fft_theta0.7_psum": _fake_run(
+            "lm_fft_theta0.7_psum", "fft", trio, schedule=sched),
+    }
+
+
+def test_evaluator_passes_a_good_matrix():
+    claims, ok = evaluate_results(_matrix_runs(), Tolerances(final_tail=2))
+    assert ok, [c.to_dict() for c in claims if not c.passed]
+    assert len(claims) == 6  # one model family x six claims
+
+
+def test_evaluator_catches_theta09_not_degrading():
+    runs = _matrix_runs(t09_final=1.9)  # BETTER than theta0.7: claim must fail
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=1))
+    assert not ok
+    failed = {c.name for c in claims if not c.passed}
+    assert "lm:theta0.9_degrades" in failed
+
+
+def test_evaluator_catches_mixed_not_recovering():
+    claims, ok = evaluate_results(
+        _matrix_runs(mixed_final=3.5), Tolerances(final_tail=1))
+    assert {c.name for c in claims if not c.passed} == {"lm:mixed_recovers"}
+
+
+def test_evaluator_catches_transport_divergence():
+    trio = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 + 1e-3]
+    claims, ok = evaluate_results(
+        _matrix_runs(trio_losses=trio), Tolerances(final_tail=2))
+    assert "lm:transports_identical" in {c.name for c in claims if not c.passed}
+
+
+def test_evaluator_catches_assumption31_violation():
+    runs = _matrix_runs()
+    # theta=0.7 with err_ratio 0.99 > 1.05*sqrt(0.7)+0.15 must trip the claim
+    runs["lm_fft_theta0.7"] = _fake_run(
+        "lm_fft_theta0.7", "fft", [4.0, 3.1, 2.6, 2.25, 2.05, 2.02],
+        schedule={"kind": "constant", "theta": 0.7}, err_ratio=1.2)
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
+    assert "lm:assumption31" in {c.name for c in claims if not c.passed}
+
+
+def test_evaluator_flags_missing_runs():
+    runs = _matrix_runs()
+    del runs["lm_dense"]
+    claims, ok = evaluate_results(runs)
+    assert not ok
+    failed = {c.name for c in claims if not c.passed}
+    assert "lm:theta0.7_matches_dense" in failed
+    assert "lm:mixed_recovers" in failed
+
+
+# ---------------------------------------------------------------------------
+# per-run wire accounting (cost model)
+# ---------------------------------------------------------------------------
+
+
+def test_run_wire_account_prices_dense_and_compressed_steps():
+    n = 1 << 16
+    payload = 1e5
+    acct = cost_model.run_wire_account(n, [payload, payload, None], "allgather",
+                                       workers=8)
+    dense_step = cost_model.dense_allreduce_bits(n, 8)
+    assert acct.steps == 3
+    assert acct.dense_bits == pytest.approx(3 * dense_step)
+    # two compressed steps (P*B each) + one dense fallback step
+    assert acct.compressed_bits == pytest.approx(2 * 8 * payload + dense_step)
+    assert acct.savings > 1.0
+
+
+def test_run_wire_account_psum_is_worker_count_free():
+    acct_ag = cost_model.run_wire_account(4096, [1e4] * 5, "allgather", workers=8)
+    acct_ps = cost_model.run_wire_account(4096, [1e4] * 5, "psum", workers=8)
+    assert acct_ps.compressed_bits == pytest.approx(acct_ag.compressed_bits / 8)
+    assert acct_ps.savings == pytest.approx(acct_ag.savings * 8)
+
+
+def test_dense_allreduce_bits_single_worker_is_free():
+    assert cost_model.dense_allreduce_bits(4096, 1) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# report writer
+# ---------------------------------------------------------------------------
+
+
+def test_report_json_and_markdown(tmp_path):
+    runs = _matrix_runs()
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
+    claim_dicts = [c.to_dict() for c in claims]
+
+    out = tmp_path / "BENCH_convergence.json"
+    report.write_json(str(out), runs, claim_dicts, ok)
+    data = json.loads(out.read_text())
+    assert data["bench"] == "convergence_lab"
+    assert data["all_claims_passed"] is True
+    assert set(data["runs"]) == set(runs)
+
+    block = report.render_markdown(runs, claim_dicts, ok)
+    assert "| experiment |" in block
+    assert "lm_fft_theta0.9" in block
+    assert "`lm:transports_identical`" in block
+
+    docs = tmp_path / "EXPERIMENTS.md"
+    docs.write_text("# EXPERIMENTS\n\n## Convergence results\n\n"
+                    f"{report.MARKER}\n\n*(pending)*\n\n## Next section\n\nkeep me\n")
+    assert report.splice_experiments_md(str(docs), block)
+    text = docs.read_text()
+    assert "| experiment |" in text
+    assert "*(pending)*" not in text  # old block replaced
+    assert "## Next section\n\nkeep me" in text  # later sections intact
+    # idempotent: splicing again keeps exactly one table
+    assert report.splice_experiments_md(str(docs), block)
+    assert docs.read_text().count("| experiment |") == 1
+
+    nomark = tmp_path / "OTHER.md"
+    nomark.write_text("# no marker here\n")
+    assert not report.splice_experiments_md(str(nomark), block)
+    assert nomark.read_text() == "# no marker here\n"
+
+
+# ---------------------------------------------------------------------------
+# tier-2: the real smoke matrix (8 simulated workers, ~10 min on 2 cores)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.lab
+def test_lab_smoke_matrix_end_to_end(tmp_path):
+    """Acceptance gate: `python -m repro.lab.run --smoke` completes on an
+    8-simulated-worker CPU host, writes BENCH_convergence.json, splices the
+    EXPERIMENTS.md table, and every paper claim passes."""
+    out_json = tmp_path / "BENCH_convergence.json"
+    docs = tmp_path / "EXPERIMENTS.md"
+    docs.write_text("# EXPERIMENTS\n\n## Convergence results\n\n"
+                    f"{report.MARKER}\n\n*(pending)*\n\n## Tail\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)  # the CLI pins the device count itself
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.lab.run", "--smoke",
+         "--out", str(out_json), "--docs", str(docs), "--quiet"],
+        capture_output=True, text=True, timeout=2400, env=env)
+    assert proc.returncode == 0, (
+        f"lab smoke failed (rc={proc.returncode})\n--- stdout ---\n"
+        f"{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+
+    data = json.loads(out_json.read_text())
+    assert data["all_claims_passed"] is True
+    claim_names = {c["name"] for c in data["claims"]}
+    for model in ("lm", "convnet"):
+        for claim in ("theta0.7_matches_dense", "theta0.9_degrades",
+                      "mixed_recovers", "transports_identical",
+                      "assumption31", "thm34_envelope"):
+            assert f"{model}:{claim}" in claim_names, claim_names
+    # per-step evidence is in the artifact (curves + probes + wire model)
+    run = data["runs"]["lm_fft_theta0.7"]
+    assert len(run["records"]) == run["spec"]["steps"]
+    assert all("err_ratio" in r for r in run["records"])
+    assert run["wire"]["compressed_bits"] > 0
+    # the docs table was spliced in place
+    text = docs.read_text()
+    assert "| experiment |" in text and "## Tail" in text

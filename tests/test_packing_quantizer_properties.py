@@ -1,0 +1,138 @@
+"""Property-based roundtrip tests for core/packing.py and core/quantizer.py
+edge cases the PR-1 bucketed exchange exposed: all-zero buckets,
+single-element buckets, denormal-range values, and the int16 index ceiling
+(chunk = 32767)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.core import packing
+from repro.core import quantizer as Q
+from repro.core.compressor import (
+    FFTCompressor,
+    FFTCompressorConfig,
+    TimeDomainCompressor,
+)
+
+CFG = Q.RangeQuantConfig(n_bits=8, m_bits=3)
+
+
+# ---------------------------------------------------------------------------
+# all-zero buckets: a bucket whose gradient slice is exactly zero must
+# round-trip to exactly zero through every layer (quantizer fit included —
+# the degenerate [0, 0] range may not produce NaNs/Infs)
+# ---------------------------------------------------------------------------
+
+
+def test_quantizer_fit_on_all_zero_range_is_finite():
+    q = Q.fit_quantizer(0.0, 0.0, CFG)
+    for leaf in (q.eps, q.vmax, q.vmin):
+        assert np.isfinite(float(leaf))
+    x = jnp.zeros((64,))
+    np.testing.assert_array_equal(np.array(Q.decode(Q.encode(x, q), q)), 0.0)
+
+
+@pytest.mark.parametrize("comp_cls", [FFTCompressor, TimeDomainCompressor])
+def test_all_zero_bucket_roundtrips_to_zero(comp_cls):
+    comp = comp_cls(FFTCompressorConfig(theta=0.7))
+    x = jnp.zeros((4096 + 123,))
+    x_hat = comp.decompress(comp.compress(x))
+    assert x_hat.shape == x.shape
+    np.testing.assert_allclose(np.array(x_hat), 0.0, atol=1e-30)
+
+
+# ---------------------------------------------------------------------------
+# single-element buckets (the smallest legal bucket content: one scalar leaf)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(value=st.floats(-100.0, 100.0))
+def test_single_element_roundtrip_fft(value):
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.0, quantize=False))
+    x = jnp.asarray([value], jnp.float32)
+    x_hat = comp.decompress(comp.compress(x))
+    assert x_hat.shape == (1,)
+    np.testing.assert_allclose(np.array(x_hat), np.array(x), atol=1e-4, rtol=1e-5)
+
+
+def test_single_element_pack_unpack_by_indices():
+    x2d = jnp.asarray([[3.5]])
+    idx = jnp.asarray([[0]])
+    vals = packing.pack_by_indices(x2d, idx)
+    dense = packing.unpack_by_indices(vals, idx, 1)
+    np.testing.assert_array_equal(np.array(dense), np.array(x2d))
+
+
+# ---------------------------------------------------------------------------
+# denormal-range values: ranges near the f32 denormal boundary must fit and
+# round-trip without NaN/Inf (eps clamping in solve_eps)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.sampled_from([1e-30, 1e-37, 1e-40, 1e-44]))
+def test_denormal_range_fit_and_roundtrip(scale):
+    q = Q.fit_quantizer(-scale, scale, CFG)
+    assert np.isfinite(float(q.eps)) and float(q.eps) > 0.0
+    x = jnp.asarray([-scale, -scale / 2, 0.0, scale / 2, scale], jnp.float32)
+    xr = Q.decode(Q.encode(x, q), q)
+    assert bool(jnp.all(jnp.isfinite(xr)))
+    # zero still maps to exactly zero and signs are preserved (or flushed to 0)
+    assert float(xr[2]) == 0.0
+    assert bool(jnp.all(xr[:2] <= 0.0)) and bool(jnp.all(xr[3:] >= 0.0))
+
+
+def test_denormal_values_in_normal_range_flush_to_zero_or_eps():
+    """Values below eps encode to 0 or the smallest code — never garbage."""
+    q = Q.fit_quantizer(-1.0, 1.0, CFG)
+    tiny = jnp.asarray([1e-38, -1e-38, 5e-41], jnp.float32)
+    xr = Q.decode(Q.encode(tiny, q), q)
+    assert bool(jnp.all(jnp.abs(xr) <= float(q.eps) + 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# int16 index ceiling: chunk = 32767 is the largest legal chunk (PR 1 unified
+# payload indices to int16); 32768 must be rejected, and a 32767-chunk
+# time-domain payload must round-trip with indices intact at the top end
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_beyond_int16_ceiling_rejected():
+    with pytest.raises(ValueError, match="int16"):
+        FFTCompressorConfig(chunk=32768)
+    # the ceiling itself is legal
+    FFTCompressorConfig(chunk=32767)
+
+
+def test_int16_ceiling_chunk_roundtrips_top_indices():
+    """Top-k survivors at the very top of a 32767 chunk keep exact positions
+    (an int16 overflow would wrap them negative and scatter elsewhere)."""
+    chunk = 32767
+    comp = TimeDomainCompressor(
+        FFTCompressorConfig(theta=0.99, chunk=chunk, quantize=False))
+    x = jnp.zeros((chunk,)).at[chunk - 1].set(7.0).at[chunk - 2].set(-5.0).at[0].set(3.0)
+    payload = comp.compress(x)
+    assert payload.idx.dtype == jnp.int16
+    assert int(payload.idx.max()) == chunk - 1  # no wraparound
+    x_hat = comp.decompress(payload)
+    np.testing.assert_allclose(
+        np.array(x_hat)[[0, chunk - 2, chunk - 1]], [3.0, -5.0, 7.0], atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 200))
+def test_bitmap_pack_unpack_roundtrip_ragged_counts(n):
+    """Bitmap payload round-trips exactly for any nonzero count <= k."""
+    chunk = 256
+    x = jnp.zeros((1, chunk)).at[0, jnp.arange(n) * (chunk // max(n, 1))].set(1.0)
+    mask = x != 0
+    payload = packing.pack_bitmap(x, mask, k=200)
+    dense = packing.unpack_bitmap(payload, chunk)
+    np.testing.assert_array_equal(np.array(dense), np.array(x))

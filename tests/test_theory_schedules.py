@@ -45,6 +45,78 @@ def test_quantize_theta_bounds_recompiles():
     assert len(grid) <= 21  # bounded distinct compiled steps
 
 
+def test_make_schedule_from_declarative_descriptions():
+    assert schedules.make_schedule(None) is None
+    const = schedules.make_schedule("constant", theta=0.7)
+    assert const(0) == const(999) == 0.7
+    mixed = schedules.make_schedule("step_decay", points=[[0, 0.99], [30, 0.0]])
+    assert mixed(29) == 0.99 and mixed(30) == 0.0
+    poly = schedules.make_schedule("polynomial_decay", theta0=0.9, total_steps=10)
+    assert poly(10) == 0.0
+    sig = schedules.make_schedule("sigmoid_decay", theta0=0.8, midpoint=5)
+    assert 0.0 < sig(5) < 0.8
+    t35 = schedules.make_schedule("thm35", lipschitz=1.0, eta=0.09)
+    assert t35(0) == pytest.approx(0.3)
+    with pytest.raises(ValueError):
+        schedules.make_schedule("cosine", theta=0.5)
+
+
+def test_schedule_curve_reports_realized_quantized_thetas():
+    sched = schedules.make_schedule("step_decay", points=[[0, 0.99], [3, 0.0]])
+    curve = schedules.schedule_curve(sched, 5)
+    # 0.99 snaps to the 0.95 cap — the curve reports what actually RAN
+    assert curve == (0.95, 0.95, 0.95, 0.0, 0.0)
+    assert schedules.schedule_curve(None, 3) == (0.0, 0.0, 0.0)
+
+
+# --- measured-curve helpers (convergence lab) -------------------------------
+
+
+def test_estimate_curve_constants_descent_lemma():
+    eta = 0.1
+    # loss falls exactly eta*(1 - L*eta/2)*gsq per step for L=2: L-hat == 2
+    gsq = [1.0, 1.0, 1.0]
+    drop = eta * (1 - 2 * eta / 2) * 1.0
+    loss = [2.0, 2.0 - drop, 2.0 - 2 * drop]
+    c = theory.estimate_curve_constants(loss, gsq, eta=eta, batch=4, fstar=0.5)
+    assert c.lipschitz == pytest.approx(2.0, rel=1e-6)
+    assert c.f0_minus_fstar == pytest.approx(1.5)
+    assert c.sigma_sq == pytest.approx(4 * 1.0)  # b * tail mean
+    with pytest.raises(ValueError):
+        theory.estimate_curve_constants([1.0], [1.0], 0.1, 4)
+
+
+def test_thm34_envelope_holds_and_detects_violations():
+    c = theory.CurveConstants(f0_minus_fstar=2.0, lipschitz=1.0, sigma_sq=4.0)
+    gsq = [4.0, 2.0, 1.0, 0.5]
+    env = theory.thm34_envelope(gsq, c, eta=0.1, theta=0.7, batch=8)
+    assert env.holds
+    assert env.min_so_far == (4.0, 2.0, 1.0, 0.5)
+    assert all(b > 0 for b in env.bounds)
+    # a curve whose grad energy NEVER decreases below the noise floor while
+    # K grows must eventually violate the shrinking opt term
+    flat = [1e4] * 200
+    env_bad = theory.thm34_envelope(flat, c, eta=0.1, theta=0.0, batch=8)
+    assert not env_bad.holds
+
+
+def test_curves_close_pointwise():
+    ok, div = theory.curves_close([1.0, 2.0, 3.0], [1.0, 2.0, 3.0])
+    assert ok and div == 0.0
+    ok, div = theory.curves_close([1.0, 2.0], [1.0, 2.1], atol=1e-2)
+    assert not ok and div == pytest.approx(0.1)
+    with pytest.raises(ValueError):
+        theory.curves_close([1.0], [1.0, 2.0])
+
+
+def test_assumption31_holds_stats_norm_tolerance():
+    # quantization can push the reconstruction norm slightly above 1
+    assert theory.assumption31_holds_stats(0.3, 1.02, theta=0.5, norm_tol=0.05)
+    assert not theory.assumption31_holds_stats(0.3, 1.02, theta=0.5)
+    assert not theory.assumption31_holds_stats(0.6, 0.9, theta=0.5)
+    assert theory.assumption31_holds_stats(0.6, 0.9, theta=0.5, slack=1.5)
+
+
 # --- §III-D cost model (Fig. 9) --------------------------------------------
 
 

@@ -105,6 +105,67 @@ print("EF_TRANSPORTS_OK")
     assert "EF_TRANSPORTS_OK" in out
 
 
+def test_seeded_determinism_bitwise_across_transports(tmp_path):
+    """Identical seed + config must produce bitwise-identical checkpoints
+    regardless of transport: the gather transports fold worker contributions
+    in the same order the CPU backend's all-reduce sums them (see
+    transport._ordered_worker_mean), so allgather/sequenced/psum realize the
+    SAME f32 mean bit-for-bit, and a rerun of any transport is bitwise
+    reproducible.  This is what makes transport choice a pure performance
+    knob: switching transports mid-experiment can never change the training
+    trajectory."""
+    out = run_with_devices(SMAP_COMPAT + f"""
+import dataclasses, os
+import numpy as np
+from repro.comms.reducers import ReducerConfig
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticConfig, SyntheticStream
+from repro.jaxcompat import set_mesh
+from repro.models.transformer import LM
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, init_state, train_loop
+from repro.train import checkpoint as ckpt
+from repro.train.step import StepConfig
+
+TINY = ArchConfig(name="tiny", family="dense", n_layers=1, d_model=32,
+                  n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                  vocab_size=32, remat="none")
+mesh = make_auto_mesh((4,), ("data",))
+model = LM(TINY)
+opt = OptConfig(kind="adamw", lr=3e-3)
+stream = SyntheticStream(SyntheticConfig(vocab_size=32, seq_len=16, global_batch=8))
+
+def run(transport, tag):
+    cfg = StepConfig(mode="compressed_dp", reducer=ReducerConfig(
+        kind="fft", axis="data", theta=0.7, quantize=True, transport=transport))
+    state = init_state(jax.random.PRNGKey(7), model, opt)
+    ckdir = os.path.join({str(tmp_path)!r}, tag)
+    with set_mesh(mesh):
+        train_loop(model, opt, cfg, mesh, state, stream,
+                   TrainLoopConfig(total_steps=8, ckpt_dir=ckdir,
+                                   ckpt_every=8, log_every=100))
+    return ckdir
+
+def arrays(ckdir):
+    d = np.load(os.path.join(ckdir, "step_00000008", "arrays.npz"))
+    return {{k: d[k] for k in d.files}}
+
+base = arrays(run("allgather", "ag"))
+rerun = arrays(run("allgather", "ag2"))
+for k in base:
+    assert np.array_equal(base[k], rerun[k]), ("rerun nondeterminism", k)
+for transport in ("sequenced", "psum"):
+    got = arrays(run(transport, transport))
+    assert set(got) == set(base)
+    for k in base:
+        assert base[k].dtype == got[k].dtype and np.array_equal(base[k], got[k]), (
+            transport, k, np.abs(base[k].astype(np.float64)
+                                 - got[k].astype(np.float64)).max())
+print("DETERMINISM_OK")
+""", devices=4, timeout=560)
+    assert "DETERMINISM_OK" in out
+
+
 def test_hierarchical_mode_across_transports():
     out = run_with_devices(SMAP_COMPAT + """
 import dataclasses
