@@ -7,10 +7,12 @@ and derives projected TPU-v5e stage times from the §III-D throughput model
 analysis and EXPERIMENTS.md §Perf).
 
 Also sweeps bucket size × transport through the cost model (DESIGN.md §9/§11)
-— per-worker wire bits, modeled exchange time, overlap fraction, plus a
-measured host-side per-bucket compress — and writes the result to
-``BENCH_throughput.json`` at the repo root so the perf trajectory is recorded
-per PR.
+— per-worker wire bits (priced at the transport's payload granularity via
+``cost_model.bucketed_payload_bits``), modeled exchange time, overlap
+fraction, plus a measured host-side per-bucket compress — and times the
+composed compress/decompress under EVERY engine backend (DESIGN.md §13),
+writing both to ``BENCH_throughput.json`` at the repo root so the perf
+trajectory is recorded per PR.
 """
 
 from __future__ import annotations
@@ -33,13 +35,43 @@ N = 1 << 24  # 16M floats = 64 MB
 SWEEP_WORKERS = 8
 SWEEP_BUCKET_MB = (None, 1, 4, 16)  # None = monolithic (seed behavior)
 SWEEP_TRANSPORTS = ("allgather", "sequenced", "psum")
+# engine backends timed on a smaller buffer: off-TPU the pallas backend runs
+# its kernels in interpret mode, so host numbers validate plumbing (and feed
+# the schema), while TPU runs measure the real fused-vs-staged gap (H-K1)
+BACKEND_NAMES = ("reference", "pallas")
+N_BACKEND = 32 * 4096  # 512 KB
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_throughput.json")
+
+
+def _backend_rows(theta: float) -> tuple:
+    """Per-backend compress+decompress timings (EXPERIMENTS.md H-K1)."""
+    g = jax.random.normal(jax.random.PRNGKey(2), (N_BACKEND,)) * 0.05
+    rows, records = [], []
+    for backend in BACKEND_NAMES:
+        comp = FFTCompressor(FFTCompressorConfig(theta=theta, backend=backend))
+        compress = jax.jit(comp.compress)
+        c_us = time_fn(compress, g, warmup=1, iters=3)
+        payload = compress(g)
+        d_us = time_fn(jax.jit(comp.decompress), payload, warmup=1, iters=3)
+        rows.append(Row(
+            name=f"backend_{backend}",
+            compress_us=round(c_us, 1),
+            decompress_us=round(d_us, 1),
+            host_gbps=round(4 * N_BACKEND / ((c_us + d_us) / 1e6) / 1e9, 3),
+        ))
+        records.append({
+            "backend": backend,
+            "n_elems": N_BACKEND,
+            "interpret_mode": jax.default_backend() != "tpu",
+            "compress_us": round(c_us, 1),
+            "decompress_us": round(d_us, 1),
+        })
+    return rows, records
 
 
 def _sweep_rows(comp: FFTCompressor) -> list:
     """Bucket size × transport sweep: modeled wire/time + measured compress."""
     m_bytes = 4 * N
-    payload_bits = comp.wire_bits(N)
     g = jax.random.normal(jax.random.PRNGKey(1), (N,)) * 0.05
     rows, records = [], []
     for bucket_mb in SWEEP_BUCKET_MB:
@@ -52,6 +84,10 @@ def _sweep_rows(comp: FFTCompressor) -> list:
         for transport in SWEEP_TRANSPORTS:
             if transport == "allgather" and layout.n_buckets > 1:
                 continue  # monolithic by definition
+            # payload priced at the transport's quantizer granularity:
+            # per-bucket params for sequenced/psum, one global fit otherwise
+            payload_bits = cm.bucketed_payload_bits(
+                comp.wire_bits, layout.sizes(), transport)
             plan = cm.exchange_time_s(
                 m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
                 workers=SWEEP_WORKERS, transport=transport,
@@ -72,15 +108,19 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                 "workers": SWEEP_WORKERS,
                 "message_mb": m_bytes / (1 << 20),
                 "host_compress_us": round(us, 1),
+                "payload_bits": payload_bits,
                 "wire_bits_per_worker": plan.wire_bits_per_worker,
                 "model_exchange_ms": plan.exchange_s * 1e3,
                 "overlap_fraction": plan.overlap,
             })
+    backend_rows, backend_records = _backend_rows(comp.config.theta)
+    rows.extend(backend_rows)
     with open(BENCH_JSON, "w") as f:
         json.dump({"benchmark": "throughput_exchange_sweep",
                    "theta": comp.config.theta,
                    "n_bits": comp.config.n_bits,
-                   "records": records}, f, indent=2)
+                   "records": records,
+                   "backends": backend_records}, f, indent=2)
     return rows
 
 

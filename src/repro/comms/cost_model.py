@@ -23,8 +23,8 @@ import dataclasses
 __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "saved_comm_s", "k_min", "is_beneficial", "NETWORKS",
            "bucket_count", "transport_wire_bits", "overlap_fraction",
-           "exchange_time_s", "ExchangePlan", "dense_allreduce_bits",
-           "RunWireAccount", "run_wire_account"]
+           "bucketed_payload_bits", "exchange_time_s", "ExchangePlan",
+           "dense_allreduce_bits", "RunWireAccount", "run_wire_account"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,6 +137,34 @@ def transport_wire_bits(transport: str, payload_bits: float, workers: int) -> fl
     if transport == "psum":
         return float(payload_bits)
     raise ValueError(f"unknown transport {transport!r}")
+
+
+def bucketed_payload_bits(wire_bits_fn, sizes, transport: str = "sequenced") -> float:
+    """Compressed payload bits of ONE exchange over a bucket layout.
+
+    Quantizer-param overhead (4·32 bits: eps, P, vmin, vmax) is billed per
+    PAYLOAD, and payload granularity is the transport's choice:
+
+    * ``allgather`` concatenates the buckets and compresses monolithically —
+      one quantizer fit, one overhead (`transport.AllGatherTransport`);
+    * ``sequenced``/``psum`` compress per bucket
+      (``FFTCompressor.compress_buckets`` fits one quantizer per bucket), so
+      every bucket carries its own params.
+
+    ``wire_bits_fn`` is the compressor's ``wire_bits`` (already includes one
+    per-payload overhead); ``sizes`` are the layout's unpadded bucket lengths
+    (``bucketing.BucketLayout.sizes()``).  Before this helper, models summed
+    ONE monolithic ``wire_bits`` regardless of transport, under-billing the
+    per-bucket params the bucketed transports actually exchange.
+    """
+    sizes = list(sizes)
+    if not sizes:
+        raise ValueError("empty bucket layout")
+    if transport not in ("allgather", "sequenced", "psum"):
+        raise ValueError(f"unknown transport {transport!r}")
+    if transport == "allgather" or len(sizes) == 1:
+        return float(wire_bits_fn(sum(sizes)))
+    return float(sum(wire_bits_fn(s) for s in sizes))
 
 
 def overlap_fraction(n_buckets: int) -> float:

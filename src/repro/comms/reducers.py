@@ -58,6 +58,7 @@ from repro.core.compressor import (
     FFTCompressorConfig,
     TimeDomainCompressor,
 )
+from repro.kernels.engine import BACKEND_NAMES
 
 __all__ = [
     "ReducerConfig",
@@ -115,6 +116,8 @@ class ReducerConfig:
     # f32 gradient (None = one monolithic bucket) and the collective strategy
     bucket_bytes: Optional[int] = None
     transport: str = "allgather"  # allgather|sequenced|psum
+    # compressor stage-execution engine (DESIGN.md §13): reference|pallas|auto
+    backend: str = "reference"
 
     def __post_init__(self):
         if self.transport not in TRANSPORT_NAMES:
@@ -123,6 +126,9 @@ class ReducerConfig:
             )
         if self.bucket_bytes is not None and self.bucket_bytes <= 0:
             raise ValueError(f"bucket_bytes must be positive, got {self.bucket_bytes}")
+        if self.backend not in BACKEND_NAMES:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKEND_NAMES}")
 
     def compressor_config(self) -> FFTCompressorConfig:
         return FFTCompressorConfig(
@@ -133,6 +139,7 @@ class ReducerConfig:
             quantize=self.quantize,
             range_mode=self.range_mode,
             fixed_range=self.fixed_range,
+            backend=self.backend,
         )
 
     def layout_for(self, total: int) -> bucketing.BucketLayout:

@@ -17,6 +17,12 @@ Compressor protocol (duck-typed; baselines implement the same):
     x_hat   = comp.decompress(payload)
     bits    = comp.wire_bits(n)         # static wire size estimate
     ratio   = comp.ratio(n)             # 32*n / wire_bits
+
+Stage execution is delegated to a pluggable ENGINE BACKEND
+(``kernels/engine.py``): ``reference`` (pure jnp, seed behavior), ``pallas``
+(the fused device kernels), or ``auto`` (pallas when the platform compiles
+Mosaic and the config is kernel-eligible).  Every backend emits the same
+payload layout, so transports and reducers are backend-oblivious.
 """
 
 from __future__ import annotations
@@ -50,17 +56,26 @@ __all__ = [
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class FFTPayload:
-    """Wire payload: quantized kept spectrum + indices + quantizer params."""
+    """Wire payload: quantized kept spectrum + indices + quantizer params.
+
+    ``has_im`` (static) marks whether the imaginary plane carries data.
+    Time-domain payloads are purely real: they ship an EMPTY ``im`` array
+    (shape (c, 0)) with ``has_im=False`` so the collectives move half the
+    value bytes — matching ``TimeDomainCompressor.wire_bits``, which has
+    always billed a single value plane.
+    """
 
     re: jnp.ndarray  # (c, k) codes (uintN) or f32 when quantization is off
-    im: jnp.ndarray  # (c, k)
+    im: jnp.ndarray  # (c, k), or (c, 0) when has_im=False (time domain)
     idx: jnp.ndarray  # (c, k) int16 bin indices (chunk <= 4096 fits; 16 wire bits)
     quant: Optional[FittedQuantizer]  # None when quantization is off
     orig_len: int = dataclasses.field(metadata={"static": True})
     chunk: int = dataclasses.field(metadata={"static": True})
+    has_im: bool = dataclasses.field(default=True, metadata={"static": True})
 
     def tree_flatten(self):
-        return (self.re, self.im, self.idx, self.quant), (self.orig_len, self.chunk)
+        return (self.re, self.im, self.idx, self.quant), (
+            self.orig_len, self.chunk, self.has_im)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -79,6 +94,8 @@ class FFTCompressorConfig:
     range_mode: str = "auto"  # "auto": per-call min/max; "fixed": use fixed_range
     fixed_range: Tuple[float, float] = (-1.0, 1.0)  # paper: [-1,1] AlexNet, [-6,6] ResNet
     index_bits: int = 16
+    # stage-execution engine: reference | pallas | auto (kernels/engine.py)
+    backend: str = "reference"
 
     def __post_init__(self):
         # payloads carry int16 indices (and bill index_bits=16 on the wire);
@@ -87,81 +104,56 @@ class FFTCompressorConfig:
             raise ValueError(f"chunk must be <= 32767 (int16 indices), got {self.chunk}")
         if self.chunk < 1:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
+        from repro.kernels.engine import BACKEND_NAMES
+
+        if self.backend not in BACKEND_NAMES:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKEND_NAMES}")
 
     def with_theta(self, theta: float) -> "FFTCompressorConfig":
         return dataclasses.replace(self, theta=theta)
 
 
 class FFTCompressor:
-    """Paper's full pipeline: FFT -> theta-drop -> range-quant -> pack."""
+    """Paper's full pipeline: FFT -> theta-drop -> range-quant -> pack.
+
+    Owns the protocol and the config; STAGE EXECUTION is delegated to the
+    engine backend named by ``config.backend`` (kernels/engine.py).  All
+    backends emit the same payload layout, so a payload compressed by one
+    backend decompresses under any other.
+    """
 
     def __init__(self, config: FFTCompressorConfig = FFTCompressorConfig()):
         self.config = config
-        self._qcfg = RangeQuantConfig(config.n_bits, config.m_bits)
+        from repro.kernels import engine as _engine
 
-    # -- helpers -----------------------------------------------------------
-    def _keep_k(self) -> int:
-        f_bins = self.config.chunk // 2 + 1
-        return sparsify.keep_count(f_bins, self.config.theta)
+        self._engine_mod = _engine
+        self._backend = _engine.get_backend(config.backend)
 
-    def _fit(self, re: jnp.ndarray, im: jnp.ndarray) -> FittedQuantizer:
-        if self.config.range_mode == "fixed":
-            lo, hi = self.config.fixed_range
-            return fit_quantizer(lo, hi, self._qcfg)
-        lo = jnp.minimum(re.min(), im.min())
-        hi = jnp.maximum(re.max(), im.max())
-        return fit_quantizer(lo, hi, self._qcfg)
+    @property
+    def backend(self):
+        """The engine backend executing this compressor's stages."""
+        return self._backend
 
     # -- protocol ----------------------------------------------------------
     def compress(self, x_flat: jnp.ndarray, key=None) -> FFTPayload:
-        cfg = self.config
-        freqs, n = cfft.chunked_rfft(x_flat, cfg.chunk)
-        k = self._keep_k()
-        w = cfft.hermitian_weights(cfg.chunk)
-        mag = jnp.abs(freqs) * w
-        idx = sparsify.topk_select(mag, k)
-        kept = packing.pack_by_indices(freqs, idx)
-        re, im = jnp.real(kept), jnp.imag(kept)
-        if cfg.quantize:
-            quant = self._fit(re, im)
-            re, im = q_encode(re, quant), q_encode(im, quant)
-        else:
-            quant = None
-        # int16 indices: 2049 rfft bins fit; halves the index wire bytes
-        return FFTPayload(re, im, idx.astype(jnp.int16), quant, n, cfg.chunk)
+        return self._backend.compress(self.config, x_flat)
 
     def decompress_spectrum(self, payload: FFTPayload) -> jnp.ndarray:
         """Payload -> dense complex spectrum (c, chunk//2+1)."""
-        re, im = payload.re, payload.im
-        if payload.quant is not None:
-            re, im = q_decode(re, payload.quant), q_decode(im, payload.quant)
-        kept = re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
-        f_bins = payload.chunk // 2 + 1
-        return packing.unpack_by_indices(kept, payload.idx, f_bins)
+        return self._backend.decompress_spectrum(payload)
 
     def decompress(self, payload: FFTPayload) -> jnp.ndarray:
-        spectrum = self.decompress_spectrum(payload)
-        return cfft.chunked_irfft(spectrum, payload.orig_len, payload.chunk)
+        return self._backend.decompress(payload)
 
     def compress_buckets(self, bucket_flats) -> list:
-        """Per-bucket compression: each bucket fits its OWN quantizer range.
-
-        The monolithic path fits one (min, max) over the whole gradient, so a
-        small bucket whose spectrum lives in a narrow band inherits a global
-        range and wastes most of its codes.  Compressing per bucket keeps the
-        range local (DESIGN.md §8); the bucketed transports rely on this.
-        """
-        return [self.compress(b) for b in bucket_flats]
+        """Per-bucket compression: each bucket fits its OWN quantizer range
+        (DESIGN.md §8); the bucketed transports rely on this."""
+        return self._backend.compress_buckets(self.config, bucket_flats)
 
     # -- size accounting ----------------------------------------------------
     def wire_bits(self, n: int) -> int:
-        cfg = self.config
-        n_chunks = max(1, -(-n // cfg.chunk))
-        k = self._keep_k()
-        value_bits = 2 * (cfg.n_bits if cfg.quantize else 32)  # re + im
-        per_chunk = k * (value_bits + cfg.index_bits)
-        overhead = 4 * 32  # quantizer params (eps, P, vmin, vmax)
-        return n_chunks * per_chunk + overhead
+        return self._engine_mod.wire_bits(self.config, n)
 
     def ratio(self, n: int) -> float:
         return 32.0 * n / self.wire_bits(n)
@@ -190,8 +182,13 @@ class TimeDomainCompressor:
         else:
             quant = None
         # int16 indices, same as FFTPayload's frequency path: chunk <= 4096
-        # fits and the wire accounting (index_bits=16) matches the payload
-        return FFTPayload(vals, jnp.zeros_like(vals), idx.astype(jnp.int16), quant, n, cfg.chunk)
+        # fits and the wire accounting (index_bits=16) matches the payload.
+        # The payload is purely real: ship an EMPTY im plane (has_im=False)
+        # so collectives move exactly the bytes wire_bits bills — the old
+        # zeros_like(vals) plane doubled the value bytes on every exchange.
+        empty_im = jnp.zeros(vals.shape[:-1] + (0,), vals.dtype)
+        return FFTPayload(vals, empty_im, idx.astype(jnp.int16), quant, n,
+                          cfg.chunk, has_im=False)
 
     def decompress(self, payload: FFTPayload) -> jnp.ndarray:
         vals = payload.re

@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the paper's four compression hot spots
-(FFT, top-k select, precision conversion, pack) + the fused pipeline.
+(FFT, top-k select, precision conversion, pack) + the fused pipeline
+(``fused_compress``, ``fused_decompress``) and the ENGINE that dispatches
+the compressor's stage execution across backends (``engine``: reference jnp
+| fused pallas | auto).
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
-jit'd wrappers in ops.py, pure-jnp oracles in ref.py.
+jit'd wrappers in ops.py, pure-jnp oracles in ref.py, shared interpret-mode
+policy in runtime.py.
 Validated in interpret mode on CPU; compiled via Mosaic on TPU.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, ref, runtime  # noqa: F401

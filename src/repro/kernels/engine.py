@@ -1,0 +1,387 @@
+"""Compressor engine: pluggable stage-execution backends for the paper's
+pipeline (the "swappable fusion schedule" move — SSFusion's schedule registry
+applied to our compress/decompress hot path).
+
+``FFTCompressor`` (core/compressor.py) owns the *protocol* — payload format,
+wire accounting, config — and delegates stage execution here.  A backend
+implements the same five entry points the compressor exposes:
+
+    compress(cfg, x_flat)          -> FFTPayload
+    compress_buckets(cfg, buckets) -> [FFTPayload]
+    decompress(payload)            -> flat f32
+    decompress_spectrum(payload)   -> dense complex spectrum
+    wire_bits(cfg, n)              -> static wire estimate (shared accounting)
+
+Backends (``FFTCompressorConfig.backend``):
+
+* ``reference`` — the pure-``jnp`` path (the seed's staged pipeline; its
+  ranking magnitude is now the canonical kernel-native form, see
+  ``_weighted_magnitude`` — kept sets can differ from pre-engine output at
+  1-ulp boundaries).
+* ``pallas``    — the fused device kernels: compress runs the bisection
+  threshold + ``fused_compress`` (threshold -> pack -> quantize in one VMEM
+  pass); decompress runs ``fused_decompress`` (dequantize -> Hermitian
+  scatter -> 4-step iFFT in one VMEM pass).  Stages with no kernel-eligible
+  shape fall back per-stage with a logged reason.
+* ``auto``      — ``pallas`` when the platform compiles Mosaic
+  (``runtime.mosaic_available``) and the config is kernel-eligible
+  (``kernel_eligibility``), else ``reference``; the choice is logged once.
+
+Payload compatibility contract: every backend emits the SAME ``FFTPayload``
+layout — ``(c, k)`` planes, int16 indices, one fitted quantizer — so the
+transports (comms/transport.py) accept engine-produced payloads unchanged
+and backends can be mixed across workers.  The only licensed difference is
+slot ORDER: reference packs kept coefficients magnitude-descending
+(``top_k`` order) while pallas packs index-ascending (compaction order);
+both decompress identically because unpacking is a scatter.
+
+Forward FFT note: the fused win the paper measures is in the *post*-FFT
+stages (its own §III-D model weights the elementwise pass 4x), so the pallas
+compress backend keeps XLA's exact native rfft for the forward transform —
+this is also what makes reference/pallas CODES bitwise-identical (the
+matmul-based 4-step FFT is ~1e-5-approximate and would perturb codes near
+quantization bin edges).  The inverse transform sits inside the fused
+decompress kernel, where reconstructions are compared by tolerance, not
+bitwise (tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fft as cfft
+from repro.core import packing, sparsify
+from repro.core.quantizer import (
+    RangeQuantConfig,
+    decode as q_decode,
+    encode as q_encode,
+    fit_quantizer,
+)
+from repro.kernels import fused_compress, fused_decompress, ops
+from repro.kernels.fft4step import CHUNK as KERNEL_CHUNK
+from repro.kernels.runtime import mosaic_available
+
+__all__ = [
+    "BACKEND_NAMES",
+    "CompressorBackend",
+    "ReferenceBackend",
+    "PallasBackend",
+    "AutoBackend",
+    "get_backend",
+    "kernel_eligibility",
+    "wire_bits",
+]
+
+BACKEND_NAMES = ("reference", "pallas", "auto")
+
+_LOG = logging.getLogger(__name__)
+_logged_reasons: set = set()
+
+
+def _log_once(reason: str) -> None:
+    if reason not in _logged_reasons:
+        _logged_reasons.add(reason)
+        _LOG.info("engine backend fallback: %s", reason)
+
+
+def _payload_cls():
+    # deferred: core.compressor imports this module's consumers; the class is
+    # only needed at trace time, long after both modules finished importing
+    from repro.core.compressor import FFTPayload
+
+    return FFTPayload
+
+
+# ---------------------------------------------------------------------------
+# shared helpers (config math used by every backend)
+# ---------------------------------------------------------------------------
+
+
+def _keep_k(cfg) -> int:
+    return sparsify.keep_count(cfg.chunk // 2 + 1, cfg.theta)
+
+
+def _weighted_magnitude(re, im, w):
+    """Canonical Hermitian-weighted ranking magnitude: sqrt(re²+im²)·w.
+
+    This is the KERNEL-NATIVE form (Pallas carries complex data as separate
+    real planes, so the fused kernel computes exactly this in-register).
+    ``jnp.abs(complex)`` disagrees with it by 1 ulp on ~a third of bins
+    (XLA's complex abs is hypot-style), which is enough to flip kept-set
+    boundaries — so EVERY backend ranks with this one definition, keeping
+    the kept set, the threshold tau, and the quantizer-range fit
+    bitwise-identical across backends (DESIGN.md §13).
+    """
+    return jnp.sqrt(re * re + im * im) * w
+
+
+def _qcfg(cfg) -> RangeQuantConfig:
+    return RangeQuantConfig(cfg.n_bits, cfg.m_bits)
+
+
+def wire_bits(cfg, n: int) -> int:
+    """Static wire estimate of one monolithic payload (backend-independent:
+    every backend ships the same layout).  Bucketed exchanges fit one
+    quantizer PER bucket — price those with
+    ``comms.cost_model.bucketed_payload_bits``, not one call of this."""
+    n_chunks = max(1, -(-n // cfg.chunk))
+    k = _keep_k(cfg)
+    value_bits = 2 * (cfg.n_bits if cfg.quantize else 32)  # re + im
+    per_chunk = k * (value_bits + cfg.index_bits)
+    overhead = 4 * 32  # quantizer params (eps, P, vmin, vmax)
+    return n_chunks * per_chunk + overhead
+
+
+def kernel_eligibility(cfg) -> Tuple[bool, str]:
+    """Is the FULLY fused kernel pipeline available for this config?
+
+    Returns (eligible, reason).  Ineligible configs still run under the
+    ``pallas`` backend — each stage falls back individually (see
+    ``PallasBackend``) — but ``auto`` only prefers pallas when the whole
+    pipeline fuses.
+    """
+    reasons = []
+    if cfg.chunk != KERNEL_CHUNK:
+        reasons.append(
+            f"chunk={cfg.chunk} != {KERNEL_CHUNK} (fft4step/fused_decompress "
+            "are specialized to 4096-pt chunks)")
+    if not cfg.quantize:
+        reasons.append("quantize=False (the fused kernels quantize in-register)")
+    return (not reasons, "; ".join(reasons))
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class CompressorBackend:
+    """Stage-execution strategy behind the compressor protocol."""
+
+    name: str = "base"
+
+    # -- compress ----------------------------------------------------------
+    def compress(self, cfg, x_flat: jnp.ndarray):
+        raise NotImplementedError
+
+    def compress_buckets(self, cfg, bucket_flats: Sequence[jnp.ndarray]) -> List:
+        """Per-bucket compression: each bucket fits its OWN quantizer range.
+
+        The monolithic path fits one (min, max) over the whole gradient, so a
+        small bucket whose spectrum lives in a narrow band inherits a global
+        range and wastes most of its codes.  Compressing per bucket keeps the
+        range local (DESIGN.md §8); the bucketed transports rely on this.
+        """
+        return [self.compress(cfg, b) for b in bucket_flats]
+
+    # -- decompress --------------------------------------------------------
+    def decompress_spectrum(self, payload) -> jnp.ndarray:
+        """Payload -> dense complex spectrum (c, chunk//2+1).
+
+        Shared by every backend: the dequantize+scatter is O(k) work that the
+        collectives vmap over the worker axis (comms/transport.py), so it
+        stays plain jnp — the kernel-fused win lives in compress/decompress.
+        The scatter uses `.add`, which tolerates the code-0/index-0 padding
+        slots a tile-padded payload may carry (they add 0 to bin 0).
+        """
+        re, im = payload.re, payload.im
+        if payload.quant is not None:
+            re, im = q_decode(re, payload.quant), q_decode(im, payload.quant)
+        kept = re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
+        f_bins = payload.chunk // 2 + 1
+        zeros = jnp.zeros(kept.shape[:-1] + (f_bins,), kept.dtype)
+        return jax.vmap(lambda row, i, v: row.at[i].add(v))(
+            zeros, payload.idx, kept)
+
+    def decompress(self, payload) -> jnp.ndarray:
+        spectrum = self.decompress_spectrum(payload)
+        return cfft.chunked_irfft(spectrum, payload.orig_len, payload.chunk)
+
+
+class ReferenceBackend(CompressorBackend):
+    """The pure-jnp path: XLA rfft -> top_k -> gather -> range-quant encode.
+    Packs kept coefficients in top_k (magnitude descending) order.  Ranks by
+    the canonical ``_weighted_magnitude`` so its kept set is bitwise-equal to
+    the fused kernel's."""
+
+    name = "reference"
+
+    def compress(self, cfg, x_flat: jnp.ndarray):
+        freqs, n = cfft.chunked_rfft(x_flat, cfg.chunk)
+        k = _keep_k(cfg)
+        w = cfft.hermitian_weights(cfg.chunk)
+        re_p = jnp.real(freqs).astype(jnp.float32)
+        im_p = jnp.imag(freqs).astype(jnp.float32)
+        mag = _weighted_magnitude(re_p, im_p, w)
+        idx = sparsify.topk_select(mag, k)
+        kept = packing.pack_by_indices(freqs, idx)
+        re, im = jnp.real(kept), jnp.imag(kept)
+        if cfg.quantize:
+            quant = self._fit(cfg, re, im)
+            re, im = q_encode(re, quant), q_encode(im, quant)
+        else:
+            quant = None
+        # int16 indices: 2049 rfft bins fit; halves the index wire bytes
+        return _payload_cls()(re, im, idx.astype(jnp.int16), quant, n, cfg.chunk)
+
+    def _fit(self, cfg, re: jnp.ndarray, im: jnp.ndarray):
+        if cfg.range_mode == "fixed":
+            lo, hi = cfg.fixed_range
+            return fit_quantizer(lo, hi, _qcfg(cfg))
+        lo = jnp.minimum(re.min(), im.min())
+        hi = jnp.maximum(re.max(), im.max())
+        return fit_quantizer(lo, hi, _qcfg(cfg))
+
+
+class PallasBackend(CompressorBackend):
+    """Fused Pallas kernels on the hot stages, per-stage fallback elsewhere.
+
+    compress:   exact XLA rfft (see module docstring) -> bisection-threshold
+                kernel (quantizer range fit over the kept set) ->
+                ``fused_compress_pallas`` (threshold+pack+quantize, one VMEM
+                pass) -> slice the 128-lane padding down to the true keep
+                count so the payload layout matches ``reference`` exactly.
+    decompress: ``fused_decompress_pallas`` (dequantize + Hermitian scatter +
+                4-step iFFT, one VMEM pass) when the payload is quantized and
+                chunked at 4096; otherwise per-stage (quant_decode kernel +
+                jnp scatter + XLA irfft) with a logged reason.
+
+    Packs kept coefficients in index-ascending (compaction) order.
+    """
+
+    name = "pallas"
+
+    def compress(self, cfg, x_flat: jnp.ndarray):
+        freqs, n = cfft.chunked_rfft(x_flat, cfg.chunk)
+        re = jnp.real(freqs).astype(jnp.float32)
+        im = jnp.imag(freqs).astype(jnp.float32)
+        k = _keep_k(cfg)
+        w = cfft.hermitian_weights(cfg.chunk)
+        mag = _weighted_magnitude(re, im, w)
+
+        if not cfg.quantize:
+            _log_once("pallas compress: quantize=False -> per-stage "
+                      "threshold+pack kernels (no fused quantization)")
+            tau, _ = ops.threshold_select(mag, k)
+            mvals, idx = ops.pack_threshold(mag, tau, k)  # width pad_k(k)
+            valid = mvals != 0
+            re_k = jnp.take_along_axis(re, idx, axis=-1) * valid
+            im_k = jnp.take_along_axis(im, idx, axis=-1) * valid
+            return _payload_cls()(
+                re_k[:, :k], im_k[:, :k], idx[:, :k].astype(jnp.int16),
+                None, n, cfg.chunk)
+
+        # ONE bisection-threshold pass defines the kept set; its tau is shared
+        # with the fused kernel (no second in-kernel search) so the mask the
+        # kernel packs provably equals the set the quantizer range was fitted
+        # over.  The kernel recomputes the magnitudes IN-REGISTER (that is
+        # the fusion), and a recompute in a different compilation context may
+        # differ by 1 ulp — so the shared tau is placed in the MIDDLE of the
+        # gap between the k-th and (k+1)-th magnitudes, where an ulp of noise
+        # on either side cannot flip the comparison.  (Bitwise ties at the
+        # boundary still truncate under the static budget, as documented on
+        # the slice below.)
+        tau_k, _ = ops.threshold_select(mag, k)  # exact k-th order statistic
+        below = jnp.max(jnp.where(mag < tau_k, mag, 0.0), axis=-1,
+                        keepdims=True)  # largest dropped magnitude (or 0)
+        tau = 0.5 * (tau_k + below)
+        if cfg.range_mode == "fixed":
+            lo, hi = cfg.fixed_range
+            quant = fit_quantizer(lo, hi, _qcfg(cfg))
+        else:
+            mask = mag >= tau  # same set as mag >= tau_k on this plane
+            lo = jnp.minimum(jnp.where(mask, re, jnp.inf).min(),
+                             jnp.where(mask, im, jnp.inf).min())
+            hi = jnp.maximum(jnp.where(mask, re, -jnp.inf).max(),
+                             jnp.where(mask, im, -jnp.inf).max())
+            quant = fit_quantizer(lo, hi, _qcfg(cfg))
+
+        rec, imc, idx, _tau = fused_compress.fused_compress_pallas(
+            re, im, w, quant.eps, quant.p_codes, tau,
+            k_keep=k, n_bits=cfg.n_bits, m_bits=cfg.m_bits)
+        # slice the tile padding off: payload layout == reference layout.
+        # Residual caveat, bitwise ties ONLY: if j > 0 extra magnitudes equal
+        # the k-th exactly, the mask keeps k+j coefficients, so (a) the range
+        # fit sees j extra values and may differ from reference's k-value
+        # fit, and (b) this slice truncates the highest-INDEX kept slots
+        # (bucketSelect's static-budget semantics, kernels/topk_threshold)
+        # while reference top_k drops by magnitude — code parity is exact
+        # only for tie-free planes (continuous gradient data in practice).
+        return _payload_cls()(
+            rec[:, :k], imc[:, :k], idx[:, :k].astype(jnp.int16),
+            quant, n, cfg.chunk)
+
+    def decompress(self, payload) -> jnp.ndarray:
+        if payload.quant is not None and payload.chunk == KERNEL_CHUNK:
+            x2d = fused_decompress.fused_decompress_pallas(
+                payload.re, payload.im, payload.idx,
+                payload.quant.eps, payload.quant.p_codes,
+                m_bits=payload.quant.config.m_bits)
+            return x2d.reshape(-1)[: payload.orig_len].astype(jnp.float32)
+        _log_once(
+            "pallas decompress: payload is "
+            + ("unquantized" if payload.quant is None
+               else f"chunked at {payload.chunk} != {KERNEL_CHUNK}")
+            + " -> per-stage (quant_decode kernel + scatter + XLA irfft)")
+        if payload.quant is not None:
+            re = ops.quant_decode(payload.re, payload.quant)
+            im = ops.quant_decode(payload.im, payload.quant)
+            payload = _payload_cls()(
+                re, im, payload.idx, None, payload.orig_len, payload.chunk)
+        return super().decompress(payload)
+
+
+class AutoBackend(CompressorBackend):
+    """Per-call choice: pallas when Mosaic compiles AND the config fuses
+    end-to-end, reference otherwise (with the reason logged once)."""
+
+    name = "auto"
+
+    def __init__(self):
+        self._reference = ReferenceBackend()
+        self._pallas = PallasBackend()
+
+    def _pick(self, cfg) -> CompressorBackend:
+        if not mosaic_available():
+            _log_once("auto backend -> reference: platform does not compile "
+                      "Mosaic (pallas would run in interpret mode)")
+            return self._reference
+        eligible, reason = kernel_eligibility(cfg)
+        if not eligible:
+            _log_once(f"auto backend -> reference: {reason}")
+            return self._reference
+        return self._pallas
+
+    def compress(self, cfg, x_flat: jnp.ndarray):
+        return self._pick(cfg).compress(cfg, x_flat)
+
+    def compress_buckets(self, cfg, bucket_flats):
+        return self._pick(cfg).compress_buckets(cfg, bucket_flats)
+
+    def decompress(self, payload) -> jnp.ndarray:
+        # payloads carry no backend tag (they are backend-portable); route by
+        # the same platform gate — the pallas backend degrades per-stage on
+        # shapes its fused kernel cannot take
+        if mosaic_available():
+            return self._pallas.decompress(payload)
+        return self._reference.decompress(payload)
+
+
+_BACKENDS = {
+    "reference": ReferenceBackend(),
+    "pallas": PallasBackend(),
+    "auto": AutoBackend(),
+}
+
+
+def get_backend(name: str) -> CompressorBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown compressor backend {name!r}; expected one of {BACKEND_NAMES}"
+        ) from None

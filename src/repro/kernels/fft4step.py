@@ -36,7 +36,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["fft4096_pallas", "CHUNK", "N1", "N2"]
+from repro.kernels.runtime import resolve_interpret
+
+__all__ = ["fft4096_pallas", "apply_4step", "CHUNK", "N1", "N2"]
 
 CHUNK = 4096
 N1 = 64
@@ -61,14 +63,18 @@ def _dft_constants(inverse: bool):
     )
 
 
-def _fft_body(fre_ref, fim_ref, wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim_ref, *, inverse: bool):
-    b = xre_ref.shape[0]  # chunks in this block
-    fre, fim = fre_ref[...], fim_ref[...]  # (64, 64)
-    wre, wim = wre_ref[...], wim_ref[...]  # (64, 64)
+def apply_4step(xre, xim, fre, fim, wre, wim, *, inverse: bool):
+    """The 4-step DFT math on (b, 4096) re/im planes, VMEM-composable.
+
+    Shared by the standalone FFT kernel body and the fused decompress kernel
+    (``kernels/fused_decompress.py``), which runs it as the last stage of one
+    VMEM-resident pass.  Returns (out_re, out_im), each (b, 4096).
+    """
+    b = xre.shape[0]  # chunks in this block
 
     # stage 0: matrix view — (b, 4096) -> (b, 64, 64) -> (64, b*64)
-    xre = xre_ref[...].reshape(b, N1, N2).transpose(1, 0, 2).reshape(N1, b * N2)
-    xim = xim_ref[...].reshape(b, N1, N2).transpose(1, 0, 2).reshape(N1, b * N2)
+    xre = xre.reshape(b, N1, N2).transpose(1, 0, 2).reshape(N1, b * N2)
+    xim = xim.reshape(b, N1, N2).transpose(1, 0, 2).reshape(N1, b * N2)
 
     # stage 1: A = F64 @ xm (complex x complex as 4 real matmuls)
     dot = functools.partial(jax.lax.dot, precision=jax.lax.Precision.HIGHEST)
@@ -94,8 +100,16 @@ def _fft_body(fre_ref, fim_ref, wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim
     xmre = xmre.reshape(b, N1, N2).transpose(0, 2, 1).reshape(b, CHUNK)
     xmim = xmim.reshape(b, N1, N2).transpose(0, 2, 1).reshape(b, CHUNK)
     scale = (1.0 / CHUNK) if inverse else 1.0
-    ore_ref[...] = xmre * scale
-    oim_ref[...] = xmim * scale
+    return xmre * scale, xmim * scale
+
+
+def _fft_body(fre_ref, fim_ref, wre_ref, wim_ref, xre_ref, xim_ref, ore_ref, oim_ref, *, inverse: bool):
+    out_re, out_im = apply_4step(
+        xre_ref[...], xim_ref[...], fre_ref[...], fim_ref[...],
+        wre_ref[...], wim_ref[...], inverse=inverse,
+    )
+    ore_ref[...] = out_re
+    oim_ref[...] = out_im
 
 
 @functools.partial(jax.jit, static_argnames=("inverse", "block_chunks", "interpret"))
@@ -105,7 +119,7 @@ def fft4096_pallas(
     *,
     inverse: bool = False,
     block_chunks: int = 8,
-    interpret: bool = True,
+    interpret: bool = None,
 ):
     """Batched 4096-pt complex FFT: (rows, 4096) re/im -> (rows, 4096) re/im.
 
@@ -113,6 +127,7 @@ def fft4096_pallas(
     — comfortably under the ~16MB/core budget, leaving room for double
     buffering.
     """
+    interpret = resolve_interpret(interpret)
     rows, n = x_re.shape
     assert n == CHUNK, f"kernel is specialized to {CHUNK}-pt chunks"
     block_chunks = min(block_chunks, rows)

@@ -25,13 +25,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.range_quant import encode_math
+from repro.kernels.runtime import resolve_interpret
+from repro.kernels.topk_threshold import BISECT_ITERS as _BISECT_ITERS
+
 __all__ = ["fused_compress_pallas"]
 
-_BISECT_ITERS = 30
 _K_TILE = 128
 
 
-def _fused_body(params_ref, re_ref, im_ref, w_ref,
+def _fused_body(params_ref, re_ref, im_ref, w_ref, tau_in_ref,
                 rec_ref, imc_ref, idx_ref, tau_ref, *, k_keep: int, k_pad: int, m_bits: int):
     eps = params_ref[0]
     p_codes = params_ref[1]
@@ -46,18 +49,23 @@ def _fused_body(params_ref, re_ref, im_ref, w_ref,
     # 1. weighted magnitude (stays in VMEM)
     mag = jnp.sqrt(re * re + im * im) * w
 
-    # 2. bisection threshold (invariant: count(>=lo) >= k > count(>=hi))
-    hi = jnp.max(mag, axis=-1) * 1.0000002 + 1e-30
-    lo = jnp.zeros_like(hi)
+    # 2. threshold: caller-provided (the engine shares ONE bisection between
+    # the quantizer range fit and this kernel), or bisected in-kernel
+    # (invariant: count(>=lo) >= k > count(>=hi))
+    if tau_in_ref is not None:
+        tau = tau_in_ref[...][:, 0]
+    else:
+        hi = jnp.max(mag, axis=-1) * 1.0000002 + 1e-30
+        lo = jnp.zeros_like(hi)
 
-    def bisect(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        feasible = jnp.sum(mag >= mid[:, None], axis=-1) >= k_keep
-        return jnp.where(feasible, mid, lo), jnp.where(feasible, hi, mid)
+        def bisect(_, carry):
+            lo, hi = carry
+            mid = 0.5 * (lo + hi)
+            feasible = jnp.sum(mag >= mid[:, None], axis=-1) >= k_keep
+            return jnp.where(feasible, mid, lo), jnp.where(feasible, hi, mid)
 
-    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, bisect, (lo, hi))
-    tau = lo
+        lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, bisect, (lo, hi))
+        tau = lo
     tau_ref[...] = tau[:, None]
 
     # 3. compaction positions
@@ -66,26 +74,10 @@ def _fused_body(params_ref, re_ref, im_ref, w_ref,
     pos = jnp.where(mask > 0, pos, -1.0)
     col_iota = jax.lax.broadcasted_iota(jnp.float32, (r, cols), 1)
 
-    # 4. quantize-then-pack per 128-slot tile (values quantized in registers)
+    # 4. quantize-then-pack per 128-slot tile (values quantized in registers;
+    # shared quantizer math keeps codes bitwise-equal to the staged kernel)
     def q_encode(a_signed):
-        a = jnp.abs(a_signed)
-        posi = a_signed >= 0
-        safe = jnp.maximum(a, eps)
-        q = jnp.floor(jnp.log2(safe) - jnp.log2(eps) + 1e-6)
-        seg = eps * jnp.exp2(q)
-        rr = jnp.round((safe / seg - 1.0) * m_scale)
-        carry = rr >= m_scale
-        q = jnp.where(carry, q + 1.0, q)
-        rr = jnp.where(carry, 0.0, rr)
-        idx = q * m_scale + rr
-        idx = jnp.where(a < eps, jnp.where(a * 2.0 >= eps, 0.0, -1.0), idx)
-        idx_pos = jnp.clip(idx, -1.0, p_codes - 1.0)
-        idx_neg = jnp.clip(idx, -1.0, jnp.maximum(n_neg, 1.0) - 1.0)
-        return jnp.where(
-            posi,
-            jnp.where(idx_pos < 0, 0.0, idx_pos + 1.0),
-            jnp.where(idx_neg < 0, 0.0, p_codes + idx_neg + 1.0),
-        )
+        return encode_math(a_signed, eps, p_codes, n_neg, m_scale)
 
     n_tiles = pl.cdiv(k_pad, _K_TILE)
     for t in range(n_tiles):
@@ -110,17 +102,23 @@ def fused_compress_pallas(
     weights: jnp.ndarray,  # (cols,) hermitian weights
     eps: jnp.ndarray,
     p_codes: jnp.ndarray,
+    tau: jnp.ndarray = None,  # optional (rows,) or (rows, 1) threshold
     *,
     k_keep: int,
     n_bits: int = 8,
     m_bits: int = 3,
     block_rows: int = 4,
-    interpret: bool = True,
+    interpret: bool = None,
 ):
     """(rows, cols) spectrum planes -> (re_codes u8, im_codes u8, idx i32, tau).
 
-    Bisects with the true keep count ``k_keep``; the payload width is padded
-    to the 128-lane tile."""
+    With ``tau=None`` the kernel bisects for the keep count ``k_keep``
+    itself; a caller that already ran the threshold kernel (the engine does,
+    to fit the quantizer range over the kept set) passes its tau in and the
+    in-kernel search is skipped — one bisection per compress, and the mask
+    provably matches the fit.  The payload width is padded to the 128-lane
+    tile."""
+    interpret = resolve_interpret(interpret)
     rows, cols = re2d.shape
     k = ((k_keep + _K_TILE - 1) // _K_TILE) * _K_TILE
     block_rows = min(block_rows, rows)
@@ -134,14 +132,26 @@ def fused_compress_pallas(
     data = lambda c: pl.BlockSpec((block_rows, c), lambda i: (i, 0),
                                   memory_space=pltpu.VMEM)
     out_dtype = jnp.uint8 if n_bits <= 8 else jnp.uint16
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+        data(cols), data(cols),
+        pl.BlockSpec((1, cols), lambda i: (0, 0), memory_space=pltpu.VMEM),
+    ]
+    args = [params, re2d.astype(jnp.float32), im2d.astype(jnp.float32),
+            weights.reshape(1, -1).astype(jnp.float32)]
+    if tau is None:
+        def body(p_ref, re_ref, im_ref, w_ref, *out_refs):
+            _fused_body(p_ref, re_ref, im_ref, w_ref, None, *out_refs,
+                        k_keep=k_keep, k_pad=k, m_bits=m_bits)
+    else:
+        body = functools.partial(_fused_body, k_keep=k_keep, k_pad=k,
+                                 m_bits=m_bits)
+        in_specs.append(data(1))
+        args.append(tau.reshape(rows, 1).astype(jnp.float32))
     return pl.pallas_call(
-        functools.partial(_fused_body, k_keep=k_keep, k_pad=k, m_bits=m_bits),
+        body,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            data(cols), data(cols),
-            pl.BlockSpec((1, cols), lambda i: (0, 0), memory_space=pltpu.VMEM),
-        ],
+        in_specs=in_specs,
         out_specs=[data(k), data(k), data(k), data(1)],
         out_shape=[
             jax.ShapeDtypeStruct((rows, k), out_dtype),
@@ -150,5 +160,4 @@ def fused_compress_pallas(
             jax.ShapeDtypeStruct((rows, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(params, re2d.astype(jnp.float32), im2d.astype(jnp.float32),
-      weights.reshape(1, -1).astype(jnp.float32))
+    )(*args)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: FUSED decompress — dequantize -> scatter-unpack ->
+inverse FFT in one VMEM-resident pass.
+
+Closes the asymmetry left by ``fused_compress``: the compress side had a
+single fused kernel while decompress was three staged passes
+(``range_quant.decode`` -> ``pack.unpack`` -> ``fft4step`` inverse), each
+round-tripping the dense spectrum through HBM:
+
+    read codes (~0.9 B/bin) + write re,im (8) + read re,im (8)
+  + write full spectrum (8) + read full spectrum (8) + write signal (4)
+    ~ 37 B/bin
+vs
+    read codes+idx (~0.9 B/bin) + write signal (4 B/bin)
+
+Everything between — decode, the Hermitian scatter, and the 4-step iFFT
+matmuls — stays in VMEM.  The Hermitian completion is folded into the
+scatter itself: each kept rfft coefficient (value v at bin i) contributes
+
+    spectrum[i]        += v          (direct)
+    spectrum[4096 - i] += conj(v)    (mirror, interior bins 1..2047 only)
+
+as a one-hot contraction over frequency tiles — no lane-axis flips, which
+Mosaic lowers poorly; DC (0) and Nyquist (2048) are their own mirrors and
+contribute once.  Padding slots (code 0 at index 0) decode to 0.0 and add
+nothing, so payload widths padded to the 128-lane tile are harmless.
+
+Numerics match the unfused three-stage path to f32 matmul-FFT tolerance
+(tests/test_engine.py::test_fused_decompress_matches_unfused).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import fft4step
+from repro.kernels.range_quant import decode_math
+from repro.kernels.runtime import resolve_interpret
+
+__all__ = ["fused_decompress_pallas"]
+
+_K_TILE = 128
+_F_TILE = 512
+_CHUNK = fft4step.CHUNK
+_NYQUIST = _CHUNK // 2
+
+
+def _fused_decompress_body(params_ref, rec_ref, imc_ref, idx_ref,
+                           fre_ref, fim_ref, wre_ref, wim_ref,
+                           out_ref, *, m_bits: int):
+    eps = params_ref[0]
+    p_codes = params_ref[1]
+    m_scale = float(1 << m_bits)
+
+    # 1. dequantize both code planes (stays in VMEM; shared quantizer math)
+    re_k = decode_math(rec_ref[...].astype(jnp.float32), eps, p_codes, m_scale)
+    im_k = decode_math(imc_ref[...].astype(jnp.float32), eps, p_codes, m_scale)
+    idx = idx_ref[...].astype(jnp.float32)  # bins <= 2048: exact in f32
+    r, k = re_k.shape
+
+    # 2. Hermitian scatter: direct bin + conjugate mirror, tiled one-hot
+    # contraction over the 4096 output bins.  Interior bins (1..2047) mirror
+    # to 4096-i; DC/Nyquist map to themselves and must not double-count.
+    interior = (idx >= 1.0) & (idx <= float(_NYQUIST - 1))
+    mirror_idx = jnp.where(interior, float(_CHUNK) - idx, -1.0)  # -1: no slot
+
+    full_re_tiles = []
+    full_im_tiles = []
+    n_tiles = pl.cdiv(_CHUNK, _F_TILE)
+    for t in range(n_tiles):  # static unroll
+        col = jax.lax.broadcasted_iota(jnp.float32, (1, 1, _F_TILE), 2) + t * _F_TILE
+        direct = (idx[:, :, None] == col).astype(jnp.float32)  # (r, k, F_TILE)
+        mirror = (mirror_idx[:, :, None] == col).astype(jnp.float32)
+        full_re_tiles.append(jnp.sum(re_k[:, :, None] * (direct + mirror), axis=1))
+        full_im_tiles.append(jnp.sum(im_k[:, :, None] * (direct - mirror), axis=1))
+    full_re = jnp.concatenate(full_re_tiles, axis=-1)  # (r, 4096)
+    full_im = jnp.concatenate(full_im_tiles, axis=-1)
+
+    # 3. inverse 4-step FFT on the MXU; hermitian input -> real output
+    out_re, _ = fft4step.apply_4step(
+        full_re, full_im, fre_ref[...], fim_ref[...], wre_ref[...], wim_ref[...],
+        inverse=True,
+    )
+    out_ref[...] = out_re
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "block_rows", "interpret"))
+def fused_decompress_pallas(
+    re_codes: jnp.ndarray,  # (rows, k) uint8/uint16 codes
+    im_codes: jnp.ndarray,  # (rows, k)
+    idx: jnp.ndarray,  # (rows, k) int16/int32 bin indices in [0, 2048]
+    eps: jnp.ndarray,
+    p_codes: jnp.ndarray,
+    *,
+    m_bits: int = 3,
+    block_rows: int = 4,
+    interpret: bool = None,
+) -> jnp.ndarray:
+    """Quantized payload planes -> (rows, 4096) f32 time-domain chunks.
+
+    Accepts any payload width; pads to the 128-lane tile internally with
+    code-0/index-0 slots (decode-neutral, see module docstring).
+    """
+    interpret = resolve_interpret(interpret)
+    rows, k = re_codes.shape
+    k_pad = max(_K_TILE, ((k + _K_TILE - 1) // _K_TILE) * _K_TILE)
+    if k_pad != k:
+        pad = [(0, 0), (0, k_pad - k)]
+        re_codes = jnp.pad(re_codes, pad)
+        im_codes = jnp.pad(im_codes, pad)
+        idx = jnp.pad(idx, pad)
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    params = jnp.stack([
+        jnp.asarray(eps, jnp.float32),
+        p_codes.astype(jnp.float32),
+    ])
+    fre, fim, wre, wim = (jnp.asarray(c)
+                          for c in fft4step._dft_constants(inverse=True))
+    const_spec = pl.BlockSpec((fft4step.N1, fft4step.N2), lambda i: (0, 0),
+                              memory_space=pltpu.VMEM)
+    data = lambda c: pl.BlockSpec((block_rows, c), lambda i: (i, 0),
+                                  memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        functools.partial(_fused_decompress_body, m_bits=m_bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        + [data(k_pad)] * 3 + [const_spec] * 4,
+        out_specs=data(_CHUNK),
+        out_shape=jax.ShapeDtypeStruct((rows, _CHUNK), jnp.float32),
+        interpret=interpret,
+    )(params, re_codes, im_codes, idx.astype(jnp.int32), fre, fim, wre, wim)

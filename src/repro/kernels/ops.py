@@ -1,8 +1,11 @@
 """Public jit'd wrappers over the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; interpret
-mode executes the kernel bodies in Python for correctness validation) and
-False on TPU, where the kernels compile to Mosaic.
+``interpret`` defaults to the shared platform policy in
+``kernels/runtime.py``: interpret mode off-TPU (kernel bodies execute as jax
+ops on the host for correctness validation), Mosaic compilation on TPU.
+Every kernel entry point — wrapper or raw ``*_pallas`` function — resolves
+``interpret=None`` through that one policy, so the fused and unfused paths
+can never disagree.
 
 The wrappers also own the static-shape hygiene the kernels demand:
 * ``pad_k``   — round the kept budget up to the 128-lane tile;
@@ -18,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fft4step, pack, range_quant, topk_threshold
+from repro.kernels.runtime import default_interpret  # noqa: F401 (re-export)
 
 __all__ = [
     "default_interpret",
@@ -36,67 +40,57 @@ __all__ = [
 RFFT_BINS = fft4step.CHUNK // 2 + 1
 
 
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def pad_k(k: int, tile: int = 128) -> int:
     return max(tile, ((k + tile - 1) // tile) * tile)
 
 
 def quant_encode(x2d, quantizer, interpret=None):
-    ip = default_interpret() if interpret is None else interpret
     cfg = quantizer.config
     return range_quant.encode_pallas(
         x2d, quantizer.eps, quantizer.p_codes,
-        n_bits=cfg.n_bits, m_bits=cfg.m_bits, interpret=ip,
+        n_bits=cfg.n_bits, m_bits=cfg.m_bits, interpret=interpret,
     )
 
 
 def quant_decode(codes2d, quantizer, interpret=None):
-    ip = default_interpret() if interpret is None else interpret
     cfg = quantizer.config
     return range_quant.decode_pallas(
         codes2d, quantizer.eps, quantizer.p_codes,
-        n_bits=cfg.n_bits, m_bits=cfg.m_bits, interpret=ip,
+        n_bits=cfg.n_bits, m_bits=cfg.m_bits, interpret=interpret,
     )
 
 
 def threshold_select(mag2d, k: int, interpret=None):
-    ip = default_interpret() if interpret is None else interpret
-    return topk_threshold.threshold_pallas(mag2d, k=k, interpret=ip)
+    return topk_threshold.threshold_pallas(mag2d, k=k, interpret=interpret)
 
 
 def pack_threshold(x2d, tau, k: int, interpret=None):
-    ip = default_interpret() if interpret is None else interpret
-    return pack.pack_pallas(x2d, tau, k=pad_k(k), interpret=ip)
+    return pack.pack_pallas(x2d, tau, k=pad_k(k), interpret=interpret)
 
 
 def unpack_dense(vals, idx, cols: int, interpret=None):
-    ip = default_interpret() if interpret is None else interpret
     pad = (-cols) % pack._F_TILE
-    dense = pack.unpack_pallas(vals, idx, cols=cols + pad, interpret=ip)
+    dense = pack.unpack_pallas(vals, idx, cols=cols + pad, interpret=interpret)
     return dense[:, :cols]
 
 
 def rfft4096(x2d, interpret=None):
     """(rows, 4096) real -> (re, im) each (rows, 2049)."""
-    ip = default_interpret() if interpret is None else interpret
     re, im = fft4step.fft4096_pallas(
-        x2d, jnp.zeros_like(x2d), inverse=False, interpret=ip
+        x2d, jnp.zeros_like(x2d), inverse=False, interpret=interpret
     )
     return re[:, :RFFT_BINS], im[:, :RFFT_BINS]
 
 
 def irfft4096(re, im, interpret=None):
     """(rows, 2049) rfft spectrum -> (rows, 4096) real (hermitian inverse)."""
-    ip = default_interpret() if interpret is None else interpret
     # hermitian completion: X[N-k] = conj(X[k]) for k = 1..N/2-1
     tail_re = re[:, 1:-1][:, ::-1]
     tail_im = -im[:, 1:-1][:, ::-1]
     full_re = jnp.concatenate([re, tail_re], axis=-1)
     full_im = jnp.concatenate([im, tail_im], axis=-1)
-    out_re, _ = fft4step.fft4096_pallas(full_re, full_im, inverse=True, interpret=ip)
+    out_re, _ = fft4step.fft4096_pallas(
+        full_re, full_im, inverse=True, interpret=interpret)
     return out_re
 
 

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["pack_pallas", "unpack_pallas"]
 
 _K_TILE = 128
@@ -56,13 +58,14 @@ def pack_pallas(
     *,
     k: int,
     block_rows: int = 4,
-    interpret: bool = True,
+    interpret: bool = None,
 ):
     """Compact per-row elements with |x| >= tau into (vals, idx) of width k.
 
     ``k`` must be padded to a multiple of 128 by the caller (ops.py does).
     Slots beyond the actual kept count hold (0.0, 0) — dequant-neutral.
     """
+    interpret = resolve_interpret(interpret)
     rows, cols = x2d.shape
     assert k % _K_TILE == 0, "pad k to a multiple of 128 (see ops.pad_k)"
     block_rows = min(block_rows, rows)
@@ -106,9 +109,10 @@ def unpack_pallas(
     *,
     cols: int,
     block_rows: int = 4,
-    interpret: bool = True,
+    interpret: bool = None,
 ):
     """Scatter (vals, idx) of width k back to a dense (rows, cols) array."""
+    interpret = resolve_interpret(interpret)
     rows, k = vals.shape
     assert cols % _F_TILE == 0, "pad cols to a multiple of 512 (see ops.pad_cols)"
     block_rows = min(block_rows, rows)

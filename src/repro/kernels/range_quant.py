@@ -23,16 +23,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["encode_pallas", "decode_pallas"]
+from repro.kernels.runtime import resolve_interpret
+
+__all__ = ["encode_pallas", "decode_pallas", "encode_math", "decode_math"]
 
 
-def _encode_body(params_ref, x_ref, codes_ref, *, m_bits: int):
-    eps = params_ref[0]
-    p_codes = params_ref[1]  # f32-carried int
-    n_neg = params_ref[2]
-    m_scale = float(1 << m_bits)
+def encode_math(x, eps, p_codes, n_neg, m_scale):
+    """Range-quant ENCODE on an f32 plane (paper Alg. 1) — pure jnp math.
 
-    x = x_ref[...]
+    Shared by this kernel's body and the fused compress kernel
+    (``fused_compress.py``); one definition keeps the in-register and staged
+    quantizers bitwise-identical by construction.  Parameters ride as traced
+    f32 scalars (SMEM in the kernels).
+    """
     a = jnp.abs(x)
     pos = x >= 0
 
@@ -49,20 +52,18 @@ def _encode_body(params_ref, x_ref, codes_ref, *, m_bits: int):
     idx_pos = jnp.clip(idx, -1.0, p_codes - 1.0)
     idx_neg = jnp.clip(idx, -1.0, jnp.maximum(n_neg, 1.0) - 1.0)
 
-    code = jnp.where(
+    return jnp.where(
         pos,
         jnp.where(idx_pos < 0, 0.0, idx_pos + 1.0),
         jnp.where(idx_neg < 0, 0.0, p_codes + idx_neg + 1.0),
     )
-    codes_ref[...] = code.astype(codes_ref.dtype)
 
 
-def _decode_body(params_ref, codes_ref, x_ref, *, m_bits: int):
-    eps = params_ref[0]
-    p_codes = params_ref[1]
-    m_scale = float(1 << m_bits)
+def decode_math(c, eps, p_codes, m_scale):
+    """Range-quant DECODE on an f32-carried code plane — pure jnp math.
 
-    c = codes_ref[...].astype(jnp.float32)
+    Shared by this kernel's body and the fused decompress kernel
+    (``fused_decompress.py``)."""
     is_zero = c == 0.0
     is_pos = (c >= 1.0) & (c <= p_codes)
     idx = jnp.where(is_pos, c - 1.0, c - p_codes - 1.0)
@@ -71,7 +72,23 @@ def _decode_body(params_ref, codes_ref, x_ref, *, m_bits: int):
     r = idx - q * m_scale
     mag = eps * jnp.exp2(q) * (1.0 + r / m_scale)
     val = jnp.where(is_pos, mag, -mag)
-    x_ref[...] = jnp.where(is_zero, 0.0, val).astype(x_ref.dtype)
+    return jnp.where(is_zero, 0.0, val)
+
+
+def _encode_body(params_ref, x_ref, codes_ref, *, m_bits: int):
+    eps = params_ref[0]
+    p_codes = params_ref[1]  # f32-carried int
+    n_neg = params_ref[2]
+    code = encode_math(x_ref[...], eps, p_codes, n_neg, float(1 << m_bits))
+    codes_ref[...] = code.astype(codes_ref.dtype)
+
+
+def _decode_body(params_ref, codes_ref, x_ref, *, m_bits: int):
+    eps = params_ref[0]
+    p_codes = params_ref[1]
+    val = decode_math(codes_ref[...].astype(jnp.float32), eps, p_codes,
+                      float(1 << m_bits))
+    x_ref[...] = val.astype(x_ref.dtype)
 
 
 def _params_vec(eps, p_codes, n_codes: int):
@@ -94,9 +111,10 @@ def encode_pallas(
     n_bits: int = 8,
     m_bits: int = 3,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
     """f32 (rows, cols) -> uint8/uint16 codes, tiled over rows."""
+    interpret = resolve_interpret(interpret)
     rows, cols = x2d.shape
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
@@ -124,9 +142,10 @@ def decode_pallas(
     n_bits: int = 8,
     m_bits: int = 3,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool = None,
 ) -> jnp.ndarray:
     """codes (rows, cols) -> f32, tiled over rows."""
+    interpret = resolve_interpret(interpret)
     rows, cols = codes2d.shape
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)

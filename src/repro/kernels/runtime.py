@@ -1,0 +1,38 @@
+"""Shared runtime policy for every Pallas kernel entry point.
+
+One place answers "should this kernel run in interpret mode?" so the fused
+and unfused kernels can never disagree (they used to: ``fused_compress``
+hardcoded ``interpret=True`` while ``ops.py`` detected the platform).
+
+* ``default_interpret()`` — True off-TPU (interpret mode executes the kernel
+  bodies as jax ops on the host for correctness validation), False on TPU
+  where the kernels compile to Mosaic.
+* ``resolve_interpret(flag)`` — the contract every kernel entry point
+  follows: ``interpret=None`` (the default everywhere) means "use the shared
+  platform default"; an explicit bool always wins (tests pin True).
+* ``mosaic_available()`` — can this process compile Pallas to Mosaic?  The
+  ``auto`` engine backend (``kernels/engine.py``) keys off this.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret", "mosaic_available"]
+
+
+def mosaic_available() -> bool:
+    """True when Pallas kernels compile to Mosaic on this platform (TPU)."""
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Platform default for Pallas ``interpret``: True everywhere but TPU."""
+    return not mosaic_available()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> shared platform default; explicit bool -> honored verbatim."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -22,9 +22,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["threshold_pallas"]
+from repro.kernels.runtime import resolve_interpret
 
-_BISECT_ITERS = 30
+__all__ = ["threshold_pallas", "BISECT_ITERS"]
+
+# enough sweeps that lo/hi reach ADJACENT f32 values even when tau sits far
+# below the row max (the interval halves from ~max each sweep; 48 covers
+# tau >= max * 2^-24, the f32 mantissa range).  Short of adjacency the kept
+# count can exceed k without a genuine bitwise tie — at 30 iterations a tau
+# near max*1e-3 leaves a ~2^-30·max window spanning several representable
+# values, and backend code parity (DESIGN.md §13) would break data-dependently.
+# Shared with fused_compress's in-kernel (tau=None) search so the two
+# bisections can never desynchronize.
+BISECT_ITERS = 48
+_BISECT_ITERS = BISECT_ITERS
 
 
 def _threshold_body(mag_ref, tau_ref, count_ref, *, k: int):
@@ -56,9 +67,10 @@ def threshold_pallas(
     *,
     k: int,
     block_rows: int = 8,
-    interpret: bool = True,
+    interpret: bool = None,
 ):
     """(rows, cols) magnitudes -> (tau (rows,1) f32, count (rows,1) i32)."""
+    interpret = resolve_interpret(interpret)
     rows, cols = mag2d.shape
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)

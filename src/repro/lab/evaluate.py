@@ -12,6 +12,11 @@ model family (paper sections in brackets):
   recovers to within ``loss_tol`` of dense [§IV-A1, Thm 3.5].
 * ``transports_identical`` — runs differing ONLY in transport trace identical
   loss curves to ``transport_atol`` (they compute the same mean; DESIGN.md §9).
+* ``backends_identical`` — runs differing ONLY in engine backend (reference
+  jnp vs fused Pallas kernels) trace identical loss curves to
+  ``backend_atol`` (codes are bitwise-equal across backends and the exchange
+  path shares the spectral decompress, DESIGN.md §13 — backend choice is a
+  pure execution-engine knob, never a numerics knob).
 * ``assumption31`` — every probed step's live-gradient reconstruction obeys
   ``err <= 1.05*sqrt(theta) + quant_margin`` (the provable sqrt(theta) energy
   bound of DESIGN.md §6 plus the range-quantizer's relative-error envelope),
@@ -52,6 +57,7 @@ class Tolerances:
     loss_tol: float = 0.05  # "within 5% of dense"
     degrade_margin: float = 0.01  # theta=0.9 must sit >=1% above theta=0.7
     transport_atol: float = 1e-5  # pointwise curve divergence across transports
+    backend_atol: float = 1e-4  # pointwise curve divergence across engine backends
     a31_sqrt_slack: float = 1.05  # on the provable sqrt(theta) energy bound
     a31_quant_margin: float = 0.15  # additive headroom for the 8-bit quantizer
     a31_norm_tol: float = 0.08  # ||v_hat||/||v|| headroom under quantization
@@ -140,6 +146,16 @@ def evaluate_results(
                   f"allgather/sequenced/psum: {worst:.2e} (atol {tol.transport_atol})")
         else:
             claim(f"{m}:transports_identical", False, "missing transport trio")
+
+        pallas = _named(runs, f"{m}_fft_theta0.7_pallas")
+        if t07 and pallas:
+            close, div = curves_close(
+                _loss_curve(t07), _loss_curve(pallas), tol.backend_atol)
+            claim(f"{m}:backends_identical", close,
+                  f"max pointwise loss divergence reference vs pallas "
+                  f"backend: {div:.2e} (atol {tol.backend_atol})")
+        else:
+            claim(f"{m}:backends_identical", False, "missing pallas-backend run")
 
         # -- Assumption 3.1 on live gradients (all probed compressed runs) --
         probed = worst_a31 = 0

@@ -63,8 +63,8 @@ def render_markdown(runs: Dict[str, Dict], claims: List[Dict],
                     all_passed: bool) -> str:
     """The Convergence results block: run table + claim checklist."""
     lines = [
-        "| experiment | reducer | transport | θ-schedule | final loss | Δ vs dense | comp. | wire sav. | steps·workers |",
-        "|---|---|---|---|---:|---:|---:|---:|---|",
+        "| experiment | reducer | transport | backend | θ-schedule | final loss | Δ vs dense | comp. | wire sav. | steps·workers |",
+        "|---|---|---|---|---|---:|---:|---:|---:|---|",
     ]
     dense_final = {
         run["spec"]["model"]: run["final_loss"]
@@ -79,6 +79,7 @@ def render_markdown(runs: Dict[str, Dict], claims: List[Dict],
         lines.append(
             f"| {name} | {spec['reducer'] or 'dense'} | "
             f"{spec['transport'] if spec['reducer'] else '—'} | "
+            f"{spec.get('backend', 'reference') if spec['reducer'] else '—'} | "
             f"{_fmt_schedule(spec)} | {run['final_loss']:.4f} | {delta} | "
             f"{_fmt_ratio(run)} | {_fmt_wire(run)} | "
             f"{spec['steps']}·{spec['workers']} |")

@@ -116,12 +116,14 @@ def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
         kind=spec.reducer, axis="data", theta=spec.theta,
         quantize=spec.quantize, bucket_bytes=spec.bucket_bytes,
         transport=spec.transport, error_feedback=spec.error_feedback,
+        backend=spec.backend,
     )
 
 
 def _compressor_at(spec: ExperimentSpec, theta: float):
     """The compressor a worker runs at this theta (for probe + wire model)."""
-    cfg = FFTCompressorConfig(theta=theta, quantize=spec.quantize)
+    cfg = FFTCompressorConfig(theta=theta, quantize=spec.quantize,
+                              backend=spec.backend)
     if spec.reducer == "fft":
         return FFTCompressor(cfg)
     if spec.reducer == "timedomain":
@@ -135,7 +137,9 @@ def _compressor_at(spec: ExperimentSpec, theta: float):
 
 def _payload_bits(spec: ExperimentSpec, theta: float, n_elems: int) -> Optional[float]:
     """Modeled wire payload of one exchange at this theta, over the run's
-    bucket layout (per-bucket payloads sum; matches what the transport ships)."""
+    bucket layout, priced at the TRANSPORT's payload granularity (monolithic
+    for allgather, per-bucket quantizers for sequenced/psum — matches what
+    the transport actually ships; ``cost_model.bucketed_payload_bits``)."""
     comp = _compressor_at(spec, theta)
     if comp is None or not hasattr(comp, "wire_bits"):
         return None
@@ -145,7 +149,7 @@ def _payload_bits(spec: ExperimentSpec, theta: float, n_elems: int) -> Optional[
 
     # price per bucket with the SAME layout the reducer builds
     sizes = build_layout(n_elems, spec.bucket_bytes).sizes()
-    return float(sum(comp.wire_bits(s) for s in sizes))
+    return cost_model.bucketed_payload_bits(comp.wire_bits, sizes, spec.transport)
 
 
 def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:

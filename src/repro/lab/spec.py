@@ -34,6 +34,7 @@ class ExperimentSpec:
     model: str = "lm"  # lm | convnet
     reducer: Optional[str] = "fft"  # None | fft | timedomain | terngrad | qsgd
     transport: str = "allgather"  # allgather | sequenced | psum
+    backend: str = "reference"  # reference | pallas | auto (kernels/engine.py)
     bucket_bytes: Optional[int] = None
     theta: float = 0.7
     schedule: Optional[Dict] = None  # make_schedule(**...) description
@@ -51,6 +52,11 @@ class ExperimentSpec:
     def __post_init__(self):
         if self.model not in ("lm", "convnet"):
             raise ValueError(f"unknown model {self.model!r}")
+        # mirrors kernels/engine.BACKEND_NAMES — this module must stay
+        # jax-free (importable before device-count env setup), so it cannot
+        # import the engine; tests/test_engine.py asserts the lists agree
+        if self.backend not in ("reference", "pallas", "auto"):
+            raise ValueError(f"unknown backend {self.backend!r}")
         if self.reducer is None and self.schedule is not None:
             raise ValueError("dense baseline cannot take a theta schedule")
         if self.workers < 1 or self.global_batch % self.workers:
@@ -118,6 +124,14 @@ def _matrix(model: str, *, workers: int, steps: int, seed: int = 0) -> List[Expe
         specs.append(ExperimentSpec(
             name=f"{model}_fft_theta0.7_{transport}", theta=0.7, transport=transport,
             schedule={"kind": "constant", "theta": 0.7}, **base))
+    # backend sweep axis (engine backends, DESIGN.md §13): same config as the
+    # theta0.7 row but stages executed by the fused Pallas kernels.  The
+    # evaluator's backends_identical claim compares this curve against the
+    # reference-backend row — compression must be a pure execution-engine
+    # choice, never a numerics choice.
+    specs.append(ExperimentSpec(
+        name=f"{model}_fft_theta0.7_pallas", theta=0.7, backend="pallas",
+        schedule={"kind": "constant", "theta": 0.7}, **base))
     return specs
 
 

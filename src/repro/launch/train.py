@@ -51,6 +51,11 @@ def main(argv=None):
     ap.add_argument("--transport", default="allgather",
                     choices=["allgather", "sequenced", "psum"],
                     help="collective strategy for the compressed exchange")
+    ap.add_argument("--backend", default="auto",
+                    choices=["reference", "pallas", "auto"],
+                    help="compressor stage-execution engine: fused Pallas "
+                         "kernels, the jnp reference path, or auto "
+                         "(pallas when the platform compiles Mosaic)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -77,6 +82,7 @@ def main(argv=None):
             error_feedback=args.error_feedback,
             bucket_bytes=int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None,
             transport=args.transport,
+            backend=args.backend,
         )
     step_cfg = StepConfig(
         mode=args.mode,

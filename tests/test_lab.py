@@ -37,6 +37,7 @@ def test_smoke_matrix_covers_the_claims():
         assert f"{model}_fft_mixed" in names
         for transport in ("sequenced", "psum"):
             assert f"{model}_fft_theta0.7_{transport}" in names
+        assert f"{model}_fft_theta0.7_pallas" in names  # backend sweep axis
 
 
 def test_spec_rejects_bad_configs():
@@ -55,7 +56,7 @@ def test_spec_rejects_bad_configs():
 
 
 def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
-              err_ratio=0.5, lr=3e-3):
+              err_ratio=0.5, lr=3e-3, backend="reference"):
     records = []
     for i, loss in enumerate(losses):
         rec = {"step": i, "loss": loss, "grad_sq": max(loss - 1.0, 0.05),
@@ -69,7 +70,7 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
     return {
         "spec": ExperimentSpec(
             name=name, model=model, reducer=reducer, theta=theta,
-            schedule=schedule, lr=lr).to_dict(),
+            schedule=schedule, lr=lr, backend=backend).to_dict(),
         "records": records,
         "n_elems": 10000,
         "entropy_floor": 1.0,
@@ -78,10 +79,12 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
     }
 
 
-def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None):
+def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
+                 pallas_losses=None):
     dense = [4.0, 3.0, 2.5, 2.2, 2.0, 2.0]
     t07 = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02]
     trio = trio_losses if trio_losses is not None else t07
+    pallas = pallas_losses if pallas_losses is not None else t07
     sched = {"kind": "constant", "theta": 0.7}
     return {
         "lm_dense": _fake_run("lm_dense", None, dense),
@@ -96,13 +99,16 @@ def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None):
             "lm_fft_theta0.7_sequenced", "fft", trio, schedule=sched),
         "lm_fft_theta0.7_psum": _fake_run(
             "lm_fft_theta0.7_psum", "fft", trio, schedule=sched),
+        "lm_fft_theta0.7_pallas": _fake_run(
+            "lm_fft_theta0.7_pallas", "fft", pallas, schedule=sched,
+            backend="pallas"),
     }
 
 
 def test_evaluator_passes_a_good_matrix():
     claims, ok = evaluate_results(_matrix_runs(), Tolerances(final_tail=2))
     assert ok, [c.to_dict() for c in claims if not c.passed]
-    assert len(claims) == 6  # one model family x six claims
+    assert len(claims) == 7  # one model family x seven claims
 
 
 def test_evaluator_catches_theta09_not_degrading():
@@ -124,6 +130,18 @@ def test_evaluator_catches_transport_divergence():
     claims, ok = evaluate_results(
         _matrix_runs(trio_losses=trio), Tolerances(final_tail=2))
     assert "lm:transports_identical" in {c.name for c in claims if not c.passed}
+
+
+def test_evaluator_catches_backend_divergence():
+    pallas = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 + 1e-2]
+    claims, ok = evaluate_results(
+        _matrix_runs(pallas_losses=pallas), Tolerances(final_tail=2))
+    assert "lm:backends_identical" in {c.name for c in claims if not c.passed}
+    # and a missing pallas-backend run is a failure, not a silent skip
+    runs = _matrix_runs()
+    del runs["lm_fft_theta0.7_pallas"]
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
+    assert "lm:backends_identical" in {c.name for c in claims if not c.passed}
 
 
 def test_evaluator_catches_assumption31_violation():
@@ -246,7 +264,7 @@ def test_lab_smoke_matrix_end_to_end(tmp_path):
     for model in ("lm", "convnet"):
         for claim in ("theta0.7_matches_dense", "theta0.9_degrades",
                       "mixed_recovers", "transports_identical",
-                      "assumption31", "thm34_envelope"):
+                      "backends_identical", "assumption31", "thm34_envelope"):
             assert f"{model}:{claim}" in claim_names, claim_names
     # per-step evidence is in the artifact (curves + probes + wire model)
     run = data["runs"]["lm_fft_theta0.7"]
