@@ -25,6 +25,31 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def time_compiled(fn: Callable, *args, iters: int = 3) -> tuple:
+    """(compile_us, steady_us): the first call's wall time (trace + compile +
+    first run) and the median steady-state wall time after warm-up, both with
+    ``block_until_ready``.
+
+    Reporting these SEPARATELY is the point (DESIGN.md §14): a jitted
+    per-bucket loop compiles one subgraph per bucket, so its first-call cost
+    grows with the bucket count while its steady state does not — a single
+    conflated number is dominated by whichever effect the harness happened to
+    trigger, which is how the pre-split benchmark recorded "absurd"
+    host-compress figures.
+    """
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    jax.block_until_ready(fn(*args))  # warm-up: caches, allocator steady state
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return compile_us, times[len(times) // 2] * 1e6
+
+
 def emit(rows: List[Row]) -> None:
     for r in rows:
         name = r.pop("name")

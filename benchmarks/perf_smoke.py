@@ -1,0 +1,73 @@
+"""CI perf smoke for the batched bucket executor (DESIGN.md §14).
+
+Small enough for a CI runner (8 MB buffer, 8 buckets), strict enough to catch
+the two regressions that would quietly undo the executor's point:
+
+1. **steady state** — one stacked launch must not be slower than the jitted
+   per-bucket loop (same math, fewer dispatches; tolerance covers timer
+   noise on loaded runners);
+2. **launch/compile overhead** — the stacked executable must build
+   meaningfully faster than the per-bucket loop's one-subgraph-per-bucket
+   program (this is the "one launch for all buckets" property: the looped
+   program's build cost grows with the bucket count, the stacked one's does
+   not).
+
+Exits nonzero with a diagnostic on failure; run from the repo root (module
+form, so the ``benchmarks`` package resolves):
+
+    PYTHONPATH=src python -m benchmarks.perf_smoke
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+
+from benchmarks.common import time_compiled
+from repro.comms import bucketing, executor
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+
+N = 1 << 21  # 2M floats = 8 MB
+BUCKET_BYTES = 1 << 20  # 1 MB buckets -> 8 buckets
+STEADY_SLACK = 1.25  # stacked steady <= looped steady * slack (timer noise)
+COMPILE_RATIO = 2.0  # looped compile must exceed stacked compile by this
+
+
+def main() -> int:
+    g = jax.random.normal(jax.random.PRNGKey(0), (N,)) * 0.05
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    layout = bucketing.build_layout(N, BUCKET_BYTES)
+    assert layout.n_buckets == 8, layout.n_buckets
+
+    looped = executor.looped_compress_fn(comp, layout)
+    looped_compile, looped_steady = time_compiled(looped, g)
+    stacked = executor.compress_fn(comp, layout, donate=False)
+    stacked_compile, stacked_steady = time_compiled(stacked, g)
+
+    print(f"looped : compile {looped_compile / 1e3:9.1f} ms   "
+          f"steady {looped_steady / 1e3:8.1f} ms   "
+          f"({layout.n_buckets} buckets)")
+    print(f"stacked: compile {stacked_compile / 1e3:9.1f} ms   "
+          f"steady {stacked_steady / 1e3:8.1f} ms   (1 launch)")
+
+    failures = []
+    if stacked_steady > looped_steady * STEADY_SLACK:
+        failures.append(
+            f"stacked steady-state compress ({stacked_steady / 1e3:.1f} ms) is "
+            f"slower than the per-bucket loop ({looped_steady / 1e3:.1f} ms) "
+            f"beyond the {STEADY_SLACK}x noise slack")
+    if looped_compile < stacked_compile * COMPILE_RATIO:
+        failures.append(
+            f"stacked executable build ({stacked_compile / 1e3:.1f} ms) is not "
+            f">={COMPILE_RATIO}x cheaper than the per-bucket loop's "
+            f"({looped_compile / 1e3:.1f} ms) — the one-launch win regressed")
+    for f in failures:
+        print("PERF SMOKE FAIL:", f)
+    if not failures:
+        print("PERF SMOKE OK: stacked executor holds both bounds")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

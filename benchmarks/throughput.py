@@ -8,11 +8,23 @@ analysis and EXPERIMENTS.md §Perf).
 
 Also sweeps bucket size × transport through the cost model (DESIGN.md §9/§11)
 — per-worker wire bits (priced at the transport's payload granularity via
-``cost_model.bucketed_payload_bits``), modeled exchange time, overlap
-fraction, plus a measured host-side per-bucket compress — and times the
-composed compress/decompress under EVERY engine backend (DESIGN.md §13),
-writing both to ``BENCH_throughput.json`` at the repo root so the perf
-trajectory is recorded per PR.
+``cost_model.bucketed_payload_bits``), modeled exchange time for BOTH the
+looped (one collective per bucket, α·n launch latency) and stacked (one
+``StackedPayload`` collective, α·1) exchanges — plus measured host-side
+compress times with the compile/steady-state SPLIT (DESIGN.md §14):
+
+* ``host_compress_compile_us`` / ``host_compress_steady_us`` — the jitted
+  per-bucket loop (one compiled subgraph per bucket: compile cost grows with
+  the bucket count);
+* ``host_compress_dispatch_us`` — the per-bucket Python-dispatch loop (one
+  jitted call per bucket: the pre-executor eager-driver behavior);
+* ``stacked_compress_compile_us`` / ``stacked_compress_steady_us`` — the
+  batched executor: ONE cached jitted launch for all buckets
+  (``comms.executor``).
+
+It also times the composed compress/decompress under EVERY engine backend
+(DESIGN.md §13), writing everything to ``BENCH_throughput.json`` at the repo
+root so the perf trajectory is recorded per PR.
 """
 
 from __future__ import annotations
@@ -23,8 +35,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, time_fn
-from repro.comms import bucketing, cost_model as cm
+from benchmarks.common import Row, time_compiled, time_fn
+from repro.comms import bucketing, cost_model as cm, executor
 from repro.core import fft as cfft
 from repro.core import packing, sparsify
 from repro.core.compressor import FFTCompressor, FFTCompressorConfig
@@ -69,6 +81,32 @@ def _backend_rows(theta: float) -> tuple:
     return rows, records
 
 
+def _compress_timings(comp: FFTCompressor, g, layout) -> dict:
+    """Looped vs stacked host compress, compile and steady state split.
+
+    ``looped`` is the pre-executor execution shape twice over: jitted as one
+    program (its compile time pays one subgraph PER BUCKET) and as a
+    per-bucket Python dispatch loop (one jitted call per bucket — what an
+    eager driver paid per exchange).  ``stacked`` is the batched executor:
+    one cached jitted launch for every bucket (``comms.executor``).
+    """
+    buckets = bucketing.split_buckets(g, layout)
+    looped = executor.looped_compress_fn(comp, layout)
+    looped_compile_us, looped_steady_us = time_compiled(looped, g)
+    one = jax.jit(comp.compress)
+    dispatch = lambda: [one(b) for b in buckets]
+    _, dispatch_us = time_compiled(dispatch)
+    stacked = executor.compress_fn(comp, layout, donate=False)
+    stacked_compile_us, stacked_steady_us = time_compiled(stacked, g)
+    return {
+        "host_compress_compile_us": round(looped_compile_us, 1),
+        "host_compress_steady_us": round(looped_steady_us, 1),
+        "host_compress_dispatch_us": round(dispatch_us, 1),
+        "stacked_compress_compile_us": round(stacked_compile_us, 1),
+        "stacked_compress_steady_us": round(stacked_steady_us, 1),
+    }
+
+
 def _sweep_rows(comp: FFTCompressor) -> list:
     """Bucket size × transport sweep: modeled wire/time + measured compress."""
     m_bytes = 4 * N
@@ -77,10 +115,7 @@ def _sweep_rows(comp: FFTCompressor) -> list:
     for bucket_mb in SWEEP_BUCKET_MB:
         bucket_bytes = None if bucket_mb is None else bucket_mb << 20
         layout = bucketing.build_layout(N, bucket_bytes)
-        # measured: host-side per-bucket compression of the whole buffer
-        buckets = bucketing.split_buckets(g, layout)
-        compress_all = jax.jit(lambda *bs: [comp.compress(b) for b in bs])
-        us = time_fn(compress_all, *buckets, warmup=1, iters=3)
+        timings = _compress_timings(comp, g, layout)
         for transport in SWEEP_TRANSPORTS:
             if transport == "allgather" and layout.n_buckets > 1:
                 continue  # monolithic by definition
@@ -88,17 +123,29 @@ def _sweep_rows(comp: FFTCompressor) -> list:
             # per-bucket params for sequenced/psum, one global fit otherwise
             payload_bits = cm.bucketed_payload_bits(
                 comp.wire_bits, layout.sizes(), transport)
+            # the stacked payload bills every bucket at the padded row width
+            # (== payload_bits here: the sweep's layouts are not ragged)
+            stacked_bits = cm.bucketed_payload_bits(
+                comp.wire_bits, layout.sizes(), transport, stacked=True,
+                chunk=layout.chunk)
             plan = cm.exchange_time_s(
                 m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
                 workers=SWEEP_WORKERS, transport=transport,
                 n_buckets=layout.n_buckets)
+            plan_stacked = cm.exchange_time_s(
+                m_bytes, stacked_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+                workers=SWEEP_WORKERS, transport=transport,
+                n_buckets=layout.n_buckets, stacked=True)
             label = "mono" if bucket_mb is None else f"{bucket_mb}mb"
             rows.append(Row(
                 name=f"exchange_sweep_{transport}_{label}",
-                us_per_call=round(us, 1),
+                us_per_call=timings["host_compress_steady_us"],
+                stacked_us=timings["stacked_compress_steady_us"],
                 n_buckets=layout.n_buckets,
                 wire_mbits_per_worker=round(plan.wire_bits_per_worker / 1e6, 1),
                 model_exchange_ms=round(plan.exchange_s * 1e3, 3),
+                model_exchange_ms_stacked=round(
+                    plan_stacked.exchange_s * 1e3, 3),
                 overlap=round(plan.overlap, 3),
             ))
             records.append({
@@ -107,10 +154,13 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                 "n_buckets": layout.n_buckets,
                 "workers": SWEEP_WORKERS,
                 "message_mb": m_bytes / (1 << 20),
-                "host_compress_us": round(us, 1),
+                **timings,
                 "payload_bits": payload_bits,
                 "wire_bits_per_worker": plan.wire_bits_per_worker,
                 "model_exchange_ms": plan.exchange_s * 1e3,
+                "model_exchange_ms_stacked": plan_stacked.exchange_s * 1e3,
+                "model_n_collectives": plan.n_collectives,
+                "model_n_collectives_stacked": plan_stacked.n_collectives,
                 "overlap_fraction": plan.overlap,
             })
     backend_rows, backend_records = _backend_rows(comp.config.theta)

@@ -6,7 +6,7 @@ into chunk-aligned buckets, ``transport`` exchanges each bucket through a
 pluggable collective strategy, and ``reducers`` composes both under the mesh
 axes (plus error feedback).  ``cost_model`` prices the choices."""
 
-from repro.comms import bucketing, collectives, cost_model, transport
+from repro.comms import bucketing, collectives, cost_model, executor, transport
 from repro.comms.reducers import ReducerConfig, make_reducer
 from repro.comms.transport import get_transport, TRANSPORT_NAMES
 
@@ -16,6 +16,7 @@ __all__ = [
     "bucketing",
     "collectives",
     "cost_model",
+    "executor",
     "transport",
     "get_transport",
     "TRANSPORT_NAMES",

@@ -35,6 +35,8 @@ __all__ = [
     "build_layout",
     "split_buckets",
     "concat_buckets",
+    "stack_buckets",
+    "unstack_buckets",
     "residual_size",
 ]
 
@@ -72,6 +74,29 @@ class BucketLayout:
 
     def bounds(self, b: int) -> Tuple[int, int]:
         return self.boundaries[b], self.boundaries[b + 1]
+
+    # -- stacked (batched-executor) geometry, DESIGN.md §14 -----------------
+
+    def chunk_counts(self) -> Tuple[int, ...]:
+        """Per-bucket chunk count BEFORE stacking pads rows to a common width
+        (the compressor pads each bucket to whole chunks either way)."""
+        return tuple(-(-s // self.chunk) for s in self.sizes())
+
+    @property
+    def max_chunks(self) -> int:
+        """Row width of the stacked matrix, in chunks."""
+        return max(self.chunk_counts())
+
+    @property
+    def padded_size(self) -> int:
+        """Row width of the stacked matrix, in elements (chunk multiple)."""
+        return self.max_chunks * self.chunk
+
+    @property
+    def uniform(self) -> bool:
+        """True when every bucket already fills a full row (no ragged tail);
+        stack/unstack are then pure reshapes."""
+        return all(s == self.padded_size for s in self.sizes())
 
 
 def build_layout(
@@ -116,6 +141,46 @@ def concat_buckets(parts: Sequence[jnp.ndarray], layout: BucketLayout) -> jnp.nd
     if sizes != layout.sizes():
         raise ValueError(f"part sizes {sizes} != layout sizes {layout.sizes()}")
     return parts[0] if len(parts) == 1 else jnp.concatenate(list(parts))
+
+
+def stack_buckets(flat: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Flat buffer -> uniform ``(n_buckets, padded_size)`` matrix.
+
+    The batched executor's input layout (DESIGN.md §14): every bucket becomes
+    one row, zero-padded on the right to the widest bucket's chunk-rounded
+    width.  Zero padding is exact for the compressor — whole padding chunks
+    produce all-zero spectra whose payload slots quantize to code 0, and the
+    per-bucket quantizer fit masks padding chunks out — so stacked payloads
+    stay bitwise-equal to the per-bucket loop (tests/test_stacked.py).  When
+    no bucket is ragged this is a pure reshape (no copy beyond XLA's).
+    """
+    if flat.shape[0] != layout.total:
+        raise ValueError(f"flat has {flat.shape[0]} elems, layout {layout.total}")
+    padded = layout.padded_size
+    if layout.uniform:
+        return flat.reshape(layout.n_buckets, padded)
+    rows = []
+    for lo, hi in zip(layout.boundaries, layout.boundaries[1:]):
+        if hi - lo == padded:
+            rows.append(flat[lo:hi])
+        else:
+            # same padding op as cfft.pad_to_chunks: zeros + prefix set
+            rows.append(
+                jnp.zeros((padded,), flat.dtype).at[: hi - lo].set(flat[lo:hi]))
+    return jnp.stack(rows)
+
+
+def unstack_buckets(stacked: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
+    """Inverse of :func:`stack_buckets`: slice each row's padding tail off and
+    concatenate back to the flat buffer."""
+    if stacked.shape != (layout.n_buckets, layout.padded_size):
+        raise ValueError(
+            f"stacked is {stacked.shape}, layout wants "
+            f"{(layout.n_buckets, layout.padded_size)}")
+    if layout.uniform:
+        return stacked.reshape(-1)
+    return jnp.concatenate(
+        [stacked[b, :s] for b, s in enumerate(layout.sizes())])
 
 
 def residual_size(params) -> int:

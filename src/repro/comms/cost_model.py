@@ -24,6 +24,7 @@ __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "saved_comm_s", "k_min", "is_beneficial", "NETWORKS",
            "bucket_count", "transport_wire_bits", "overlap_fraction",
            "bucketed_payload_bits", "exchange_time_s", "ExchangePlan",
+           "COLLECTIVE_ALPHA_S",
            "dense_allreduce_bits", "RunWireAccount", "run_wire_account"]
 
 
@@ -139,7 +140,8 @@ def transport_wire_bits(transport: str, payload_bits: float, workers: int) -> fl
     raise ValueError(f"unknown transport {transport!r}")
 
 
-def bucketed_payload_bits(wire_bits_fn, sizes, transport: str = "sequenced") -> float:
+def bucketed_payload_bits(wire_bits_fn, sizes, transport: str = "sequenced",
+                          *, stacked: bool = False, chunk: int = 4096) -> float:
     """Compressed payload bits of ONE exchange over a bucket layout.
 
     Quantizer-param overhead (4·32 bits: eps, P, vmin, vmax) is billed per
@@ -156,6 +158,13 @@ def bucketed_payload_bits(wire_bits_fn, sizes, transport: str = "sequenced") -> 
     (``bucketing.BucketLayout.sizes()``).  Before this helper, models summed
     ONE monolithic ``wire_bits`` regardless of transport, under-billing the
     per-bucket params the bucketed transports actually exchange.
+
+    ``stacked=True`` prices the batched executor's StackedPayload
+    (DESIGN.md §14): its struct-of-arrays planes are UNIFORM at the widest
+    bucket's chunk-rounded width, so every bucket is billed at that padded
+    width — ragged layouts ship (inert, code-0) padding slots over the wire,
+    and the model must bill the bytes that actually move.  Identical to the
+    looped bill when no bucket is ragged (the common size-targeted case).
     """
     sizes = list(sizes)
     if not sizes:
@@ -164,6 +173,9 @@ def bucketed_payload_bits(wire_bits_fn, sizes, transport: str = "sequenced") -> 
         raise ValueError(f"unknown transport {transport!r}")
     if transport == "allgather" or len(sizes) == 1:
         return float(wire_bits_fn(sum(sizes)))
+    if stacked:
+        padded = max(-(-s // chunk) * chunk for s in sizes)
+        return float(len(sizes) * wire_bits_fn(padded))
     return float(sum(wire_bits_fn(s) for s in sizes))
 
 
@@ -179,6 +191,14 @@ def overlap_fraction(n_buckets: int) -> float:
     return (n_buckets - 1) / n_buckets
 
 
+# Per-collective launch latency α (seconds): dispatch + rendezvous cost every
+# collective pays before bytes move (the LogP latency term).  The looped
+# bucketed exchange pays it PER BUCKET; the stacked executor (DESIGN.md §14)
+# pays it once per exchange.  25 µs is a practical DCN collective-launch
+# figure; ICI launches are cheaper but the ratio is what the model prices.
+COLLECTIVE_ALPHA_S = 25e-6
+
+
 @dataclasses.dataclass(frozen=True)
 class ExchangePlan:
     """A priced exchange configuration (used by benchmarks/throughput.py)."""
@@ -189,6 +209,8 @@ class ExchangePlan:
     wire_bits_per_worker: float
     exchange_s: float
     overlap: float
+    n_collectives: int = 1  # collective launches per exchange
+    launch_s: float = 0.0  # alpha * n_collectives
 
 
 def exchange_time_s(
@@ -200,6 +222,8 @@ def exchange_time_s(
     workers: int,
     transport: str = "allgather",
     n_buckets: int = 1,
+    stacked: bool = False,
+    alpha_s: float = COLLECTIVE_ALPHA_S,
 ) -> ExchangePlan:
     """Modeled wall time of one compressed gradient exchange.
 
@@ -208,24 +232,35 @@ def exchange_time_s(
     §III-D throughput model.  Per-bucket pipelining hides the overlap
     fraction of whichever of (compress, wire) is smaller behind the other; the
     monolithic transports serialize the two.
+
+    Collective-launch latency (``alpha_s``) is billed per collective: the
+    looped bucketed exchange issues ``n_buckets`` independent collectives
+    (α·n), the stacked executor (``stacked=True``) ships every bucket in one
+    ``StackedPayload`` collective (α·1, no per-bucket pipelining — the single
+    fused program serializes compress and wire but pays one launch).
     """
     comp_s = 2.0 * compression_cost_s(message_bytes, thr)  # compress + decompress
     wire_per_worker = transport_wire_bits(transport, payload_bits, workers)
     wire_s = wire_per_worker / 8.0 / t_comm
-    if transport == "allgather" or n_buckets <= 1:
+    if stacked or transport == "allgather" or n_buckets <= 1:
+        n_coll = 1
         total = comp_s + wire_s
         ov = 0.0
     else:
         # pipeline: first bucket's smaller stage fills, the rest overlaps
+        n_coll = n_buckets
         ov = overlap_fraction(n_buckets)
         total = max(comp_s, wire_s) + min(comp_s, wire_s) * (1.0 - ov)
+    launch_s = alpha_s * n_coll
     return ExchangePlan(
         transport=transport,
         n_buckets=n_buckets,
         workers=workers,
         wire_bits_per_worker=wire_per_worker,
-        exchange_s=total,
+        exchange_s=total + launch_s,
         overlap=ov,
+        n_collectives=n_coll,
+        launch_s=launch_s,
     )
 
 

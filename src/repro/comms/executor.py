@@ -1,0 +1,102 @@
+"""Cached, end-to-end jitted entry points for the batched bucket executor
+(DESIGN.md §14).
+
+Inside a jitted train step the stacked exchange is just traced code — but the
+hot paths that drive compression from Python (benchmarks, the perf smoke,
+error-feedback probes, any eager caller) used to pay one dispatch per bucket
+per call, and re-trace whenever they rebuilt their jit wrapper.  This module
+owns ONE jit cache for those callers, keyed on everything that shapes the
+executable:
+
+    (entry point, compressor class, compressor config, bucket layout)
+
+``FFTCompressorConfig`` and ``BucketLayout`` are frozen/hashable dataclasses,
+so the key is a pure value — two compressors with equal configs share one
+executable, and a config or layout change is a new cache line, never a
+silent retrace of an old one.
+
+Buffer donation: the flat gradient is donated to the compiled call where the
+platform supports it (TPU/GPU), so the compress consumes its input buffer in
+place — the steady-state cost of a call is one executable launch, no defensive
+copy.  On CPU donation is not implemented by the runtime and is skipped to
+avoid per-call warnings.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+
+from repro.comms import bucketing
+
+__all__ = ["compress_fn", "roundtrip_fn", "looped_compress_fn", "cache_size",
+           "clear_cache"]
+
+_CACHE: Dict[Tuple, Callable] = {}
+
+
+def _donate_argnums() -> tuple:
+    # donation is a no-op (with a warning) on the CPU runtime
+    return (0,) if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+def _key(tag: str, comp, layout: bucketing.BucketLayout, donate: bool):
+    return (tag, type(comp).__name__, comp.config, layout, donate)
+
+
+def compress_fn(comp, layout: bucketing.BucketLayout, *, donate: bool = True):
+    """flat -> ``StackedPayload``: one cached jitted launch for ALL buckets."""
+    key = _key("compress", comp, layout, donate)
+    if key not in _CACHE:
+        def run(flat):
+            return comp.compress_stacked(
+                bucketing.stack_buckets(flat, layout), layout.sizes())
+
+        _CACHE[key] = jax.jit(
+            run, donate_argnums=_donate_argnums() if donate else ())
+    return _CACHE[key]
+
+
+def roundtrip_fn(comp, layout: bucketing.BucketLayout, *, donate: bool = False):
+    """flat -> flat reconstruction through the full stacked
+    compress -> decompress path (what error feedback accumulates against),
+    as one cached jitted executable.
+
+    Donation is OFF by default here: the canonical use computes a residual
+    against the input afterwards (``residual = corrected - roundtrip``), so
+    donating the input would invalidate it on TPU/GPU.  Opt in only when the
+    caller truly discards the input."""
+    key = _key("roundtrip", comp, layout, donate)
+    if key not in _CACHE:
+        def run(flat):
+            payload = comp.compress_stacked(
+                bucketing.stack_buckets(flat, layout), layout.sizes())
+            return bucketing.unstack_buckets(
+                comp.decompress_stacked(payload), layout)
+
+        _CACHE[key] = jax.jit(
+            run, donate_argnums=_donate_argnums() if donate else ())
+    return _CACHE[key]
+
+
+def looped_compress_fn(comp, layout: bucketing.BucketLayout):
+    """flat -> list of per-bucket payloads via the PER-BUCKET loop, jitted as
+    one program — the pre-stacked execution shape, kept as the parity/bench
+    baseline (its compile time grows with the bucket count; the stacked
+    executable's does not)."""
+    key = _key("looped", comp, layout, False)
+    if key not in _CACHE:
+        def run(flat):
+            return comp.compress_buckets(bucketing.split_buckets(flat, layout))
+
+        _CACHE[key] = jax.jit(run)
+    return _CACHE[key]
+
+
+def cache_size() -> int:
+    return len(_CACHE)
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

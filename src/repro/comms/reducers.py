@@ -21,11 +21,14 @@ The compressed exchange is a three-layer subsystem (DESIGN.md §8-§9):
 1. **bucketing** — the gradient pytree is flattened, concatenated, and split
    into size-targeted, chunk-aligned buckets (``comms.bucketing``).  With
    ``bucket_bytes=None`` the whole buffer is one bucket (seed behavior).
-2. **transport** — each bucket rides a pluggable collective strategy
+2. **transport** — the exchange rides a pluggable collective strategy
    (``comms.transport``): ``allgather`` (one monolithic payload all_gather),
-   ``sequenced`` (one independent all_gather per bucket, overlappable by
-   XLA's latency-hiding scheduler), or ``psum`` (spectrum-psum: dequantize
-   locally, psum spectra, one iFFT — O(k) wire instead of O(P·k)).
+   ``sequenced`` (bucketed all_gather), or ``psum`` (spectrum-psum:
+   dequantize locally, psum spectra, one iFFT — O(k) wire instead of
+   O(P·k)).  With ``stacked=True`` (default, DESIGN.md §14) the bucketed
+   transports compress every bucket in one batched kernel pass and issue ONE
+   collective per exchange (a ``StackedPayload``); ``stacked=False`` runs
+   the per-bucket loop (one collective per bucket), bitwise-identically.
 3. **this module** — flatten/split, hierarchical axis composition, and the
    per-bucket error-feedback residual slices.
 
@@ -118,6 +121,10 @@ class ReducerConfig:
     transport: str = "allgather"  # allgather|sequenced|psum
     # compressor stage-execution engine (DESIGN.md §13): reference|pallas|auto
     backend: str = "reference"
+    # batched bucket executor (DESIGN.md §14): compress every bucket in one
+    # batched kernel pass and move one StackedPayload per exchange (bitwise-
+    # equal to the loop); False forces the per-bucket loop
+    stacked: bool = True
 
     def __post_init__(self):
         if self.transport not in TRANSPORT_NAMES:
@@ -189,9 +196,8 @@ def make_reducer(config: ReducerConfig):
 
     def _exchange_flat(flat: jnp.ndarray, axis: str) -> jnp.ndarray:
         layout = config.layout_for(flat.shape[0])
-        buckets = bucketing.split_buckets(flat, layout)
-        means = transport.exchange(buckets, comp, axis)
-        return bucketing.concat_buckets(means, layout)
+        return transport.exchange_flat(flat, layout, comp, axis,
+                                       stacked=config.stacked)
 
     def compressed_reduce(grads):
         flat, shapes, treedef = flatten_tree(grads)
@@ -218,22 +224,16 @@ def make_reducer(config: ReducerConfig):
         if config.kind == "hierarchical" and config.axis:
             flat = _mean_over(flat, config.axis)
         layout = config.layout_for(flat.shape[0])
-        corrected = [
-            b + r
-            for b, r in zip(
-                bucketing.split_buckets(flat, layout),
-                bucketing.split_buckets(residual_flat, layout),
-            )
-        ]
-        # per-bucket residual: what THIS transport's compression granularity
-        # dropped on this worker (matches per-bucket quantizer fits)
-        local_hats = transport.local_roundtrip(corrected, comp)
-        new_residual = bucketing.concat_buckets(
-            [c - h for c, h in zip(corrected, local_hats)], layout
-        )
+        corrected = flat + residual_flat
+        # residual at the transport's own compression granularity: what THIS
+        # transport dropped on this worker (per-bucket quantizer fits and
+        # all) — the flat entry point slices buckets with the same layout
+        local_hat = transport.local_roundtrip_flat(
+            corrected, layout, comp, stacked=config.stacked)
+        new_residual = corrected - local_hat
         axis = config.pod_axis if config.kind == "hierarchical" else config.axis
-        means = transport.exchange(corrected, comp, axis)
-        mean_flat = bucketing.concat_buckets(means, layout)
+        mean_flat = transport.exchange_flat(
+            corrected, layout, comp, axis, stacked=config.stacked)
         if config.kind != "hierarchical" and config.pod_axis is not None:
             mean_flat = _mean_over(mean_flat, config.pod_axis)
         return unflatten_tree(mean_flat, shapes, treedef), new_residual

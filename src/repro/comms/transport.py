@@ -34,6 +34,15 @@ Quantizer granularity: the monolithic ``allgather`` transport fits ONE
 quantizer over the whole buffer (seed behavior); ``sequenced`` and ``psum``
 compress per bucket, so each bucket fits its own range (small buckets stop
 inheriting a global range — see ``FFTCompressor.compress_buckets``).
+
+Batched bucket executor (DESIGN.md §14): the hot entry point is now
+``exchange_flat`` — the whole flat gradient goes in, the whole mean comes
+out.  With ``stacked=True`` (the default) and a stacked-capable compressor,
+the bucketed transports compress EVERY bucket with one batched kernel pass
+(``compress_stacked``) and move ONE ``StackedPayload`` per exchange — one
+collective launch instead of one per bucket — while staying bitwise-equal to
+the per-bucket loop (per-bucket quantizers included).  ``stacked=False`` or a
+loop-only compressor (terngrad/qsgd) falls back to the per-bucket path.
 """
 
 from __future__ import annotations
@@ -43,6 +52,7 @@ from typing import List, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.comms import bucketing
 from repro.comms.collectives import axis_size
 from repro.core import fft as cfft
 
@@ -56,6 +66,23 @@ def _compress_all(buckets: Sequence[jnp.ndarray], comp) -> List:
     if hasattr(comp, "compress_buckets"):
         return comp.compress_buckets(buckets)
     return [comp.compress(b) for b in buckets]
+
+
+def _can_stack(comp) -> bool:
+    return hasattr(comp, "compress_stacked")
+
+
+def _compress_stacked(flat: jnp.ndarray, layout, comp):
+    """ONE batched compress of every bucket (same quantizer granularity as
+    the per-bucket loop: one fit per bucket row)."""
+    return comp.compress_stacked(
+        bucketing.stack_buckets(flat, layout), layout.sizes())
+
+
+def _irfft_rows(mean_spectrum: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """(B, max_chunks, f) mean spectrum -> (B, padded_size) time domain."""
+    x = jnp.fft.irfft(mean_spectrum, n=chunk, axis=-1)
+    return x.reshape(mean_spectrum.shape[0], -1).astype(jnp.float32)
 
 
 def _ordered_worker_mean(stacked: jnp.ndarray) -> jnp.ndarray:
@@ -111,11 +138,18 @@ def _psum_mean_payload(payload, comp, axis: str) -> jnp.ndarray:
 
 
 class Transport:
-    """Exchange interface: per-bucket flats in, per-bucket means out.
+    """Exchange interface.
 
-    ``local_roundtrip`` exposes the compress->decompress reconstruction at the
-    SAME granularity the transport ships at, so error feedback accumulates
-    exactly what this transport drops (per-bucket quantizers and all).
+    The hot entry points take the WHOLE flat gradient plus its bucket layout
+    (``exchange_flat`` / ``local_roundtrip_flat``) so the batched executor
+    can run end-to-end without per-bucket list plumbing; the per-bucket
+    ``exchange``/``local_roundtrip`` remain as the loop fallback (and for
+    compressors with no stacked path).
+
+    ``local_roundtrip_flat`` exposes the compress->decompress reconstruction
+    at the SAME granularity the transport ships at, so error feedback
+    accumulates exactly what this transport drops (per-bucket quantizers and
+    all).
     """
 
     name: str = "base"
@@ -125,6 +159,27 @@ class Transport:
 
     def local_roundtrip(self, buckets: Sequence[jnp.ndarray], comp) -> List[jnp.ndarray]:
         return [comp.decompress(p) for p in _compress_all(buckets, comp)]
+
+    # -- flat (batched-executor) entry points, DESIGN.md §14 ----------------
+
+    def exchange_flat(self, flat: jnp.ndarray, layout, comp, axis: str,
+                      stacked: bool = True) -> jnp.ndarray:
+        """Whole-gradient exchange over a bucket layout -> flat mean.
+
+        Default: the per-bucket loop (split -> exchange -> concat).  Stacked
+        transports override this with the single-collective path.
+        """
+        del stacked  # loop fallback ignores the flag
+        buckets = bucketing.split_buckets(flat, layout)
+        return bucketing.concat_buckets(
+            self.exchange(buckets, comp, axis), layout)
+
+    def local_roundtrip_flat(self, flat: jnp.ndarray, layout, comp,
+                             stacked: bool = True) -> jnp.ndarray:
+        del stacked
+        buckets = bucketing.split_buckets(flat, layout)
+        return bucketing.concat_buckets(
+            self.local_roundtrip(buckets, comp), layout)
 
 
 class AllGatherTransport(Transport):
@@ -143,14 +198,26 @@ class AllGatherTransport(Transport):
         flat = buckets[0] if len(buckets) == 1 else jnp.concatenate(list(buckets))
         return _resplit(comp.decompress(comp.compress(flat)), sizes)
 
+    # monolithic by definition: already one payload, one collective — the
+    # flat entry points skip the bucket split/concat entirely
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+        del layout, stacked
+        return _gather_mean_payload(comp.compress(flat), comp, axis)
+
+    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+        del layout, stacked
+        return comp.decompress(comp.compress(flat))
+
 
 class SequencedTransport(Transport):
-    """One all_gather PER BUCKET: n_buckets independent collectives.
+    """Bucketed all_gather with per-bucket quantizer ranges.
 
-    The collectives have no data dependencies between them, so XLA's
-    latency-hiding scheduler is free to overlap bucket i's wire time with
-    bucket i+1's compression (and with backprop once the reducer is fused
-    into the step).  Each bucket fits its own quantizer range.
+    Stacked (default): ONE all_gather of the whole exchange's
+    ``StackedPayload`` — a single collective launch carrying every bucket's
+    codes, indices, and quantizer params as struct-of-arrays planes.  Looped
+    fallback: one independent all_gather PER BUCKET (XLA's latency-hiding
+    scheduler may pipeline them, at n_buckets collective launches).  Both
+    paths realize the same mean bitwise.
     """
 
     name = "sequenced"
@@ -159,15 +226,62 @@ class SequencedTransport(Transport):
         payloads = _compress_all(buckets, comp)
         return [_gather_mean_payload(p, comp, axis) for p in payloads]
 
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+        if not (stacked and _can_stack(comp)):
+            return super().exchange_flat(flat, layout, comp, axis, stacked)
+        payload = _compress_stacked(flat, layout, comp)
+        gathered = jax.lax.all_gather(payload, axis)  # ONE collective
+        if hasattr(comp, "decompress_spectrum"):
+            spectra = jax.vmap(comp.decompress_spectrum)(gathered)
+            mean = _ordered_worker_mean(spectra)  # (B, max_chunks, f)
+            return bucketing.unstack_buckets(
+                _irfft_rows(mean, layout.chunk), layout)
+        recon = jax.vmap(comp.decompress_stacked)(gathered)  # (W, B, padded)
+        return bucketing.unstack_buckets(_ordered_worker_mean(recon), layout)
+
+    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+        if not (stacked and _can_stack(comp)):
+            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+        payload = _compress_stacked(flat, layout, comp)
+        return bucketing.unstack_buckets(
+            comp.decompress_stacked(payload), layout)
+
 
 class SpectrumPsumTransport(Transport):
-    """Per-bucket psum of dequantized spectra: O(k) wire, P-independent."""
+    """Psum of dequantized spectra: O(k) wire, P-independent.
+
+    Stacked (default): every bucket's dequantized spectrum rides ONE psum of
+    the ``(2, n_buckets, max_chunks, f)`` plane stack — a single collective
+    launch — followed by one batched inverse FFT.  Looped fallback: one psum
+    per bucket.
+    """
 
     name = "psum"
 
     def exchange(self, buckets, comp, axis):
         payloads = _compress_all(buckets, comp)
         return [_psum_mean_payload(p, comp, axis) for p in payloads]
+
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+        if not (stacked and _can_stack(comp)):
+            return super().exchange_flat(flat, layout, comp, axis, stacked)
+        payload = _compress_stacked(flat, layout, comp)
+        inv_p = 1.0 / axis_size(axis)
+        if hasattr(comp, "decompress_spectrum"):
+            spec = comp.decompress_spectrum(payload)  # (B, max_chunks, f)
+            summed = jax.lax.psum(jnp.stack([spec.real, spec.imag]), axis)
+            mean = (summed[0] + 1j * summed[1]) * inv_p
+            return bucketing.unstack_buckets(
+                _irfft_rows(mean, layout.chunk), layout)
+        summed = jax.lax.psum(comp.decompress_stacked(payload), axis)
+        return bucketing.unstack_buckets(summed * inv_p, layout)
+
+    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+        if not (stacked and _can_stack(comp)):
+            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+        payload = _compress_stacked(flat, layout, comp)
+        return bucketing.unstack_buckets(
+            comp.decompress_stacked(payload), layout)
 
 
 def _resplit(flat: jnp.ndarray, sizes: List[int]) -> List[jnp.ndarray]:

@@ -46,11 +46,33 @@ from repro.core.quantizer import (
 __all__ = [
     "FFTCompressorConfig",
     "FFTPayload",
+    "StackedPayload",
+    "stack_bucket_quant",
+    "valid_chunk_mask",
     "FFTCompressor",
     "TimeDomainCompressor",
     "QuantOnlyCompressor",
     "NoCompression",
 ]
+
+
+def valid_chunk_mask(sizes, max_chunks: int, chunk: int) -> jnp.ndarray:
+    """(n_buckets, max_chunks, 1) mask of REAL chunk rows in a stacked bucket
+    matrix — False on the zero-padding rows the uniform width added.  The
+    canonical padding-mask rule of the batched executor (DESIGN.md §14):
+    every stacked quantizer fit masks with this, so the fit sees exactly the
+    values the per-bucket loop saw."""
+    counts = jnp.asarray([-(-int(s) // chunk) for s in sizes])
+    return (jnp.arange(max_chunks)[None, :] < counts[:, None])[:, :, None]
+
+
+def stack_bucket_quant(q: FittedQuantizer) -> FittedQuantizer:
+    """Reshape a vector quantizer fit (leaves ``(n_buckets,)``) to the
+    StackedPayload leaf layout ``(n_buckets, 1, 1)`` so its params broadcast
+    against ``(n_buckets, max_chunks, k)`` payload planes."""
+    return FittedQuantizer(
+        q.config, q.eps.reshape(-1, 1, 1), q.p_codes.reshape(-1, 1, 1),
+        q.vmax.reshape(-1, 1, 1), q.vmin.reshape(-1, 1, 1))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -80,6 +102,70 @@ class FFTPayload:
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         return cls(*leaves, *aux)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StackedPayload:
+    """Struct-of-arrays payload of one WHOLE bucketed exchange (DESIGN.md §14).
+
+    Where the per-bucket loop emits ``n_buckets`` :class:`FFTPayload` objects,
+    the batched executor emits ONE of these: every plane carries a leading
+    bucket axis (``(n_buckets, max_chunks, k)``), so a transport moves the
+    entire exchange with a single collective per plane instead of one per
+    bucket.  Per-bucket quantizer params are stacked the same way —
+    ``quant`` leaves have shape ``(n_buckets, 1, 1)`` and broadcast against
+    the code planes in encode/decode.
+
+    Rows beyond a bucket's true chunk count (``chunk_counts``) are padding:
+    their slots hold code 0 at index 0..k-1 and decode to nothing.  Slicing
+    row ``b`` down to its true chunk count recovers the exact payload the
+    per-bucket loop would have produced (:meth:`bucket_payloads` — the
+    bitwise-parity contract, tests/test_stacked.py).
+    """
+
+    re: jnp.ndarray  # (n_buckets, max_chunks, k) codes or f32
+    im: jnp.ndarray  # same, or (n_buckets, max_chunks, 0) when has_im=False
+    idx: jnp.ndarray  # (n_buckets, max_chunks, k) int16 bin indices
+    quant: Optional[FittedQuantizer]  # leaves (n_buckets, 1, 1); None when off
+    sizes: Tuple[int, ...] = dataclasses.field(metadata={"static": True})
+    chunk: int = dataclasses.field(metadata={"static": True})
+    has_im: bool = dataclasses.field(default=True, metadata={"static": True})
+
+    def tree_flatten(self):
+        return (self.re, self.im, self.idx, self.quant), (
+            self.sizes, self.chunk, self.has_im)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def padded_size(self) -> int:
+        return self.re.shape[-2] * self.chunk
+
+    def chunk_counts(self) -> Tuple[int, ...]:
+        return tuple(-(-s // self.chunk) for s in self.sizes)
+
+    def bucket_quant(self, b: int) -> Optional[FittedQuantizer]:
+        if self.quant is None:
+            return None
+        q = self.quant
+        return FittedQuantizer(q.config, q.eps[b, 0, 0], q.p_codes[b, 0, 0],
+                               q.vmax[b, 0, 0], q.vmin[b, 0, 0])
+
+    def bucket_payloads(self) -> list:
+        """Slice back to the per-bucket payloads the looped path emits."""
+        out = []
+        for b, (size, c_b) in enumerate(zip(self.sizes, self.chunk_counts())):
+            out.append(FFTPayload(
+                self.re[b, :c_b], self.im[b, :c_b], self.idx[b, :c_b],
+                self.bucket_quant(b), size, self.chunk, has_im=self.has_im))
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +237,18 @@ class FFTCompressor:
         (DESIGN.md §8); the bucketed transports rely on this."""
         return self._backend.compress_buckets(self.config, bucket_flats)
 
+    def compress_stacked(self, stacked: jnp.ndarray, sizes) -> StackedPayload:
+        """Batched bucket executor (DESIGN.md §14): compress EVERY bucket of a
+        ``(n_buckets, padded_size)`` matrix (``bucketing.stack_buckets``) with
+        one batched kernel pass, fitting one quantizer per bucket row.
+        Bitwise-equal to :meth:`compress_buckets` on the same layout."""
+        return self._backend.compress_stacked(self.config, stacked, sizes)
+
+    def decompress_stacked(self, payload: StackedPayload) -> jnp.ndarray:
+        """Inverse of :meth:`compress_stacked` -> ``(n_buckets, padded_size)``
+        (``bucketing.unstack_buckets`` recovers the flat buffer)."""
+        return self._backend.decompress_stacked(payload)
+
     # -- size accounting ----------------------------------------------------
     def wire_bits(self, n: int) -> int:
         return self._engine_mod.wire_bits(self.config, n)
@@ -198,6 +296,41 @@ class TimeDomainCompressor:
             vals.astype(jnp.float32), payload.idx, payload.chunk
         )
         return dense.reshape(-1)[: payload.orig_len]
+
+    def compress_stacked(self, stacked: jnp.ndarray, sizes) -> StackedPayload:
+        """Batched per-bucket top-k (DESIGN.md §14): one batched selection over
+        the ``(n_buckets, padded_size)`` matrix, one quantizer fit per bucket
+        row (padding chunks masked out of the range), bitwise-equal to the
+        per-bucket loop."""
+        cfg = self.config
+        sizes = tuple(int(s) for s in sizes)
+        n_buckets, padded = stacked.shape
+        c_max = padded // cfg.chunk
+        x3 = stacked.reshape(n_buckets, c_max, cfg.chunk).astype(jnp.float32)
+        k = sparsify.keep_count(cfg.chunk, cfg.theta)
+        idx = sparsify.topk_select(jnp.abs(x3), k)
+        vals = packing.pack_by_indices(x3, idx)
+        if cfg.quantize:
+            valid = valid_chunk_mask(sizes, c_max, cfg.chunk)
+            lo = jnp.where(valid, vals, jnp.inf).min(axis=(1, 2))
+            hi = jnp.where(valid, vals, -jnp.inf).max(axis=(1, 2))
+            quant = stack_bucket_quant(fit_quantizer(lo, hi, self._qcfg))
+            vals = q_encode(vals, quant)
+        else:
+            quant = None
+        empty_im = jnp.zeros(vals.shape[:-1] + (0,), vals.dtype)
+        return StackedPayload(vals, empty_im, idx.astype(jnp.int16), quant,
+                              sizes, cfg.chunk, has_im=False)
+
+    def decompress_stacked(self, payload: StackedPayload) -> jnp.ndarray:
+        vals = payload.re
+        if payload.quant is not None:
+            vals = q_decode(vals, payload.quant)
+        n_buckets, c_max, k = vals.shape
+        dense = packing.unpack_by_indices(
+            vals.astype(jnp.float32).reshape(n_buckets * c_max, k),
+            payload.idx.reshape(n_buckets * c_max, k), payload.chunk)
+        return dense.reshape(n_buckets, c_max * payload.chunk)
 
     def wire_bits(self, n: int) -> int:
         cfg = self.config

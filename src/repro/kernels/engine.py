@@ -4,13 +4,17 @@ applied to our compress/decompress hot path).
 
 ``FFTCompressor`` (core/compressor.py) owns the *protocol* — payload format,
 wire accounting, config — and delegates stage execution here.  A backend
-implements the same five entry points the compressor exposes:
+implements the entry points the compressor exposes:
 
-    compress(cfg, x_flat)          -> FFTPayload
-    compress_buckets(cfg, buckets) -> [FFTPayload]
-    decompress(payload)            -> flat f32
-    decompress_spectrum(payload)   -> dense complex spectrum
-    wire_bits(cfg, n)              -> static wire estimate (shared accounting)
+    compress(cfg, x_flat)            -> FFTPayload
+    compress_buckets(cfg, buckets)   -> [FFTPayload]        (per-bucket loop)
+    compress_stacked(cfg, mat, sizes)-> StackedPayload      (batched executor,
+                                        DESIGN.md §14: every bucket in ONE
+                                        launch, bitwise-equal to the loop)
+    decompress(payload)              -> flat f32
+    decompress_stacked(payload)      -> (n_buckets, padded) f32
+    decompress_spectrum(payload)     -> dense complex spectrum (batch-aware)
+    wire_bits(cfg, n)                -> static wire estimate (shared accounting)
 
 Backends (``FFTCompressorConfig.backend``):
 
@@ -96,6 +100,12 @@ def _payload_cls():
     return FFTPayload
 
 
+def _stacked_cls():
+    from repro.core.compressor import StackedPayload
+
+    return StackedPayload
+
+
 # ---------------------------------------------------------------------------
 # shared helpers (config math used by every backend)
 # ---------------------------------------------------------------------------
@@ -121,6 +131,39 @@ def _weighted_magnitude(re, im, w):
 
 def _qcfg(cfg) -> RangeQuantConfig:
     return RangeQuantConfig(cfg.n_bits, cfg.m_bits)
+
+
+def _scatter_spectrum(idx, kept, f_bins: int) -> jnp.ndarray:
+    """Additive scatter of kept coefficients into dense ``(..., f_bins)`` rows.
+
+    Shape-polymorphic over LEADING axes (chunk, bucket, worker — any stack of
+    them): the row scatter is defined once over a flattened row axis, so the
+    transports' worker-axis ``vmap`` composes with the executor's bucket axis
+    without re-tracing per composition (the old per-call ``jnp.zeros`` target
+    was rebuilt for every distinct leading shape).  ``.add`` tolerates the
+    code-0/index-0 padding slots of tile- and bucket-padded payloads.
+    """
+    lead = kept.shape[:-1]
+    k = kept.shape[-1]
+    rows_i = idx.reshape(-1, k)
+    rows_v = kept.reshape(-1, k)
+    zeros = jnp.zeros((rows_v.shape[0], f_bins), rows_v.dtype)
+    out = jax.vmap(lambda row, i, v: row.at[i].add(v))(zeros, rows_i, rows_v)
+    return out.reshape(lead + (f_bins,))
+
+
+def _valid_chunk_mask(sizes, max_chunks: int, chunk: int) -> jnp.ndarray:
+    # canonical padding-mask rule lives next to StackedPayload (deferred
+    # import, same reason as _payload_cls)
+    from repro.core.compressor import valid_chunk_mask
+
+    return valid_chunk_mask(sizes, max_chunks, chunk)
+
+
+def _stack_quant(q):
+    from repro.core.compressor import stack_bucket_quant
+
+    return stack_bucket_quant(q)
 
 
 def wire_bits(cfg, n: int) -> int:
@@ -178,28 +221,43 @@ class CompressorBackend:
         """
         return [self.compress(cfg, b) for b in bucket_flats]
 
+    def compress_stacked(self, cfg, stacked: jnp.ndarray, sizes):
+        """Batched bucket executor (DESIGN.md §14): compress a uniform
+        ``(n_buckets, padded_size)`` matrix (``bucketing.stack_buckets``) in
+        one batched pass, one quantizer fit per bucket row, producing a
+        ``StackedPayload`` bitwise-equal to :meth:`compress_buckets` on the
+        same layout."""
+        raise NotImplementedError
+
     # -- decompress --------------------------------------------------------
     def decompress_spectrum(self, payload) -> jnp.ndarray:
-        """Payload -> dense complex spectrum (c, chunk//2+1).
+        """Payload -> dense complex spectrum (..., chunk//2+1).
 
         Shared by every backend: the dequantize+scatter is O(k) work that the
         collectives vmap over the worker axis (comms/transport.py), so it
         stays plain jnp — the kernel-fused win lives in compress/decompress.
-        The scatter uses `.add`, which tolerates the code-0/index-0 padding
-        slots a tile-padded payload may carry (they add 0 to bin 0).
+        Batch-aware over leading axes: accepts the monolithic (c, k) payload,
+        the stacked (n_buckets, max_chunks, k) payload, and any worker-vmap
+        of either (see ``_scatter_spectrum``).
         """
         re, im = payload.re, payload.im
         if payload.quant is not None:
             re, im = q_decode(re, payload.quant), q_decode(im, payload.quant)
         kept = re.astype(jnp.float32) + 1j * im.astype(jnp.float32)
-        f_bins = payload.chunk // 2 + 1
-        zeros = jnp.zeros(kept.shape[:-1] + (f_bins,), kept.dtype)
-        return jax.vmap(lambda row, i, v: row.at[i].add(v))(
-            zeros, payload.idx, kept)
+        return _scatter_spectrum(payload.idx, kept, payload.chunk // 2 + 1)
 
     def decompress(self, payload) -> jnp.ndarray:
         spectrum = self.decompress_spectrum(payload)
         return cfft.chunked_irfft(spectrum, payload.orig_len, payload.chunk)
+
+    def decompress_stacked(self, payload) -> jnp.ndarray:
+        """StackedPayload -> ``(n_buckets, padded_size)`` time-domain matrix
+        (``bucketing.unstack_buckets`` recovers the flat buffer).  Padding
+        rows decode to exact zeros, so each row's prefix is bitwise-equal to
+        the per-bucket ``decompress``."""
+        spectrum = self.decompress_spectrum(payload)  # (B, max_chunks, f)
+        x = jnp.fft.irfft(spectrum, n=payload.chunk, axis=-1)
+        return x.reshape(spectrum.shape[0], -1).astype(jnp.float32)
 
 
 class ReferenceBackend(CompressorBackend):
@@ -235,6 +293,60 @@ class ReferenceBackend(CompressorBackend):
         lo = jnp.minimum(re.min(), im.min())
         hi = jnp.maximum(re.max(), im.max())
         return fit_quantizer(lo, hi, _qcfg(cfg))
+
+    def compress_stacked(self, cfg, stacked: jnp.ndarray, sizes):
+        """ONE executable for every bucket: the per-bucket loop's exact math
+        as a ``lax.map`` over the bucket axis of the (n_buckets, max_chunks,
+        chunk) tensor.  The rolled grid keeps the program size (and compile
+        time) independent of the bucket count — the unrolled loop compiles
+        one subgraph PER BUCKET — while each iteration's working set stays
+        one bucket wide (cache-resident on hosts; the pallas backend flattens
+        the same math into one kernel grid instead).  Per-bucket quantizer
+        ranges are per-bucket reductions with the zero-padding chunks masked
+        out (min/max over a subset is order-free, so each bucket's fit — and
+        hence its codes — is bitwise-equal to the loop's)."""
+        sizes = tuple(int(s) for s in sizes)
+        n_buckets, padded = stacked.shape
+        c_max = padded // cfg.chunk
+        k = _keep_k(cfg)
+        w = cfft.hermitian_weights(cfg.chunk)
+        counts = jnp.asarray([-(-s // cfg.chunk) for s in sizes])
+
+        def one_bucket(args):
+            x2d, c_b = args  # (max_chunks, chunk) rows, true chunk count
+            # row-for-row the same transform the looped path runs via
+            # cfft.chunked_rfft
+            freqs = jnp.fft.rfft(x2d.astype(jnp.float32),
+                                 axis=-1).astype(jnp.complex64)
+            re_p = jnp.real(freqs).astype(jnp.float32)
+            im_p = jnp.imag(freqs).astype(jnp.float32)
+            mag = _weighted_magnitude(re_p, im_p, w)
+            idx = sparsify.topk_select(mag, k)
+            kept = packing.pack_by_indices(freqs, idx)
+            re, im = jnp.real(kept), jnp.imag(kept)
+            if not cfg.quantize:
+                return re, im, idx
+            if cfg.range_mode == "fixed":
+                lo, hi = cfg.fixed_range
+                quant = fit_quantizer(lo, hi, _qcfg(cfg))
+            else:
+                valid = (jnp.arange(c_max) < c_b)[:, None]
+                lo = jnp.minimum(jnp.where(valid, re, jnp.inf).min(),
+                                 jnp.where(valid, im, jnp.inf).min())
+                hi = jnp.maximum(jnp.where(valid, re, -jnp.inf).max(),
+                                 jnp.where(valid, im, -jnp.inf).max())
+                quant = fit_quantizer(lo, hi, _qcfg(cfg))
+            return q_encode(re, quant), q_encode(im, quant), idx, quant
+
+        x3 = stacked.reshape(n_buckets, c_max, cfg.chunk)
+        if cfg.quantize:
+            re, im, idx, quant = jax.lax.map(one_bucket, (x3, counts))
+            quant = _stack_quant(quant)
+        else:
+            re, im, idx = jax.lax.map(one_bucket, (x3, counts))
+            quant = None
+        return _stacked_cls()(re, im, idx.astype(jnp.int16), quant, sizes,
+                              cfg.chunk)
 
 
 class PallasBackend(CompressorBackend):
@@ -315,6 +427,114 @@ class PallasBackend(CompressorBackend):
             rec[:, :k], imc[:, :k], idx[:, :k].astype(jnp.int16),
             quant, n, cfg.chunk)
 
+    def compress_stacked(self, cfg, stacked: jnp.ndarray, sizes):
+        """ONE kernel launch for every bucket: all bucket rows ride a single
+        grid, and the per-bucket quantizer params become per-ROW planes inside
+        the fused kernel (``fused_compress_pallas`` with vector eps/p_codes).
+        The shared mid-gap tau and masked range fit keep codes bitwise-equal
+        to the per-bucket loop (and to the reference backend, slot order
+        aside)."""
+        sizes = tuple(int(s) for s in sizes)
+        n_buckets, padded = stacked.shape
+        c_max = padded // cfg.chunk
+        rows = n_buckets * c_max
+        x2d = stacked.reshape(rows, cfg.chunk).astype(jnp.float32)
+        freqs = jnp.fft.rfft(x2d, axis=-1).astype(jnp.complex64)
+        re = jnp.real(freqs).astype(jnp.float32)
+        im = jnp.imag(freqs).astype(jnp.float32)
+        k = _keep_k(cfg)
+        w = cfft.hermitian_weights(cfg.chunk)
+        mag = _weighted_magnitude(re, im, w)
+
+        if not cfg.quantize:
+            _log_once("pallas compress_stacked: quantize=False -> per-stage "
+                      "threshold+pack kernels (no fused quantization)")
+            tau, _ = ops.threshold_select(mag, k)
+            mvals, idx = ops.pack_threshold(mag, tau, k)
+            valid = mvals != 0
+            re_k = jnp.take_along_axis(re, idx, axis=-1) * valid
+            im_k = jnp.take_along_axis(im, idx, axis=-1) * valid
+            return _stacked_cls()(
+                re_k[:, :k].reshape(n_buckets, c_max, k),
+                im_k[:, :k].reshape(n_buckets, c_max, k),
+                idx[:, :k].astype(jnp.int16).reshape(n_buckets, c_max, k),
+                None, sizes, cfg.chunk)
+
+        # same one-bisection/mid-gap-tau contract as the looped compress,
+        # batched over every bucket's chunks in one threshold-kernel launch
+        tau_k, _ = ops.threshold_select(mag, k)
+        below = jnp.max(jnp.where(mag < tau_k, mag, 0.0), axis=-1,
+                        keepdims=True)
+        tau = 0.5 * (tau_k + below)
+        if cfg.range_mode == "fixed":
+            lo = jnp.full((n_buckets,), cfg.fixed_range[0], jnp.float32)
+            hi = jnp.full((n_buckets,), cfg.fixed_range[1], jnp.float32)
+        else:
+            # per-bucket fit over the kept set; padding rows (all-zero chunks,
+            # tau 0, mask all-true) are excluded so the fit sees exactly the
+            # values the looped per-bucket fit saw
+            mask = ((mag >= tau)
+                    & _valid_chunk_mask(sizes, c_max, cfg.chunk).reshape(
+                        rows, 1))
+            m3 = mask.reshape(n_buckets, c_max, -1)
+            re3 = re.reshape(n_buckets, c_max, -1)
+            im3 = im.reshape(n_buckets, c_max, -1)
+            lo = jnp.minimum(
+                jnp.where(m3, re3, jnp.inf).min(axis=(1, 2)),
+                jnp.where(m3, im3, jnp.inf).min(axis=(1, 2)))
+            hi = jnp.maximum(
+                jnp.where(m3, re3, -jnp.inf).max(axis=(1, 2)),
+                jnp.where(m3, im3, -jnp.inf).max(axis=(1, 2)))
+        quant = _stack_quant(fit_quantizer(lo, hi, _qcfg(cfg)))
+        # per-bucket params -> per-row planes for the single fused launch
+        eps_rows = jnp.repeat(quant.eps.reshape(n_buckets), c_max)
+        p_rows = jnp.repeat(quant.p_codes.reshape(n_buckets), c_max)
+        rec, imc, idx, _tau = fused_compress.fused_compress_pallas(
+            re, im, w, eps_rows, p_rows, tau,
+            k_keep=k, n_bits=cfg.n_bits, m_bits=cfg.m_bits)
+        return _stacked_cls()(
+            rec[:, :k].reshape(n_buckets, c_max, k),
+            imc[:, :k].reshape(n_buckets, c_max, k),
+            idx[:, :k].astype(jnp.int16).reshape(n_buckets, c_max, k),
+            quant, sizes, cfg.chunk)
+
+    def decompress_stacked(self, payload) -> jnp.ndarray:
+        if payload.quant is not None and payload.chunk == KERNEL_CHUNK:
+            n_buckets, c_max, k = payload.re.shape
+            rows = n_buckets * c_max
+            eps_rows = jnp.repeat(payload.quant.eps.reshape(n_buckets), c_max)
+            p_rows = jnp.repeat(
+                payload.quant.p_codes.reshape(n_buckets), c_max)
+            x2d = fused_decompress.fused_decompress_pallas(
+                payload.re.reshape(rows, k), payload.im.reshape(rows, k),
+                payload.idx.reshape(rows, k), eps_rows, p_rows,
+                m_bits=payload.quant.config.m_bits)
+            return x2d.reshape(n_buckets, c_max * KERNEL_CHUNK)
+        if payload.quant is not None:
+            _log_once(
+                f"pallas decompress_stacked: chunked at {payload.chunk} != "
+                f"{KERNEL_CHUNK} -> per-stage (per-row quant_decode kernel + "
+                "shared scatter + XLA irfft)")
+            from repro.kernels import range_quant
+
+            n_buckets, c_max, k = payload.re.shape
+            rows = n_buckets * c_max
+            eps_rows = jnp.repeat(payload.quant.eps.reshape(n_buckets), c_max)
+            p_rows = jnp.repeat(
+                payload.quant.p_codes.reshape(n_buckets), c_max)
+            qcfg = payload.quant.config
+            re = range_quant.decode_pallas(
+                payload.re.reshape(rows, k), eps_rows, p_rows,
+                n_bits=qcfg.n_bits, m_bits=qcfg.m_bits).reshape(
+                    n_buckets, c_max, k)
+            im = range_quant.decode_pallas(
+                payload.im.reshape(rows, k), eps_rows, p_rows,
+                n_bits=qcfg.n_bits, m_bits=qcfg.m_bits).reshape(
+                    n_buckets, c_max, k)
+            payload = _stacked_cls()(re, im, payload.idx, None, payload.sizes,
+                                     payload.chunk, payload.has_im)
+        return super().decompress_stacked(payload)
+
     def decompress(self, payload) -> jnp.ndarray:
         if payload.quant is not None and payload.chunk == KERNEL_CHUNK:
             x2d = fused_decompress.fused_decompress_pallas(
@@ -362,6 +582,9 @@ class AutoBackend(CompressorBackend):
     def compress_buckets(self, cfg, bucket_flats):
         return self._pick(cfg).compress_buckets(cfg, bucket_flats)
 
+    def compress_stacked(self, cfg, stacked, sizes):
+        return self._pick(cfg).compress_stacked(cfg, stacked, sizes)
+
     def decompress(self, payload) -> jnp.ndarray:
         # payloads carry no backend tag (they are backend-portable); route by
         # the same platform gate — the pallas backend degrades per-stage on
@@ -369,6 +592,11 @@ class AutoBackend(CompressorBackend):
         if mosaic_available():
             return self._pallas.decompress(payload)
         return self._reference.decompress(payload)
+
+    def decompress_stacked(self, payload) -> jnp.ndarray:
+        if mosaic_available():
+            return self._pallas.decompress_stacked(payload)
+        return self._reference.decompress_stacked(payload)
 
 
 _BACKENDS = {

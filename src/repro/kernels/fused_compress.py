@@ -35,10 +35,18 @@ _K_TILE = 128
 
 
 def _fused_body(params_ref, re_ref, im_ref, w_ref, tau_in_ref,
-                rec_ref, imc_ref, idx_ref, tau_ref, *, k_keep: int, k_pad: int, m_bits: int):
-    eps = params_ref[0]
-    p_codes = params_ref[1]
-    n_neg = params_ref[2]
+                rec_ref, imc_ref, idx_ref, tau_ref, *, k_keep: int, k_pad: int,
+                m_bits: int, per_row: bool = False):
+    if per_row:
+        # batched-bucket mode (DESIGN.md §14): each row carries its own
+        # quantizer fit — params ride a VMEM plane, one lane-tile wide
+        eps = params_ref[:, 0:1]       # (r, 1), broadcasts against (r, cols)
+        p_codes = params_ref[:, 1:2]
+        n_neg = params_ref[:, 2:3]
+    else:
+        eps = params_ref[0]
+        p_codes = params_ref[1]
+        n_neg = params_ref[2]
     m_scale = float(1 << m_bits)
 
     re = re_ref[...]
@@ -117,23 +125,38 @@ def fused_compress_pallas(
     to fit the quantizer range over the kept set) passes its tau in and the
     in-kernel search is skipped — one bisection per compress, and the mask
     provably matches the fit.  The payload width is padded to the 128-lane
-    tile."""
+    tile.
+
+    Quantizer params may be scalars (one fit for every row — the monolithic
+    path) or vectors of shape ``(rows,)`` (one fit PER ROW — the batched
+    bucket executor maps each bucket's fit onto its chunk rows, so ALL
+    buckets compress in this one launch; DESIGN.md §14).  Vector params ride
+    a VMEM plane instead of SMEM scalars; the in-register math is identical.
+    """
     interpret = resolve_interpret(interpret)
     rows, cols = re2d.shape
     k = ((k_keep + _K_TILE - 1) // _K_TILE) * _K_TILE
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
     n_neg = (1 << n_bits) - 1 - p_codes
-    params = jnp.stack([
-        jnp.asarray(eps, jnp.float32),
-        p_codes.astype(jnp.float32),
-        n_neg.astype(jnp.float32),
-    ])
+    per_row = jnp.ndim(eps) == 1
+    if per_row:
+        # (rows, lane-tile) plane: col 0 = eps, 1 = P, 2 = n_neg, rest pad
+        params = jnp.zeros((rows, _K_TILE), jnp.float32)
+        params = (params.at[:, 0].set(jnp.asarray(eps, jnp.float32))
+                  .at[:, 1].set(p_codes.astype(jnp.float32))
+                  .at[:, 2].set(n_neg.astype(jnp.float32)))
+    else:
+        params = jnp.stack([
+            jnp.asarray(eps, jnp.float32),
+            p_codes.astype(jnp.float32),
+            n_neg.astype(jnp.float32),
+        ])
     data = lambda c: pl.BlockSpec((block_rows, c), lambda i: (i, 0),
                                   memory_space=pltpu.VMEM)
     out_dtype = jnp.uint8 if n_bits <= 8 else jnp.uint16
     in_specs = [
-        pl.BlockSpec(memory_space=pltpu.SMEM),
+        data(_K_TILE) if per_row else pl.BlockSpec(memory_space=pltpu.SMEM),
         data(cols), data(cols),
         pl.BlockSpec((1, cols), lambda i: (0, 0), memory_space=pltpu.VMEM),
     ]
@@ -142,10 +165,11 @@ def fused_compress_pallas(
     if tau is None:
         def body(p_ref, re_ref, im_ref, w_ref, *out_refs):
             _fused_body(p_ref, re_ref, im_ref, w_ref, None, *out_refs,
-                        k_keep=k_keep, k_pad=k, m_bits=m_bits)
+                        k_keep=k_keep, k_pad=k, m_bits=m_bits,
+                        per_row=per_row)
     else:
         body = functools.partial(_fused_body, k_keep=k_keep, k_pad=k,
-                                 m_bits=m_bits)
+                                 m_bits=m_bits, per_row=per_row)
         in_specs.append(data(1))
         args.append(tau.reshape(rows, 1).astype(jnp.float32))
     return pl.pallas_call(

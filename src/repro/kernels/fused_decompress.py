@@ -51,9 +51,14 @@ _NYQUIST = _CHUNK // 2
 
 def _fused_decompress_body(params_ref, rec_ref, imc_ref, idx_ref,
                            fre_ref, fim_ref, wre_ref, wim_ref,
-                           out_ref, *, m_bits: int):
-    eps = params_ref[0]
-    p_codes = params_ref[1]
+                           out_ref, *, m_bits: int, per_row: bool = False):
+    if per_row:
+        # batched-bucket mode: one quantizer fit per row (DESIGN.md §14)
+        eps = params_ref[:, 0:1]  # (r, 1), broadcasts against (r, k) codes
+        p_codes = params_ref[:, 1:2]
+    else:
+        eps = params_ref[0]
+        p_codes = params_ref[1]
     m_scale = float(1 << m_bits)
 
     # 1. dequantize both code planes (stays in VMEM; shared quantizer math)
@@ -104,6 +109,10 @@ def fused_decompress_pallas(
 
     Accepts any payload width; pads to the 128-lane tile internally with
     code-0/index-0 slots (decode-neutral, see module docstring).
+
+    ``eps``/``p_codes`` may be scalars (one fit for every row) or ``(rows,)``
+    vectors (one fit per row — the batched bucket executor decompresses every
+    bucket of a stacked payload in this one launch; DESIGN.md §14).
     """
     interpret = resolve_interpret(interpret)
     rows, k = re_codes.shape
@@ -115,10 +124,16 @@ def fused_decompress_pallas(
         idx = jnp.pad(idx, pad)
     block_rows = min(block_rows, rows)
     grid = (pl.cdiv(rows, block_rows),)
-    params = jnp.stack([
-        jnp.asarray(eps, jnp.float32),
-        p_codes.astype(jnp.float32),
-    ])
+    per_row = jnp.ndim(eps) == 1
+    if per_row:
+        params = jnp.zeros((rows, _K_TILE), jnp.float32)
+        params = (params.at[:, 0].set(jnp.asarray(eps, jnp.float32))
+                  .at[:, 1].set(p_codes.astype(jnp.float32)))
+    else:
+        params = jnp.stack([
+            jnp.asarray(eps, jnp.float32),
+            p_codes.astype(jnp.float32),
+        ])
     fre, fim, wre, wim = (jnp.asarray(c)
                           for c in fft4step._dft_constants(inverse=True))
     const_spec = pl.BlockSpec((fft4step.N1, fft4step.N2), lambda i: (0, 0),
@@ -126,9 +141,11 @@ def fused_decompress_pallas(
     data = lambda c: pl.BlockSpec((block_rows, c), lambda i: (i, 0),
                                   memory_space=pltpu.VMEM)
     return pl.pallas_call(
-        functools.partial(_fused_decompress_body, m_bits=m_bits),
+        functools.partial(_fused_decompress_body, m_bits=m_bits,
+                          per_row=per_row),
         grid=grid,
-        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM)]
+        in_specs=[data(_K_TILE) if per_row
+                  else pl.BlockSpec(memory_space=pltpu.SMEM)]
         + [data(k_pad)] * 3 + [const_spec] * 4,
         out_specs=data(_CHUNK),
         out_shape=jax.ShapeDtypeStruct((rows, _CHUNK), jnp.float32),

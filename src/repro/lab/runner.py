@@ -116,7 +116,7 @@ def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
         kind=spec.reducer, axis="data", theta=spec.theta,
         quantize=spec.quantize, bucket_bytes=spec.bucket_bytes,
         transport=spec.transport, error_feedback=spec.error_feedback,
-        backend=spec.backend,
+        backend=spec.backend, stacked=spec.stacked,
     )
 
 
@@ -139,7 +139,9 @@ def _payload_bits(spec: ExperimentSpec, theta: float, n_elems: int) -> Optional[
     """Modeled wire payload of one exchange at this theta, over the run's
     bucket layout, priced at the TRANSPORT's payload granularity (monolithic
     for allgather, per-bucket quantizers for sequenced/psum — matches what
-    the transport actually ships; ``cost_model.bucketed_payload_bits``)."""
+    the transport actually ships; ``cost_model.bucketed_payload_bits``).
+    Stacked runs bill every bucket at the StackedPayload's padded row width
+    (what the single collective actually moves on ragged layouts)."""
     comp = _compressor_at(spec, theta)
     if comp is None or not hasattr(comp, "wire_bits"):
         return None
@@ -148,8 +150,10 @@ def _payload_bits(spec: ExperimentSpec, theta: float, n_elems: int) -> Optional[
     from repro.comms.bucketing import build_layout
 
     # price per bucket with the SAME layout the reducer builds
-    sizes = build_layout(n_elems, spec.bucket_bytes).sizes()
-    return cost_model.bucketed_payload_bits(comp.wire_bits, sizes, spec.transport)
+    layout = build_layout(n_elems, spec.bucket_bytes)
+    return cost_model.bucketed_payload_bits(
+        comp.wire_bits, layout.sizes(), spec.transport,
+        stacked=spec.stacked, chunk=layout.chunk)
 
 
 def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:

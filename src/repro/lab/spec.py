@@ -46,6 +46,9 @@ class ExperimentSpec:
     seed: int = 0
     quantize: bool = True
     error_feedback: bool = False
+    # batched bucket executor (DESIGN.md §14): one collective per exchange;
+    # False runs the per-bucket loop (bitwise-identical trajectories)
+    stacked: bool = True
     # Assumption 3.1 probe cadence: 1 = every step (smoke default); 0 = off
     probe_every: int = 1
 
@@ -158,6 +161,13 @@ def full_matrix(workers: int = 8) -> List[ExperimentSpec]:
             ExperimentSpec(name=f"{model}_fft_theta0.7_bucketed_ef", theta=0.7,
                            bucket_bytes=4096 * 4, transport="sequenced",
                            error_feedback=True,
+                           schedule={"kind": "constant", "theta": 0.7}, **base),
+            # per-bucket loop vs batched executor: trajectories must be
+            # bitwise-identical (the stacked executor is a pure launch-count
+            # optimization, DESIGN.md §14)
+            ExperimentSpec(name=f"{model}_fft_theta0.7_bucketed_looped",
+                           theta=0.7, bucket_bytes=4096 * 4,
+                           transport="sequenced", stacked=False,
                            schedule={"kind": "constant", "theta": 0.7}, **base),
         ]
     # worker-count scaling point (claims are worker-count independent);

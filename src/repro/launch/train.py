@@ -56,6 +56,10 @@ def main(argv=None):
                     help="compressor stage-execution engine: fused Pallas "
                          "kernels, the jnp reference path, or auto "
                          "(pallas when the platform compiles Mosaic)")
+    ap.add_argument("--no-stacked", action="store_true",
+                    help="disable the batched bucket executor and run the "
+                         "per-bucket compress/collective loop instead "
+                         "(bitwise-identical; one collective per bucket)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -83,6 +87,7 @@ def main(argv=None):
             bucket_bytes=int(args.bucket_mb * (1 << 20)) if args.bucket_mb else None,
             transport=args.transport,
             backend=args.backend,
+            stacked=not args.no_stacked,
         )
     step_cfg = StepConfig(
         mode=args.mode,

@@ -1,0 +1,279 @@
+"""Batched bucket executor (DESIGN.md §14): the stacked path must be a pure
+EXECUTION-SHAPE change — payloads bitwise-equal to the per-bucket loop on
+both engine backends, ragged tails exact through the padded matrix, one
+collective per exchange instead of one per bucket, and a jit cache keyed on
+layout + config so steady state is one executable launch."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import given, st, run_with_devices
+
+from repro.comms import bucketing, cost_model as cm, executor
+from repro.comms.transport import get_transport
+from repro.core.compressor import (
+    FFTCompressor,
+    FFTCompressorConfig,
+    StackedPayload,
+    TimeDomainCompressor,
+)
+
+# 5 full chunks + a ragged tail: with 2-chunk buckets the layout is
+# (2, 2, 1+tail) chunks — the last bucket is ragged AND wider than none,
+# while a 3-chunk bucket target gives (3, 2+tail) — tail bucket NARROWER
+# than the widest.  Both padding regimes are exercised below.
+G = jax.random.normal(jax.random.PRNGKey(42), (5 * 4096 + 517,)) * 0.05
+
+
+def _layout(bucket_chunks):
+    return bucketing.build_layout(
+        G.shape[0], None if bucket_chunks is None else bucket_chunks * 4096 * 4)
+
+
+def _assert_payloads_bitwise(stacked: StackedPayload, looped):
+    assert stacked.n_buckets == len(looped)
+    for b, (sliced, ref) in enumerate(zip(stacked.bucket_payloads(), looped)):
+        for plane in ("re", "im", "idx"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sliced, plane)),
+                np.asarray(getattr(ref, plane)),
+                err_msg=f"bucket {b} plane {plane}")
+        assert (sliced.orig_len, sliced.chunk, sliced.has_im) == (
+            ref.orig_len, ref.chunk, ref.has_im)
+        if ref.quant is None:
+            assert sliced.quant is None
+        else:
+            # per-bucket fit: identical eps AND code split, not just close
+            assert float(sliced.quant.eps) == float(ref.quant.eps), b
+            assert int(sliced.quant.p_codes) == int(ref.quant.p_codes), b
+
+
+@given(theta=st.sampled_from([0.5, 0.7, 0.9]),
+       n_bits=st.sampled_from([4, 8]),
+       bucket_chunks=st.sampled_from([1, 2, 3]))
+def test_stacked_payloads_bitwise_equal_looped(theta, n_bits, bucket_chunks):
+    """The tentpole contract: ONE batched compress of the stacked matrix
+    emits, bucket for bucket, the exact payload bytes of the per-bucket loop
+    — same codes, same indices, same per-bucket quantizer fits — on BOTH
+    engine backends, across theta x n_bits x bucket granularity.
+
+    Both sides run COMPILED (the executor's cached jit vs the loop jitted as
+    one program): that is the only way either path executes in the system —
+    transports and train steps are always jitted — and compiled-vs-eager
+    comparisons of the SAME math already differ by 1 ulp in the quantizer
+    fit's transcendentals, stacked or not."""
+    layout = _layout(bucket_chunks)
+    for backend in ("reference", "pallas"):
+        for quantize in (True, False):
+            comp = FFTCompressor(FFTCompressorConfig(
+                theta=theta, n_bits=n_bits, quantize=quantize, backend=backend))
+            _assert_payloads_bitwise(
+                executor.compress_fn(comp, layout, donate=False)(G),
+                executor.looped_compress_fn(comp, layout)(G))
+
+
+def test_stacked_timedomain_payloads_bitwise_equal_looped():
+    layout = _layout(2)
+    comp = TimeDomainCompressor(FFTCompressorConfig(theta=0.7))
+    sp = executor.compress_fn(comp, layout, donate=False)(G)
+    assert sp.has_im is False and sp.im.shape[-1] == 0
+    looped = jax.jit(lambda flat: [
+        comp.compress(b) for b in bucketing.split_buckets(flat, layout)])(G)
+    _assert_payloads_bitwise(sp, looped)
+
+
+def test_ragged_tail_roundtrips_exactly_through_padded_matrix():
+    """stack -> unstack is the identity, and the padded rows stay inert end
+    to end: a ragged tail bucket decompresses bitwise-identically to its
+    per-bucket decompress, and the padding region of the stacked
+    reconstruction is exactly zero (padding slots decode to code 0)."""
+    for bucket_chunks in (2, 3):
+        layout = _layout(bucket_chunks)
+        assert not layout.uniform  # the property under test needs a ragged tail
+        stacked = bucketing.stack_buckets(G, layout)
+        np.testing.assert_array_equal(
+            np.asarray(bucketing.unstack_buckets(stacked, layout)),
+            np.asarray(G))
+        for backend in ("reference", "pallas"):
+            comp = FFTCompressor(FFTCompressorConfig(theta=0.7, backend=backend))
+            sp = executor.compress_fn(comp, layout, donate=False)(G)
+            recon = np.asarray(jax.jit(comp.decompress_stacked)(sp))
+            looped = jax.jit(lambda flat: [
+                comp.decompress(p) for p in comp.compress_buckets(
+                    bucketing.split_buckets(flat, layout))])(G)
+            for b, (size, ref) in enumerate(zip(layout.sizes(), looped)):
+                np.testing.assert_array_equal(
+                    recon[b, :size], np.asarray(ref),
+                    err_msg=f"{backend} bucket {b}")
+                c_b = layout.chunk_counts()[b]
+                # padding CHUNKS (all-zero rows) reconstruct to exact zeros
+                np.testing.assert_array_equal(
+                    recon[b, c_b * layout.chunk:], 0.0,
+                    err_msg=f"{backend} bucket {b} padding")
+
+
+def test_stacked_exchange_issues_one_collective_per_exchange():
+    """The launch-count claim, asserted structurally: the traced stacked
+    exchange contains a bucket-count-INDEPENDENT number of collectives (one
+    per payload leaf), while the looped exchange scales with n_buckets."""
+    from repro.jaxcompat import make_auto_mesh, shard_map as smap
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_auto_mesh((1,), ("data",))
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+
+    def count(prim, transport_name, layout, stacked):
+        transport = get_transport(transport_name)
+        fn = smap(
+            lambda flat: transport.exchange_flat(flat[0], layout, comp,
+                                                 "data", stacked=stacked),
+            mesh=mesh, in_specs=P("data"), out_specs=P())
+        return str(jax.make_jaxpr(fn)(G[None])).count(prim)
+
+    few, many = _layout(3), _layout(1)  # 2 vs 6 buckets
+    for prim, transport_name in (("all_gather", "sequenced"), ("psum", "psum")):
+        n_few_looped = count(prim, transport_name, few, stacked=False)
+        n_many_looped = count(prim, transport_name, many, stacked=False)
+        n_few = count(prim, transport_name, few, stacked=True)
+        n_many = count(prim, transport_name, many, stacked=True)
+        # looped: one collective per bucket (per payload leaf)
+        assert n_many_looped > n_few_looped, (transport_name, n_few_looped,
+                                              n_many_looped)
+        # stacked: bucket-count independent, strictly fewer launches
+        assert n_few == n_many, (transport_name, n_few, n_many)
+        assert n_many < n_many_looped, (transport_name, n_many, n_many_looped)
+
+
+def test_executor_jit_cache_keyed_on_config_and_layout():
+    executor.clear_cache()
+    layout = _layout(2)
+    comp_a = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    comp_b = FFTCompressor(FFTCompressorConfig(theta=0.7))  # equal config
+    # donate=False throughout: the shared module-level G is reused below (and
+    # by other tests) — a donating executable would consume its buffer on
+    # GPU/TPU backends
+    fn = executor.compress_fn(comp_a, layout, donate=False)
+    assert executor.compress_fn(comp_b, layout, donate=False) is fn  # value-keyed
+    assert executor.cache_size() == 1
+    assert executor.compress_fn(comp_a, _layout(1), donate=False) is not fn
+    assert executor.compress_fn(
+        FFTCompressor(FFTCompressorConfig(theta=0.9)), layout,
+        donate=False) is not fn
+    assert executor.cache_size() == 3
+    # the cached executable produces the contract payloads (compared against
+    # the compiled loop: jit-vs-eager runs of the SAME math differ by 1 ulp
+    # in the quantizer fit's transcendentals, so the parity contract — like
+    # the hot path itself — lives among compiled programs)
+    _assert_payloads_bitwise(fn(G), executor.looped_compress_fn(comp_a, layout)(G))
+    # end-to-end roundtrip matches the looped reconstruction bitwise
+    rt = executor.roundtrip_fn(comp_a, layout, donate=False)(G)
+    looped = jax.jit(lambda flat: jnp.concatenate([
+        comp_a.decompress(p)
+        for p in comp_a.compress_buckets(
+            bucketing.split_buckets(flat, layout))]))(G)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(looped))
+    executor.clear_cache()
+
+
+def test_cost_model_prices_stacked_launch_once():
+    kw = dict(workers=8, transport="psum", n_buckets=16)
+    looped = cm.exchange_time_s(64 << 20, 8e7, cm.NETWORKS["tpu-dcn-host"],
+                                cm.TPU_V5E, **kw)
+    stacked = cm.exchange_time_s(64 << 20, 8e7, cm.NETWORKS["tpu-dcn-host"],
+                                 cm.TPU_V5E, stacked=True, **kw)
+    assert looped.n_collectives == 16 and stacked.n_collectives == 1
+    assert looped.launch_s == pytest.approx(16 * cm.COLLECTIVE_ALPHA_S)
+    assert stacked.launch_s == pytest.approx(cm.COLLECTIVE_ALPHA_S)
+    # same wire volume either way; only launch count and overlap change
+    assert stacked.wire_bits_per_worker == looped.wire_bits_per_worker
+    # when alpha dominates (tiny payloads), stacked must win
+    tiny_l = cm.exchange_time_s(4096, 1e4, cm.NETWORKS["tpu-dcn-host"],
+                                cm.TPU_V5E, workers=8, transport="psum",
+                                n_buckets=64)
+    tiny_s = cm.exchange_time_s(4096, 1e4, cm.NETWORKS["tpu-dcn-host"],
+                                cm.TPU_V5E, workers=8, transport="psum",
+                                n_buckets=64, stacked=True)
+    assert tiny_s.exchange_s < tiny_l.exchange_s
+
+
+def test_cost_model_bills_stacked_padding_rows():
+    """A ragged StackedPayload ships padding rows (uniform planes at the
+    widest bucket's width); the model must bill those bytes.  Uniform
+    layouts bill identically stacked or looped."""
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    ragged = [4096 * 3, 4096 * 3, 4096 * 2]  # padded rows: 3 chunks each
+    looped = cm.bucketed_payload_bits(comp.wire_bits, ragged, "sequenced")
+    stacked = cm.bucketed_payload_bits(comp.wire_bits, ragged, "sequenced",
+                                       stacked=True)
+    assert stacked == 3 * comp.wire_bits(4096 * 3)
+    assert stacked > looped  # the tail bucket's padding chunk is on the wire
+    uniform = [4096 * 2] * 4
+    assert (cm.bucketed_payload_bits(comp.wire_bits, uniform, "psum",
+                                     stacked=True)
+            == cm.bucketed_payload_bits(comp.wire_bits, uniform, "psum"))
+    # monolithic pricing is unaffected by the flag
+    assert (cm.bucketed_payload_bits(comp.wire_bits, ragged, "allgather",
+                                     stacked=True)
+            == comp.wire_bits(sum(ragged)))
+
+
+def test_reducer_stacked_equals_looped_bitwise_multidevice():
+    """End to end on 4 fake workers: flipping ReducerConfig.stacked may not
+    move a single bit of the reduced gradient or the EF residual, for every
+    transport — the executor is a launch-count optimization, never a
+    numerics choice."""
+    out = run_with_devices("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.jaxcompat import make_auto_mesh, shard_map as smap
+from repro.comms import ReducerConfig, make_reducer
+
+mesh = make_auto_mesh((4,), ("data",))
+n = 2 * 4096 + 173
+grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, n)) * 0.1}
+
+def run(cfg):
+    r = make_reducer(cfg)
+    f = smap(lambda g: r(jax.tree.map(lambda x: x[0], g)),
+             mesh=mesh, in_specs=P("data"), out_specs=P())
+    return np.asarray(jax.jit(f)(grads)["w"])
+
+def run_ef(cfg):
+    r = make_reducer(cfg)
+    def step(g, res):
+        out, new_res = r(jax.tree.map(lambda x: x[0], g), res[0])
+        return out["w"], new_res[None]
+    f = smap(step, mesh=mesh, in_specs=(P("data"), P("data")),
+             out_specs=(P(), P("data")))
+    res = jnp.zeros((4, n))
+    outs = []
+    for _ in range(2):
+        got, res = jax.jit(f)(grads, res)
+        outs.append(np.asarray(got))
+    return outs, np.asarray(res)
+
+for kind in ("fft", "timedomain"):
+    for transport in ("allgather", "sequenced", "psum"):
+        base = ReducerConfig(kind=kind, axis="data", theta=0.7, quantize=True,
+                             transport=transport, bucket_bytes=4096 * 4)
+        d = np.abs(run(base) - run(dataclasses.replace(base, stacked=False)))
+        assert d.max() == 0.0, (kind, transport, d.max())
+
+for transport in ("sequenced", "psum"):
+    ef = ReducerConfig(kind="fft", axis="data", theta=0.7, quantize=True,
+                       transport=transport, bucket_bytes=4096 * 4,
+                       error_feedback=True)
+    o_s, r_s = run_ef(ef)
+    o_l, r_l = run_ef(dataclasses.replace(ef, stacked=False))
+    for a, b in zip(o_s, o_l):
+        assert np.array_equal(a, b), transport
+    assert np.array_equal(r_s, r_l), transport
+    assert np.linalg.norm(r_s) > 0.0  # EF is live through the stacked path
+print("STACKED_REDUCER_OK")
+""", devices=4)
+    assert "STACKED_REDUCER_OK" in out
