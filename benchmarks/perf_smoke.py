@@ -12,6 +12,17 @@ the two regressions that would quietly undo the executor's point:
    program's build cost grows with the bucket count, the stacked one's does
    not).
 
+Flake policy: both gates compare WALL-CLOCK ratios, which a loaded CI runner
+can violate without any code regression (a noisy neighbor during exactly one
+timing window).  A failed measurement is therefore RERUN ONCE with fresh
+timings; if the rerun also fails, the gate falls back to DETERMINISTIC
+assertions on modeled/structural quantities that cannot flake — the traced
+looped program must grow with the bucket count while the stacked program
+stays bucket-count independent, and the cost model must price one collective
+launch for the stacked exchange vs one per bucket looped.  Only a
+deterministic violation fails CI; a wall-clock-only miss is reported as
+inconclusive (exit 0 with a warning), never as a red build.
+
 Exits nonzero with a diagnostic on failure; run from the repo root (module
 form, so the ``benchmarks`` package resolves):
 
@@ -25,7 +36,7 @@ import sys
 import jax
 
 from benchmarks.common import time_compiled
-from repro.comms import bucketing, executor
+from repro.comms import bucketing, cost_model as cm, executor
 from repro.core.compressor import FFTCompressor, FFTCompressorConfig
 
 N = 1 << 21  # 2M floats = 8 MB
@@ -34,39 +45,143 @@ STEADY_SLACK = 1.25  # stacked steady <= looped steady * slack (timer noise)
 COMPILE_RATIO = 2.0  # looped compile must exceed stacked compile by this
 
 
+def _measure(comp, layout, g):
+    """One fresh wall-clock measurement of both execution shapes."""
+    executor.clear_cache()  # fresh executables: compile cost must be real
+    looped = executor.looped_compress_fn(comp, layout)
+    looped_compile, looped_steady = time_compiled(looped, g)
+    stacked = executor.compress_fn(comp, layout, donate=False)
+    stacked_compile, stacked_steady = time_compiled(stacked, g)
+    return {
+        "looped_compile": looped_compile,
+        "looped_steady": looped_steady,
+        "stacked_compile": stacked_compile,
+        "stacked_steady": stacked_steady,
+    }
+
+
+def _gate(t: dict, n_buckets: int) -> list:
+    """Wall-clock gates -> list of failure strings (empty == pass)."""
+    failures = []
+    if t["stacked_steady"] > t["looped_steady"] * STEADY_SLACK:
+        failures.append(
+            f"stacked steady-state compress ({t['stacked_steady'] / 1e3:.1f} ms) "
+            f"is slower than the per-bucket loop "
+            f"({t['looped_steady'] / 1e3:.1f} ms) beyond the "
+            f"{STEADY_SLACK}x noise slack")
+    if t["looped_compile"] < t["stacked_compile"] * COMPILE_RATIO:
+        failures.append(
+            f"stacked executable build ({t['stacked_compile'] / 1e3:.1f} ms) is "
+            f"not >={COMPILE_RATIO}x cheaper than the per-bucket loop's "
+            f"({t['looped_compile'] / 1e3:.1f} ms) — the one-launch win "
+            f"regressed (or the runner is loaded; deterministic fallback "
+            f"decides)")
+    del n_buckets
+    return failures
+
+
+def _deterministic_fallback(comp) -> list:
+    """Structural + modeled assertions that cannot flake on a loaded runner.
+
+    * program growth — the traced per-bucket loop's jaxpr gains equations
+      with the bucket count (one subgraph per bucket); the stacked program's
+      equation count is bucket-count independent (the rolled ``lax.map``
+      grid).  This is the property the compile-time gate measures, asserted
+      on the trace instead of the clock.
+    * launch pricing — the cost model prices one collective launch stacked
+      vs one per bucket looped; the stacked exchange must win once alpha
+      dominates.  Pure arithmetic, no timers.
+    """
+    failures = []
+    few = bucketing.build_layout(N, 4 * BUCKET_BYTES)  # 2 buckets
+    many = bucketing.build_layout(N, BUCKET_BYTES)  # 8 buckets
+    g = jax.ShapeDtypeStruct((N,), jax.numpy.float32)
+
+    def eqns(fn):
+        return len(jax.make_jaxpr(fn)(g).eqns)
+
+    def looped(layout):
+        return lambda flat: comp.compress_buckets(
+            bucketing.split_buckets(flat, layout))
+
+    def stacked(layout):
+        return lambda flat: comp.compress_stacked(
+            bucketing.stack_buckets(flat, layout), layout.sizes())
+
+    looped_growth = eqns(looped(many)) - eqns(looped(few))
+    stacked_growth = eqns(stacked(many)) - eqns(stacked(few))
+    if looped_growth <= 0:
+        failures.append(
+            f"looped program no longer grows with the bucket count "
+            f"({looped_growth:+d} eqns from 2 to 8 buckets) — the baseline "
+            f"this gate compares against has changed shape")
+    if stacked_growth != 0:
+        failures.append(
+            f"stacked program is no longer bucket-count independent "
+            f"({stacked_growth:+d} eqns from 2 to 8 buckets) — the "
+            f"one-launch property regressed structurally")
+
+    kw = dict(workers=8, transport="sequenced", n_buckets=many.n_buckets)
+    payload_bits = cm.bucketed_payload_bits(
+        comp.wire_bits, many.sizes(), "sequenced")
+    looped_plan = cm.exchange_time_s(
+        4 * N, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E, **kw)
+    stacked_plan = cm.exchange_time_s(
+        4 * N, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+        stacked=True, **kw)
+    if stacked_plan.n_collectives != 1 or looped_plan.n_collectives != many.n_buckets:
+        failures.append(
+            f"cost model stopped pricing one stacked collective vs one per "
+            f"bucket ({stacked_plan.n_collectives} vs "
+            f"{looped_plan.n_collectives})")
+    if stacked_plan.launch_s >= looped_plan.launch_s:
+        failures.append(
+            "modeled stacked launch latency no longer beats the looped "
+            "exchange's alpha*n_buckets")
+    return failures
+
+
 def main() -> int:
     g = jax.random.normal(jax.random.PRNGKey(0), (N,)) * 0.05
     comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
     layout = bucketing.build_layout(N, BUCKET_BYTES)
     assert layout.n_buckets == 8, layout.n_buckets
 
-    looped = executor.looped_compress_fn(comp, layout)
-    looped_compile, looped_steady = time_compiled(looped, g)
-    stacked = executor.compress_fn(comp, layout, donate=False)
-    stacked_compile, stacked_steady = time_compiled(stacked, g)
+    t = _measure(comp, layout, g)
+    failures = _gate(t, layout.n_buckets)
+    attempt = 1
+    if failures:
+        print("PERF SMOKE: wall-clock gate missed; rerunning once "
+              "(loaded-runner tolerance):")
+        for f in failures:
+            print("  -", f)
+        t = _measure(comp, layout, g)
+        failures = _gate(t, layout.n_buckets)
+        attempt = 2
 
-    print(f"looped : compile {looped_compile / 1e3:9.1f} ms   "
-          f"steady {looped_steady / 1e3:8.1f} ms   "
+    print(f"looped : compile {t['looped_compile'] / 1e3:9.1f} ms   "
+          f"steady {t['looped_steady'] / 1e3:8.1f} ms   "
           f"({layout.n_buckets} buckets)")
-    print(f"stacked: compile {stacked_compile / 1e3:9.1f} ms   "
-          f"steady {stacked_steady / 1e3:8.1f} ms   (1 launch)")
+    print(f"stacked: compile {t['stacked_compile'] / 1e3:9.1f} ms   "
+          f"steady {t['stacked_steady'] / 1e3:8.1f} ms   (1 launch)")
 
-    failures = []
-    if stacked_steady > looped_steady * STEADY_SLACK:
-        failures.append(
-            f"stacked steady-state compress ({stacked_steady / 1e3:.1f} ms) is "
-            f"slower than the per-bucket loop ({looped_steady / 1e3:.1f} ms) "
-            f"beyond the {STEADY_SLACK}x noise slack")
-    if looped_compile < stacked_compile * COMPILE_RATIO:
-        failures.append(
-            f"stacked executable build ({stacked_compile / 1e3:.1f} ms) is not "
-            f">={COMPILE_RATIO}x cheaper than the per-bucket loop's "
-            f"({looped_compile / 1e3:.1f} ms) — the one-launch win regressed")
-    for f in failures:
-        print("PERF SMOKE FAIL:", f)
     if not failures:
-        print("PERF SMOKE OK: stacked executor holds both bounds")
-    return 1 if failures else 0
+        print(f"PERF SMOKE OK: stacked executor holds both bounds "
+              f"(attempt {attempt})")
+        return 0
+
+    print("PERF SMOKE: wall-clock gates failed twice; falling back to "
+          "deterministic modeled/structural assertions:")
+    for f in failures:
+        print("  - (timing)", f)
+    det = _deterministic_fallback(comp)
+    for f in det:
+        print("PERF SMOKE FAIL:", f)
+    if det:
+        return 1
+    print("PERF SMOKE OK (deterministic): program-growth and launch-pricing "
+          "invariants hold; wall-clock miss attributed to runner load")
+    return 0
 
 
 if __name__ == "__main__":

@@ -25,6 +25,15 @@ compress times with the compile/steady-state SPLIT (DESIGN.md §14):
 It also times the composed compress/decompress under EVERY engine backend
 (DESIGN.md §13), writing everything to ``BENCH_throughput.json`` at the repo
 root so the perf trajectory is recorded per PR.
+
+Overlap engine (DESIGN.md §15): every bucketed sweep row additionally prices
+the STREAMED dispatch schedule — readiness-ordered groups interleaved with a
+modeled backward pass — and records ``overlap_efficiency`` (the fraction of
+modeled exchange time hidden behind backprop) plus the auto policy's pick.
+A separate ``schedules`` section runs the policy over model-registry
+profiles (tiny lab model -> deep registry archs), which is where the
+"streamed wins on deep models, stacked on latency-bound ones" claim is
+recorded per PR.  ``tools/check_bench.py`` schema-guards all of it in CI.
 """
 
 from __future__ import annotations
@@ -36,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Row, time_compiled, time_fn
-from repro.comms import bucketing, cost_model as cm, executor
+from repro.comms import bucketing, cost_model as cm, executor, scheduler
 from repro.core import fft as cfft
 from repro.core import packing, sparsify
 from repro.core.compressor import FFTCompressor, FFTCompressorConfig
@@ -107,10 +116,48 @@ def _compress_timings(comp: FFTCompressor, g, layout) -> dict:
     }
 
 
+def _streamed_columns(layout, transport, stacked_bits, m_bytes,
+                      backprop_s, plan_stacked) -> dict:
+    """Overlap-engine columns for one sweep row (DESIGN.md §15): streamed
+    step-visible exchange time, overlap efficiency, and the auto policy's
+    pick.  Monolithic rows (one bucket / allgather) have nothing to stream:
+    overlap efficiency 0, auto resolves stacked.  ``plan_stacked`` is the
+    row's already-priced stacked exchange (same inputs, priced once)."""
+    if layout.n_buckets == 1 or transport == "allgather":
+        return {
+            "model_backprop_ms": backprop_s * 1e3,
+            "model_exchange_ms_streamed": plan_stacked.exchange_s * 1e3,
+            "model_n_collectives_streamed": 1,
+            "overlap_efficiency": 0.0,
+            "auto_schedule": "stacked",
+        }
+    splan = scheduler.build_plan(layout)
+    streamed = cm.streamed_exchange_time_s(
+        m_bytes, stacked_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+        workers=SWEEP_WORKERS, transport=transport,
+        group_fractions=splan.group_fractions(), backprop_s=backprop_s)
+    decision = scheduler.choose_schedule(
+        splan, m_bytes, stacked_bits, workers=SWEEP_WORKERS,
+        transport=transport, backprop_s=backprop_s)
+    return {
+        "model_backprop_ms": backprop_s * 1e3,
+        # step-visible comms time: the part of the exchange sticking out
+        # past the modeled backward pass (the stacked column serializes
+        # after backprop, so its whole exchange_s is step-visible)
+        "model_exchange_ms_streamed": streamed.exposed_s * 1e3,
+        "model_n_collectives_streamed": streamed.n_collectives,
+        "overlap_efficiency": streamed.overlap_efficiency,
+        "auto_schedule": decision.schedule,
+    }
+
+
 def _sweep_rows(comp: FFTCompressor) -> list:
     """Bucket size × transport sweep: modeled wire/time + measured compress."""
     m_bytes = 4 * N
     g = jax.random.normal(jax.random.PRNGKey(1), (N,)) * 0.05
+    # modeled backward pass covering this 64 MB (16M-param) exchange at the
+    # policy's default token count — the streamed columns' overlap cover
+    backprop_s = scheduler.modeled_backprop_s(N, scheduler.DEFAULT_BATCH_TOKENS)
     rows, records = [], []
     for bucket_mb in SWEEP_BUCKET_MB:
         bucket_bytes = None if bucket_mb is None else bucket_mb << 20
@@ -136,6 +183,9 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                 m_bytes, stacked_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
                 workers=SWEEP_WORKERS, transport=transport,
                 n_buckets=layout.n_buckets, stacked=True)
+            streamed_cols = _streamed_columns(
+                layout, transport, stacked_bits, m_bytes, backprop_s,
+                plan_stacked)
             label = "mono" if bucket_mb is None else f"{bucket_mb}mb"
             rows.append(Row(
                 name=f"exchange_sweep_{transport}_{label}",
@@ -146,6 +196,9 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                 model_exchange_ms=round(plan.exchange_s * 1e3, 3),
                 model_exchange_ms_stacked=round(
                     plan_stacked.exchange_s * 1e3, 3),
+                model_exchange_ms_streamed=round(
+                    streamed_cols["model_exchange_ms_streamed"], 3),
+                overlap_eff=round(streamed_cols["overlap_efficiency"], 3),
                 overlap=round(plan.overlap, 3),
             ))
             records.append({
@@ -162,16 +215,81 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                 "model_n_collectives": plan.n_collectives,
                 "model_n_collectives_stacked": plan_stacked.n_collectives,
                 "overlap_fraction": plan.overlap,
+                **streamed_cols,
             })
     backend_rows, backend_records = _backend_rows(comp.config.theta)
     rows.extend(backend_rows)
+    schedule_rows, schedule_records = _schedule_rows(comp)
+    rows.extend(schedule_rows)
     with open(BENCH_JSON, "w") as f:
         json.dump({"benchmark": "throughput_exchange_sweep",
                    "theta": comp.config.theta,
                    "n_bits": comp.config.n_bits,
                    "records": records,
-                   "backends": backend_records}, f, indent=2)
+                   "backends": backend_records,
+                   "schedules": schedule_records}, f, indent=2)
     return rows
+
+
+# auto-policy profiles: (name, n_params, batch_tokens, bucket_bytes).  The
+# tiny profile is the convergence lab's LM at a fine bucket grain
+# (latency-bound: alpha per group dwarfs what its sub-ms backprop could
+# hide); the deep profiles approximate registry archs by parameter count
+# (bandwidth-bound: backprop is long enough to hide the whole exchange).
+# Parameter counts are the policy model's input, not a measurement —
+# recorded in the row for honesty.
+SCHEDULE_PROFILES = (
+    ("lab_lm_tiny", 1 << 17, 512, 64 << 10),
+    ("gemma2_2b_deep", 2_600_000_000, 8192, 16 << 20),
+    ("qwen1_5_110b_deep", 110_000_000_000, 8192, 16 << 20),
+)
+
+
+def _schedule_rows(comp: FFTCompressor) -> tuple:
+    """Auto-policy sweep over model profiles (DESIGN.md §15): stacked vs
+    streamed step-visible exchange time per profile, with the decision and
+    its overlap efficiency recorded — the per-PR trajectory of the
+    "streamed wins on deep models" claim."""
+    rows, records = [], []
+    for name, n_params, batch_tokens, bucket_bytes in SCHEDULE_PROFILES:
+        m_bytes = 4.0 * n_params
+        layout = bucketing.build_layout(n_params, bucket_bytes)
+        plan = scheduler.build_plan(layout)
+        payload_bits = cm.bucketed_payload_bits(
+            comp.wire_bits, layout.sizes(), "sequenced", stacked=True,
+            chunk=layout.chunk)
+        backprop_s = scheduler.modeled_backprop_s(n_params, batch_tokens)
+        decision = scheduler.choose_schedule(
+            plan, m_bytes, payload_bits, workers=SWEEP_WORKERS,
+            transport="sequenced", backprop_s=backprop_s)
+        streamed = cm.streamed_exchange_time_s(
+            m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+            workers=SWEEP_WORKERS, transport="sequenced",
+            group_fractions=plan.group_fractions(), backprop_s=backprop_s)
+        rows.append(Row(
+            name=f"schedule_policy_{name}",
+            auto=decision.schedule,
+            n_buckets=layout.n_buckets,
+            backprop_ms=round(backprop_s * 1e3, 3),
+            stacked_step_ms=round(decision.stacked_step_s * 1e3, 3),
+            streamed_step_ms=round(decision.streamed_step_s * 1e3, 3),
+            overlap_efficiency=round(streamed.overlap_efficiency, 4),
+        ))
+        records.append({
+            "profile": name,
+            "n_params": n_params,
+            "batch_tokens": batch_tokens,
+            "n_buckets": layout.n_buckets,
+            "workers": SWEEP_WORKERS,
+            "transport": "sequenced",
+            "model_backprop_ms": backprop_s * 1e3,
+            "model_step_ms_stacked": decision.stacked_step_s * 1e3,
+            "model_step_ms_streamed": decision.streamed_step_s * 1e3,
+            "model_exchange_ms_exposed_streamed": streamed.exposed_s * 1e3,
+            "overlap_efficiency": streamed.overlap_efficiency,
+            "auto_schedule": decision.schedule,
+        })
+    return rows, records
 
 
 def run() -> list:

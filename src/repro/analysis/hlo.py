@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List
+from typing import Dict
 
 __all__ = ["CollectiveStats", "parse_collectives", "summarize"]
 

@@ -26,7 +26,7 @@ overhead.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 __all__ = ["HW", "RooflineTerms", "compute_roofline", "model_flops"]
 

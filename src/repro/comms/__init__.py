@@ -1,14 +1,24 @@
 """Distributed gradient exchange: dense / compressed / hierarchical reducers
 built on jax.lax collectives under shard_map (no NCCL/MPI emulation).
 
-Three layers (DESIGN.md §8-§9): ``bucketing`` partitions the flat gradient
-into chunk-aligned buckets, ``transport`` exchanges each bucket through a
-pluggable collective strategy, and ``reducers`` composes both under the mesh
-axes (plus error feedback).  ``cost_model`` prices the choices."""
+Four layers (DESIGN.md §8-§9, §15): ``bucketing`` partitions the flat
+gradient into chunk-aligned buckets (with backprop-readiness metadata),
+``transport`` exchanges each bucket through a pluggable collective strategy,
+``scheduler`` decides the dispatch shape (stacked single collective vs
+backprop-interleaved streaming), and ``reducers`` composes it all under the
+mesh axes (plus error feedback).  ``cost_model`` prices the choices."""
 
-from repro.comms import bucketing, collectives, cost_model, executor, transport
+from repro.comms import (
+    bucketing,
+    collectives,
+    cost_model,
+    executor,
+    scheduler,
+    transport,
+)
 from repro.comms.reducers import ReducerConfig, make_reducer
-from repro.comms.transport import get_transport, TRANSPORT_NAMES
+from repro.comms.scheduler import SCHEDULE_NAMES
+from repro.comms.transport import TRANSPORT_NAMES, get_transport
 
 __all__ = [
     "ReducerConfig",
@@ -17,7 +27,9 @@ __all__ = [
     "collectives",
     "cost_model",
     "executor",
+    "scheduler",
     "transport",
     "get_transport",
     "TRANSPORT_NAMES",
+    "SCHEDULE_NAMES",
 ]

@@ -38,6 +38,9 @@ __all__ = [
     "stack_buckets",
     "unstack_buckets",
     "residual_size",
+    "readiness_ranks",
+    "readiness_order",
+    "sub_layout",
 ]
 
 
@@ -181,6 +184,57 @@ def unstack_buckets(stacked: jnp.ndarray, layout: BucketLayout) -> jnp.ndarray:
         return stacked.reshape(-1)
     return jnp.concatenate(
         [stacked[b, :s] for b, s in enumerate(layout.sizes())])
+
+
+# ---------------------------------------------------------------------------
+# readiness metadata (overlap engine, DESIGN.md §15)
+#
+# The flat index space is PARAMETER order: leaf 0 (the embedding / first
+# layer) occupies the lowest offsets, the head the highest.  Backprop visits
+# the model in reverse, so gradients become FINAL from the top of the flat
+# buffer downward — the bucket covering the highest offsets is ready first.
+# Readiness is therefore a pure function of the layout (itself a pure
+# function of the model's parameter order): no per-step bookkeeping, every
+# worker derives the identical schedule.
+# ---------------------------------------------------------------------------
+
+
+def readiness_ranks(layout: BucketLayout) -> Tuple[int, ...]:
+    """Per-bucket readiness rank: rank 0 becomes final FIRST under backprop.
+
+    Reverse-topological in the flat parameter order: bucket ``n_buckets-1``
+    (highest offsets == parameters used last in the forward pass, whose
+    gradients backprop emits first) gets rank 0.
+    """
+    n = layout.n_buckets
+    return tuple(n - 1 - b for b in range(n))
+
+
+def readiness_order(layout: BucketLayout) -> Tuple[int, ...]:
+    """Bucket indices sorted first-ready first — derived from the rank map
+    (for the pure-reversal ranks the permutation is its own inverse, so the
+    two views coincide; deriving keeps them coupled if ranks ever change)."""
+    ranks = readiness_ranks(layout)
+    return tuple(sorted(range(layout.n_buckets), key=ranks.__getitem__))
+
+
+def sub_layout(layout: BucketLayout, lo_bucket: int, hi_bucket: int) -> BucketLayout:
+    """The layout of buckets ``[lo_bucket, hi_bucket)`` over their own flat
+    slice ``[boundaries[lo_bucket], boundaries[hi_bucket])`` re-based to 0.
+
+    A contiguous bucket range is a contiguous flat range (buckets partition
+    the index space in order), so a streamed dispatch group can reuse every
+    flat entry point — stack/unstack, transports, the batched executor — on
+    its slice with an ordinary layout.  Bucket boundaries (and hence payload
+    codes and per-bucket quantizer fits) are EXACTLY the parent layout's.
+    """
+    if not (0 <= lo_bucket < hi_bucket <= layout.n_buckets):
+        raise ValueError(
+            f"bad bucket range [{lo_bucket}, {hi_bucket}) for "
+            f"{layout.n_buckets} buckets")
+    base = layout.boundaries[lo_bucket]
+    bounds = tuple(x - base for x in layout.boundaries[lo_bucket : hi_bucket + 1])
+    return BucketLayout(bounds[-1], bounds, layout.chunk)
 
 
 def residual_size(params) -> int:

@@ -25,6 +25,7 @@ __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "bucket_count", "transport_wire_bits", "overlap_fraction",
            "bucketed_payload_bits", "exchange_time_s", "ExchangePlan",
            "COLLECTIVE_ALPHA_S",
+           "StreamedExchangePlan", "streamed_exchange_time_s",
            "dense_allreduce_bits", "RunWireAccount", "run_wire_account"]
 
 
@@ -261,6 +262,103 @@ def exchange_time_s(
         overlap=ov,
         n_collectives=n_coll,
         launch_s=launch_s,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Streamed (backprop-interleaved) exchange model (DESIGN.md §15)
+#
+# The §11/§14 models price the exchange as a block that runs AFTER the
+# gradient exists.  The overlap engine (comms/scheduler.py) instead streams
+# readiness-ordered dispatch groups DURING the backward pass, so the model
+# gains a timeline: group g's gradients become final at the point of the
+# backward pass that has produced its share of the flat buffer, its
+# exchange starts at max(ready_g, previous group finished), and whatever
+# part of the total exchange work fits before the backward pass ends is
+# HIDDEN.  ``overlap_efficiency`` — the fraction of exchange time hidden
+# behind backprop — is the number the §1 overlap terms existed for; it is
+# recorded per sweep row in BENCH_throughput.json and schema-guarded by
+# tools/check_bench.py.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamedExchangePlan:
+    """A priced streamed exchange: the readiness timeline's verdict."""
+
+    transport: str
+    n_groups: int
+    workers: int
+    wire_bits_per_worker: float
+    exchange_s: float  # total exchange WORK (sum over groups, launches incl.)
+    exposed_s: float  # exchange time sticking out past the backward pass
+    hidden_s: float  # exchange_s - exposed_s
+    overlap_efficiency: float  # hidden_s / exchange_s (0 with no backprop)
+    step_s: float  # max(backprop_s, last group finish): modeled step comms wall
+    n_collectives: int
+    launch_s: float  # alpha * n_collectives
+
+
+def streamed_exchange_time_s(
+    message_bytes: float,
+    payload_bits: float,
+    t_comm: float,
+    thr: Throughputs,
+    *,
+    workers: int,
+    transport: str,
+    group_fractions: "tuple[float, ...]",
+    backprop_s: float,
+    alpha_s: float = COLLECTIVE_ALPHA_S,
+) -> StreamedExchangePlan:
+    """Readiness-timeline model of one streamed exchange.
+
+    ``group_fractions`` are the dispatch groups' element shares in READINESS
+    order (``StreamPlan.group_fractions``): group g's compress+wire cost is
+    its share of the whole message's, and its gradients become final once
+    the backward pass has produced the first g groups' cumulative fraction
+    (gradients stream out of backprop top-of-buffer first, uniformly in the
+    element count — the same proxy the §III-D model uses for compute).
+
+    Timeline: ``start_g = max(ready_g, finish_{g-1})``,
+    ``finish_g = start_g + α + compress_g + wire_g`` (a group's collective
+    serializes behind the previous group's on the same link).  Everything
+    before ``backprop_s`` is hidden; only the tail past it is exposed.
+    """
+    if not group_fractions:
+        raise ValueError("need at least one dispatch group")
+    if abs(sum(group_fractions) - 1.0) > 1e-6:
+        raise ValueError(f"group fractions must sum to 1: {group_fractions}")
+    if backprop_s < 0.0:
+        raise ValueError(f"backprop_s must be >= 0, got {backprop_s}")
+    comp_total = 2.0 * compression_cost_s(message_bytes, thr)
+    wire_total = transport_wire_bits(transport, payload_bits, workers) / 8.0 / t_comm
+    finish = 0.0
+    total_work = 0.0
+    ready = 0.0
+    for frac in group_fractions:
+        ready += frac * backprop_s
+        e_g = alpha_s + frac * (comp_total + wire_total)
+        start = max(ready, finish)
+        finish = start + e_g
+        total_work += e_g
+    exposed = max(0.0, finish - backprop_s)
+    hidden = total_work - exposed
+    # a group can never hide more work than backprop provides cover for
+    hidden = max(0.0, min(hidden, backprop_s))
+    n_groups = len(group_fractions)
+    return StreamedExchangePlan(
+        transport=transport,
+        n_groups=n_groups,
+        workers=workers,
+        wire_bits_per_worker=transport_wire_bits(transport, payload_bits, workers),
+        exchange_s=total_work,
+        exposed_s=exposed,
+        hidden_s=hidden,
+        overlap_efficiency=hidden / total_work if total_work > 0 else 0.0,
+        step_s=max(backprop_s, finish),
+        n_collectives=n_groups,
+        launch_s=alpha_s * n_groups,
     )
 
 

@@ -30,7 +30,8 @@ import jax
 
 from repro.comms import bucketing
 
-__all__ = ["compress_fn", "roundtrip_fn", "looped_compress_fn", "cache_size",
+__all__ = ["compress_fn", "roundtrip_fn", "looped_compress_fn",
+           "streamed_compress_fn", "streamed_roundtrip_fn", "cache_size",
            "clear_cache"]
 
 _CACHE: Dict[Tuple, Callable] = {}
@@ -92,6 +93,71 @@ def looped_compress_fn(comp, layout: bucketing.BucketLayout):
 
         _CACHE[key] = jax.jit(run)
     return _CACHE[key]
+
+
+def streamed_compress_fn(comp, plan):
+    """flat -> list of per-GROUP ``StackedPayload``s, readiness-ordered
+    (overlap engine, DESIGN.md §15).
+
+    One cached jitted executable per dispatch group, launched in readiness
+    order: this is the eager-driver analog of the streamed train-step path —
+    group g's executable consumes only its flat slice, so its (async) device
+    work overlaps the host's dispatch of the remaining groups.  Each group's
+    cache key carries its absolute flat range plus its sub-layout (both pure
+    values), so equal plans share executables group for group.
+
+    Donation is structurally OFF here: every group reads a slice of the SAME
+    flat buffer, so donating it to the first group's executable would
+    invalidate the input for the rest — the one entry point where the §14
+    donation rule cannot apply (documented, not silently skipped).
+    """
+    fns = []
+    for lo, hi, sub in plan.group_slices():
+        # the key must carry the group's ABSOLUTE flat range: two parent
+        # layouts can share an identical sub-layout at different offsets,
+        # and the compiled closure bakes the slice in
+        key = _key(f"streamed_compress[{lo}:{hi}]", comp, sub, False)
+        if key not in _CACHE:
+            def run(flat, lo=lo, hi=hi, sub=sub):
+                return comp.compress_stacked(
+                    bucketing.stack_buckets(flat[lo:hi], sub), sub.sizes())
+
+            _CACHE[key] = jax.jit(run)
+        fns.append(_CACHE[key])
+
+    def dispatch(flat):
+        return [fn(flat) for fn in fns]  # readiness order, async launches
+
+    return dispatch
+
+
+def streamed_roundtrip_fn(comp, plan):
+    """flat -> flat reconstruction through the streamed dispatch shape: one
+    cached jitted roundtrip per readiness group, reassembled in index order
+    (what streamed error feedback accumulates against)."""
+    fns = []
+    for lo, hi, sub in plan.group_slices():
+        key = _key(f"streamed_roundtrip[{lo}:{hi}]", comp, sub, False)
+        if key not in _CACHE:
+            def run(flat, lo=lo, hi=hi, sub=sub):
+                payload = comp.compress_stacked(
+                    bucketing.stack_buckets(flat[lo:hi], sub), sub.sizes())
+                return bucketing.unstack_buckets(
+                    comp.decompress_stacked(payload), sub)
+
+            _CACHE[key] = jax.jit(run)
+        fns.append(_CACHE[key])
+
+    def dispatch(flat):
+        # readiness-order launches; reassembly helper shared with the traced
+        # streamed paths (lazy import: scheduler depends on cost_model, and
+        # this module must stay importable first from comms/__init__)
+        from repro.comms.scheduler import _concat_index_order
+
+        parts = [fn(flat) for fn in fns]
+        return _concat_index_order(parts)
+
+    return dispatch
 
 
 def cache_size() -> int:

@@ -29,8 +29,14 @@ The compressed exchange is a three-layer subsystem (DESIGN.md §8-§9):
    transports compress every bucket in one batched kernel pass and issue ONE
    collective per exchange (a ``StackedPayload``); ``stacked=False`` runs
    the per-bucket loop (one collective per bucket), bitwise-identically.
-3. **this module** — flatten/split, hierarchical axis composition, and the
-   per-bucket error-feedback residual slices.
+3. **schedule** — the overlap engine (``comms.scheduler``, DESIGN.md §15):
+   ``ReducerConfig.schedule`` picks the dispatch shape — ``stacked`` (one
+   collective after backprop), ``streamed`` (readiness-ordered dispatch
+   groups interleaved with the backward pass; bitwise-identical
+   trajectories), or ``auto`` (the cost-model policy, resolved per model).
+4. **this module** — flatten/split, hierarchical axis composition, and the
+   per-bucket (and, streamed, per-readiness-group) error-feedback residual
+   slices.
 
 Leaves smaller than a chunk still ride their bucket — correctness is
 unaffected because unpadding is exact, and because interior bucket boundaries
@@ -53,7 +59,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comms import bucketing
+from repro.comms import bucketing, scheduler
 from repro.comms.transport import TRANSPORT_NAMES, get_transport
 from repro.core import baselines as B
 from repro.core.compressor import (
@@ -125,6 +131,14 @@ class ReducerConfig:
     # batched kernel pass and move one StackedPayload per exchange (bitwise-
     # equal to the loop); False forces the per-bucket loop
     stacked: bool = True
+    # overlap engine (DESIGN.md §15): exchange dispatch schedule.
+    #   stacked  — one collective after backprop (§14)
+    #   streamed — one collective per readiness group, issued while backprop
+    #              still runs (comms/scheduler.py); bitwise-equal trajectories
+    #   auto     — cost-model policy picks per model (scheduler.choose_schedule)
+    schedule: str = "stacked"
+    # streamed dispatch groups (None: one group per bucket — finest grain)
+    stream_groups: Optional[int] = None
 
     def __post_init__(self):
         if self.transport not in TRANSPORT_NAMES:
@@ -136,6 +150,20 @@ class ReducerConfig:
         if self.backend not in BACKEND_NAMES:
             raise ValueError(
                 f"unknown backend {self.backend!r}; expected one of {BACKEND_NAMES}")
+        if self.schedule not in scheduler.SCHEDULE_NAMES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; expected one of "
+                f"{scheduler.SCHEDULE_NAMES}")
+        # the monolithic all-gather fits ONE quantizer over the whole buffer;
+        # streaming it per group would change the fit (different numerics),
+        # so the streamed schedule requires a bucketed transport
+        if self.schedule == "streamed" and self.transport == "allgather":
+            raise ValueError(
+                "schedule='streamed' needs a bucketed transport "
+                "(sequenced|psum); allgather is monolithic by definition")
+        if self.stream_groups is not None and self.stream_groups < 1:
+            raise ValueError(
+                f"stream_groups must be >= 1, got {self.stream_groups}")
 
     def compressor_config(self) -> FFTCompressorConfig:
         return FFTCompressorConfig(
@@ -169,11 +197,17 @@ def _make_compressor(config: ReducerConfig):
     raise ValueError(f"unknown compressed reducer kind {config.kind!r}")
 
 
-def make_reducer(config: ReducerConfig):
+def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None):
     """Returns reduce_fn(grads[, residual]) for use INSIDE shard_map.
 
     Without error feedback: reduce_fn(grads) -> mean_grads.
     With error feedback:    reduce_fn(grads, residual) -> (mean_grads, residual').
+
+    ``batch_tokens`` is the auto-schedule policy's backprop-length hint
+    (DESIGN.md §15): the train-step builder passes the real per-step token
+    count so ``schedule='auto'`` prices the actual backward pass; direct
+    callers may omit it (a documented default keeps the decision
+    deterministic).
     """
     if config.kind == "dense":
         if config.error_feedback:
@@ -194,10 +228,30 @@ def make_reducer(config: ReducerConfig):
     comp = _make_compressor(config)
     transport = get_transport(config.transport)
 
+    def _schedule_for(total: int) -> str:
+        """Concrete dispatch schedule for a flat buffer of this size —
+        resolved at trace time (the flat length is static inside jit), so
+        an auto decision is one pure host-side computation per trace."""
+        resolved, _ = scheduler.resolve_schedule(config, total, batch_tokens)
+        return resolved
+
     def _exchange_flat(flat: jnp.ndarray, axis: str) -> jnp.ndarray:
         layout = config.layout_for(flat.shape[0])
+        if _schedule_for(flat.shape[0]) == "streamed" and layout.n_buckets > 1:
+            plan = scheduler.build_plan(layout, config.stream_groups)
+            return scheduler.exchange_streamed(
+                transport, flat, plan, comp, axis, stacked=config.stacked)
         return transport.exchange_flat(flat, layout, comp, axis,
                                        stacked=config.stacked)
+
+    def _local_roundtrip_flat(flat: jnp.ndarray) -> jnp.ndarray:
+        layout = config.layout_for(flat.shape[0])
+        if _schedule_for(flat.shape[0]) == "streamed" and layout.n_buckets > 1:
+            plan = scheduler.build_plan(layout, config.stream_groups)
+            return scheduler.local_roundtrip_streamed(
+                transport, flat, plan, comp, stacked=config.stacked)
+        return transport.local_roundtrip_flat(
+            flat, layout, comp, stacked=config.stacked)
 
     def compressed_reduce(grads):
         flat, shapes, treedef = flatten_tree(grads)
@@ -223,17 +277,14 @@ def make_reducer(config: ReducerConfig):
         flat, shapes, treedef = flatten_tree(grads)
         if config.kind == "hierarchical" and config.axis:
             flat = _mean_over(flat, config.axis)
-        layout = config.layout_for(flat.shape[0])
         corrected = flat + residual_flat
-        # residual at the transport's own compression granularity: what THIS
-        # transport dropped on this worker (per-bucket quantizer fits and
-        # all) — the flat entry point slices buckets with the same layout
-        local_hat = transport.local_roundtrip_flat(
-            corrected, layout, comp, stacked=config.stacked)
+        # residual at the exchange's own compression AND dispatch granularity:
+        # what THIS schedule's transport dropped on this worker (per-bucket
+        # quantizer fits, per-readiness-group slices and all)
+        local_hat = _local_roundtrip_flat(corrected)
         new_residual = corrected - local_hat
         axis = config.pod_axis if config.kind == "hierarchical" else config.axis
-        mean_flat = transport.exchange_flat(
-            corrected, layout, comp, axis, stacked=config.stacked)
+        mean_flat = _exchange_flat(corrected, axis)
         if config.kind != "hierarchical" and config.pod_axis is not None:
             mean_flat = _mean_over(mean_flat, config.pod_axis)
         return unflatten_tree(mean_flat, shapes, treedef), new_residual

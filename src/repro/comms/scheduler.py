@@ -1,0 +1,319 @@
+"""Overlap engine: backprop-interleaved bucket streaming (DESIGN.md §15).
+
+The stacked executor (§14) minimizes LAUNCHES: one collective per exchange,
+issued after the whole gradient exists.  This module implements the other
+half of the paper's communication strategy — HIDING the exchange behind the
+backward pass.  Buckets are assigned reverse-topological readiness ranks
+from the model's parameter order (``bucketing.readiness_ranks``: the flat
+buffer is parameter order, backprop finalizes gradients from the top down),
+grouped into dispatch groups, and each group's compress+exchange is issued
+as soon as its gradients are final — first-ready group first.  Inside a
+jitted train step each group's subgraph depends ONLY on its own slice of
+the flat gradient, which is exactly the dependence structure XLA's
+latency-hiding scheduler needs to start group g's collective while earlier
+(lower-offset) gradients are still being computed.
+
+Three schedules, selected by ``ReducerConfig.schedule``:
+
+* ``stacked``  — §14 behavior: one collective after backprop (latency-
+  optimal: pays collective-launch α once; nothing overlaps).
+* ``streamed`` — this module: one collective per readiness group, issued in
+  readiness order (bandwidth-optimal: exchange time hides behind backprop;
+  pays α per group).
+* ``auto``     — the policy layer: picks per model between the two by the
+  cost model (``choose_schedule``) — stacked for latency-bound exchanges
+  (small/shallow models, tiny payloads where α·n dominates), streamed for
+  bandwidth-bound ones (deep models whose backprop is long enough to hide
+  the wire time).
+
+Bitwise contract: a streamed exchange produces EXACTLY the stacked
+exchange's bytes and means.  Groups are contiguous bucket ranges, so every
+bucket keeps its own boundaries, its own quantizer fit, and its own payload
+slots; the worker mean folds in the same left-to-right order per group
+(``transport._ordered_worker_mean`` is elementwise, so grouping cannot
+reorder it); and error-feedback residuals are sliced per readiness group
+with the same boundaries that split the gradient.  ``streamed`` vs
+``stacked`` may not move one bit of the training trajectory
+(tests/test_scheduler.py) — the schedule is a dispatch-shape choice, never
+a numerics choice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.comms import bucketing, cost_model
+from repro.comms.bucketing import BucketLayout
+
+__all__ = [
+    "SCHEDULE_NAMES",
+    "StreamPlan",
+    "build_plan",
+    "exchange_streamed",
+    "local_roundtrip_streamed",
+    "ScheduleDecision",
+    "choose_schedule",
+    "modeled_backprop_s",
+    "resolve_schedule",
+    "BACKPROP_FLOPS_PER_S",
+    "DEFAULT_BATCH_TOKENS",
+]
+
+SCHEDULE_NAMES = ("stacked", "streamed", "auto")
+
+# Modeled backward-pass compute rate for the policy layer.  Matches the
+# MXU-class figure the §III-D throughput model uses for the 4-step FFT
+# (cost_model.TPU_V5E derivation): ~50 TFLOP/s sustained f32.
+BACKPROP_FLOPS_PER_S = 50e12
+
+# Batch-token assumption when the caller cannot supply one (a reducer built
+# outside a train step).  The decision rule is a pure function of its
+# inputs, so a documented default keeps `auto` deterministic everywhere.
+DEFAULT_BATCH_TOKENS = 4096
+
+
+# ---------------------------------------------------------------------------
+# stream plan: readiness-ordered dispatch groups
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Dispatch schedule of one streamed exchange.
+
+    ``groups`` are contiguous bucket ranges ``[lo, hi)`` listed in READINESS
+    order — ``groups[0]`` covers the highest flat offsets (first gradients
+    out of backprop) and is dispatched first.  A frozen/hashable pure value
+    (like ``BucketLayout``): equal layouts yield equal plans, so the
+    executor's jit cache can key on it and every worker derives the same
+    schedule from the same pytree.
+    """
+
+    layout: BucketLayout
+    groups: Tuple[Tuple[int, int], ...]
+
+    def __post_init__(self):
+        n = self.layout.n_buckets
+        flat = [b for lo, hi in sorted(self.groups) for b in range(lo, hi)]
+        if flat != list(range(n)):
+            raise ValueError(
+                f"groups {self.groups} do not partition {n} buckets")
+        for (lo_a, _), (lo_b, _) in zip(self.groups, self.groups[1:]):
+            if lo_b >= lo_a:
+                raise ValueError(
+                    f"groups must be readiness-ordered (descending offsets): "
+                    f"{self.groups}")
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    def group_slices(self):
+        """Per group, readiness-ordered: (flat_lo, flat_hi, sub_layout)."""
+        out = []
+        for lo_b, hi_b in self.groups:
+            out.append((self.layout.boundaries[lo_b],
+                        self.layout.boundaries[hi_b],
+                        bucketing.sub_layout(self.layout, lo_b, hi_b)))
+        return out
+
+    def group_fractions(self) -> Tuple[float, ...]:
+        """Element fraction of each group (readiness order) — the cost
+        model's proxy for both its share of the payload and the point in
+        the backward pass at which it becomes final."""
+        total = float(self.layout.total)
+        return tuple(
+            (self.layout.boundaries[hi] - self.layout.boundaries[lo]) / total
+            for lo, hi in self.groups)
+
+
+def build_plan(layout: BucketLayout, n_groups: Optional[int] = None) -> StreamPlan:
+    """Readiness-ordered dispatch groups over a bucket layout.
+
+    ``n_groups=None`` streams one group per bucket (finest dispatch grain —
+    maximum overlap surface, α per bucket).  Smaller counts merge ADJACENT
+    buckets (groups must stay contiguous in the flat space) as evenly as
+    possible, assigned from the top of the flat buffer down so every group
+    is a readiness run.  Pure function of ``(layout, n_groups)``.
+    """
+    n = layout.n_buckets
+    g = n if n_groups is None else max(1, min(int(n_groups), n))
+    # split [0, n) into g contiguous ranges, sizes as even as possible, then
+    # list them top-down (readiness order)
+    base, extra = divmod(n, g)
+    ranges = []
+    lo = 0
+    for i in range(g):
+        hi = lo + base + (1 if i < extra else 0)
+        ranges.append((lo, hi))
+        lo = hi
+    return StreamPlan(layout, tuple(reversed(ranges)))
+
+
+# ---------------------------------------------------------------------------
+# streamed execution: one collective per readiness group, issued in order
+# ---------------------------------------------------------------------------
+
+
+def _concat_index_order(parts):
+    """Readiness-ordered group results -> flat buffer in index order.
+
+    ``StreamPlan`` groups are strictly descending in the flat space
+    (validated in ``__post_init__``), so index order is exactly the reverse
+    of dispatch order."""
+    ordered = list(reversed(parts))
+    return ordered[0] if len(ordered) == 1 else jnp.concatenate(ordered)
+
+
+def exchange_streamed(transport, flat: jnp.ndarray, plan: StreamPlan, comp,
+                      axis: str, stacked: bool = True) -> jnp.ndarray:
+    """Whole-gradient exchange as ``n_groups`` independent collectives.
+
+    Each group's compress+collective consumes ONLY its flat slice, and
+    groups are traced first-ready first, so inside a jitted step the
+    dispatch boundary of group g is the availability of its gradients —
+    nothing serializes it behind lower-offset backprop.  Each group rides
+    the transport's stacked path (one collective per group); payload codes
+    and the per-worker mean fold are bucket-local, so the result is
+    bitwise the stacked exchange's.
+    """
+    parts = [
+        transport.exchange_flat(flat[lo:hi], sub, comp, axis, stacked=stacked)
+        for lo, hi, sub in plan.group_slices()  # traced in readiness order
+    ]
+    return _concat_index_order(parts)
+
+
+def local_roundtrip_streamed(transport, flat: jnp.ndarray, plan: StreamPlan,
+                             comp, stacked: bool = True) -> jnp.ndarray:
+    """Compress->decompress reconstruction at the streamed dispatch
+    granularity (what error feedback accumulates against).  Residual slices
+    follow the SAME readiness groups as the exchange, so each group's
+    residual accumulates exactly what its own dispatch dropped — and since
+    groups preserve bucket boundaries, the values equal the stacked path's
+    bitwise."""
+    parts = [
+        transport.local_roundtrip_flat(flat[lo:hi], sub, comp, stacked=stacked)
+        for lo, hi, sub in plan.group_slices()
+    ]
+    return _concat_index_order(parts)
+
+
+# ---------------------------------------------------------------------------
+# policy layer: stacked vs streamed, decided by the cost model
+# ---------------------------------------------------------------------------
+
+
+def modeled_backprop_s(n_params: int, batch_tokens: int,
+                       flops_per_s: float = BACKPROP_FLOPS_PER_S) -> float:
+    """Modeled backward-pass wall time: ~4 FLOPs per parameter per token
+    (forward is 2·N·T, backward twice that — the standard 6·N·T split)."""
+    return 4.0 * float(n_params) * float(batch_tokens) / flops_per_s
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleDecision:
+    """The auto policy's verdict plus the numbers behind it."""
+
+    schedule: str  # "stacked" | "streamed"
+    stacked_step_s: float  # backprop + serialized stacked exchange
+    streamed_step_s: float  # max(backprop, streamed finish)
+    overlap_efficiency: float  # streamed: fraction of exchange time hidden
+    n_groups: int
+    backprop_s: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def choose_schedule(
+    plan: StreamPlan,
+    message_bytes: float,
+    payload_bits: float,
+    *,
+    workers: int,
+    transport: str,
+    backprop_s: float,
+    t_comm: float = cost_model.NETWORKS["tpu-dcn-host"],
+    thr: cost_model.Throughputs = cost_model.TPU_V5E,
+    alpha_s: float = cost_model.COLLECTIVE_ALPHA_S,
+) -> ScheduleDecision:
+    """The auto decision rule (DESIGN.md §15).
+
+    stacked step time  = backprop + (α·1 + compress + wire), serialized;
+    streamed step time = the readiness-timeline finish
+    (``cost_model.streamed_exchange_time_s``).  Streamed wins when the
+    backward pass is long enough to hide the per-group exchanges despite
+    paying α per group — deep, bandwidth-bound models; stacked wins when
+    α·n_groups dominates — small, latency-bound models.
+    """
+    stacked_plan = cost_model.exchange_time_s(
+        message_bytes, payload_bits, t_comm, thr, workers=workers,
+        transport=transport, n_buckets=plan.layout.n_buckets, stacked=True,
+        alpha_s=alpha_s)
+    streamed_plan = cost_model.streamed_exchange_time_s(
+        message_bytes, payload_bits, t_comm, thr, workers=workers,
+        transport=transport, group_fractions=plan.group_fractions(),
+        backprop_s=backprop_s, alpha_s=alpha_s)
+    stacked_step = backprop_s + stacked_plan.exchange_s
+    streamed_step = streamed_plan.step_s
+    return ScheduleDecision(
+        schedule="streamed" if streamed_step < stacked_step else "stacked",
+        stacked_step_s=stacked_step,
+        streamed_step_s=streamed_step,
+        overlap_efficiency=streamed_plan.overlap_efficiency,
+        n_groups=plan.n_groups,
+        backprop_s=backprop_s,
+    )
+
+
+def resolve_schedule(
+    config,
+    n_elems: int,
+    batch_tokens: Optional[int] = None,
+) -> Tuple[str, Optional[ScheduleDecision]]:
+    """Resolve a ``ReducerConfig.schedule`` to a concrete name.
+
+    Pure function of ``(config, n_elems, batch_tokens)`` — the same spec
+    always yields the same schedule (tests/test_scheduler.py).  Non-auto
+    schedules pass through; ``auto`` runs :func:`choose_schedule` with the
+    config's own layout/payload model.  The monolithic cases — allgather
+    transport or a single-bucket layout — have nothing to stream and
+    resolve to ``stacked``.
+    """
+    if config.schedule != "auto":
+        return config.schedule, None
+    layout = config.layout_for(n_elems)
+    if config.transport == "allgather" or layout.n_buckets == 1:
+        return "stacked", None
+    comp = _wire_model_compressor(config)
+    if comp is None:  # no wire model (dense): nothing to decide
+        return "stacked", None
+    payload_bits = cost_model.bucketed_payload_bits(
+        comp.wire_bits, layout.sizes(), config.transport,
+        stacked=True, chunk=layout.chunk)
+    plan = build_plan(layout, config.stream_groups)
+    tokens = DEFAULT_BATCH_TOKENS if batch_tokens is None else batch_tokens
+    # worker count is a mesh property unknown to the config; price the
+    # 2-worker lower bound — gather-transport wire only grows with P, which
+    # favors streaming, so P=2 is the conservative case for stacked
+    decision = choose_schedule(
+        plan, 4.0 * n_elems, payload_bits,
+        workers=2, transport=config.transport,
+        backprop_s=modeled_backprop_s(n_elems, tokens))
+    return decision.schedule, decision
+
+
+def _wire_model_compressor(config):
+    """A compressor instance for wire_bits pricing (None when kind has no
+    static wire model, e.g. dense)."""
+    from repro.comms.reducers import _make_compressor
+
+    try:
+        comp = _make_compressor(config)
+    except ValueError:
+        return None
+    return comp if hasattr(comp, "wire_bits") else None

@@ -9,7 +9,7 @@ iterates the (arch x shape x mesh) grid.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 __all__ = ["ArchConfig", "ShapeConfig", "SHAPES"]
 

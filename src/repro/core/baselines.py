@@ -16,7 +16,6 @@ methods take an optional PRNG key (deterministic rounding if omitted).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

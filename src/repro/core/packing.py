@@ -18,7 +18,7 @@ Both round-trip exactly (tests/test_packing.py, hypothesis sweeps).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

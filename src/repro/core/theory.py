@@ -14,7 +14,7 @@ theta itself, which is what Assumption 3.1 asks for.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 

@@ -16,7 +16,7 @@ its rows from the global batch by (host_index, num_hosts).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

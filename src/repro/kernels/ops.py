@@ -15,9 +15,7 @@ The wrappers also own the static-shape hygiene the kernels demand:
 
 from __future__ import annotations
 
-import functools
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import fft4step, pack, range_quant, topk_threshold

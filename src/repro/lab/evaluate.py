@@ -17,6 +17,10 @@ model family (paper sections in brackets):
   ``backend_atol`` (codes are bitwise-equal across backends and the exchange
   path shares the spectral decompress, DESIGN.md §13 — backend choice is a
   pure execution-engine knob, never a numerics knob).
+* ``streamed_identical`` — runs differing ONLY in exchange dispatch schedule
+  (stacked single collective vs backprop-interleaved readiness streaming,
+  DESIGN.md §15) trace BITWISE-identical loss curves (atol 0 on CPU: the
+  schedule reorders dispatch, never arithmetic).
 * ``assumption31`` — every probed step's live-gradient reconstruction obeys
   ``err <= 1.05*sqrt(theta) + quant_margin`` (the provable sqrt(theta) energy
   bound of DESIGN.md §6 plus the range-quantizer's relative-error envelope),
@@ -58,6 +62,7 @@ class Tolerances:
     degrade_margin: float = 0.01  # theta=0.9 must sit >=1% above theta=0.7
     transport_atol: float = 1e-5  # pointwise curve divergence across transports
     backend_atol: float = 1e-4  # pointwise curve divergence across engine backends
+    schedule_atol: float = 0.0  # streamed vs stacked dispatch: bitwise on CPU
     a31_sqrt_slack: float = 1.05  # on the provable sqrt(theta) energy bound
     a31_quant_margin: float = 0.15  # additive headroom for the 8-bit quantizer
     a31_norm_tol: float = 0.08  # ||v_hat||/||v|| headroom under quantization
@@ -156,6 +161,19 @@ def evaluate_results(
                   f"backend: {div:.2e} (atol {tol.backend_atol})")
         else:
             claim(f"{m}:backends_identical", False, "missing pallas-backend run")
+
+        b_stacked = _named(runs, f"{m}_fft_theta0.7_bucketed_stacked")
+        b_streamed = _named(runs, f"{m}_fft_theta0.7_bucketed_streamed")
+        if b_stacked and b_streamed:
+            close, div = curves_close(
+                _loss_curve(b_stacked), _loss_curve(b_streamed),
+                tol.schedule_atol)
+            claim(f"{m}:streamed_identical", close,
+                  f"max pointwise loss divergence stacked vs streamed "
+                  f"dispatch: {div:.2e} (atol {tol.schedule_atol}, bitwise)")
+        else:
+            claim(f"{m}:streamed_identical", False,
+                  "missing bucketed stacked/streamed run pair")
 
         # -- Assumption 3.1 on live gradients (all probed compressed runs) --
         probed = worst_a31 = 0

@@ -9,7 +9,7 @@ and the next ``## `` section header is regenerated in place.
 from __future__ import annotations
 
 import json
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 __all__ = ["write_json", "render_markdown", "splice_experiments_md", "MARKER"]
 

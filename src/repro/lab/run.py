@@ -14,7 +14,6 @@ claim fails, which is what gates the CI ``lab-smoke`` job.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import re
 import sys

@@ -117,6 +117,7 @@ def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
         quantize=spec.quantize, bucket_bytes=spec.bucket_bytes,
         transport=spec.transport, error_feedback=spec.error_feedback,
         backend=spec.backend, stacked=spec.stacked,
+        schedule=spec.exchange_schedule,
     )
 
 

@@ -49,6 +49,10 @@ class ExperimentSpec:
     # batched bucket executor (DESIGN.md §14): one collective per exchange;
     # False runs the per-bucket loop (bitwise-identical trajectories)
     stacked: bool = True
+    # overlap engine (DESIGN.md §15): exchange dispatch schedule —
+    # stacked | streamed | auto.  Named exchange_schedule because `schedule`
+    # is this spec's THETA schedule; maps to ReducerConfig.schedule.
+    exchange_schedule: str = "stacked"
     # Assumption 3.1 probe cadence: 1 = every step (smoke default); 0 = off
     probe_every: int = 1
 
@@ -60,6 +64,15 @@ class ExperimentSpec:
         # import the engine; tests/test_engine.py asserts the lists agree
         if self.backend not in ("reference", "pallas", "auto"):
             raise ValueError(f"unknown backend {self.backend!r}")
+        # mirrors comms/scheduler.SCHEDULE_NAMES (same jax-free constraint;
+        # tests/test_scheduler.py asserts the lists agree)
+        if self.exchange_schedule not in ("stacked", "streamed", "auto"):
+            raise ValueError(
+                f"unknown exchange_schedule {self.exchange_schedule!r}")
+        if self.exchange_schedule == "streamed" and self.transport == "allgather":
+            raise ValueError(
+                "exchange_schedule='streamed' needs a bucketed transport "
+                "(sequenced|psum)")
         if self.reducer is None and self.schedule is not None:
             raise ValueError("dense baseline cannot take a theta schedule")
         if self.workers < 1 or self.global_batch % self.workers:
@@ -135,6 +148,17 @@ def _matrix(model: str, *, workers: int, steps: int, seed: int = 0) -> List[Expe
     specs.append(ExperimentSpec(
         name=f"{model}_fft_theta0.7_pallas", theta=0.7, backend="pallas",
         schedule={"kind": "constant", "theta": 0.7}, **base))
+    # exchange-schedule sweep axis (overlap engine, DESIGN.md §15): the same
+    # bucketed config dispatched stacked (one collective after backprop) vs
+    # streamed (readiness-ordered groups interleaved with backprop).  The
+    # evaluator's streamed_identical claim requires the two curves BITWISE
+    # equal — the schedule is a dispatch-shape choice, never a numerics one.
+    for exchange_schedule in ("stacked", "streamed"):
+        specs.append(ExperimentSpec(
+            name=f"{model}_fft_theta0.7_bucketed_{exchange_schedule}",
+            theta=0.7, transport="sequenced", bucket_bytes=4096 * 4,
+            exchange_schedule=exchange_schedule,
+            schedule={"kind": "constant", "theta": 0.7}, **base))
     return specs
 
 
@@ -168,6 +192,13 @@ def full_matrix(workers: int = 8) -> List[ExperimentSpec]:
             ExperimentSpec(name=f"{model}_fft_theta0.7_bucketed_looped",
                            theta=0.7, bucket_bytes=4096 * 4,
                            transport="sequenced", stacked=False,
+                           schedule={"kind": "constant", "theta": 0.7}, **base),
+            # auto policy row (DESIGN.md §15): the cost model picks the
+            # dispatch schedule; whatever it picks, the trajectory equals the
+            # smoke matrix's stacked/streamed bucketed rows
+            ExperimentSpec(name=f"{model}_fft_theta0.7_bucketed_auto",
+                           theta=0.7, bucket_bytes=4096 * 4,
+                           transport="sequenced", exchange_schedule="auto",
                            schedule={"kind": "constant", "theta": 0.7}, **base),
         ]
     # worker-count scaling point (claims are worker-count independent);

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis import hlo as hlo_mod
-from repro.analysis.roofline import V5E, compute_roofline
+from repro.analysis.roofline import compute_roofline
 from repro.comms.reducers import ReducerConfig
 from repro.configs.base import SHAPES
 from repro.launch.mesh import make_production_mesh

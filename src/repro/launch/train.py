@@ -60,6 +60,15 @@ def main(argv=None):
                     help="disable the batched bucket executor and run the "
                          "per-bucket compress/collective loop instead "
                          "(bitwise-identical; one collective per bucket)")
+    ap.add_argument("--schedule", default="stacked",
+                    choices=["stacked", "streamed", "auto"],
+                    help="exchange dispatch schedule (DESIGN.md §15): one "
+                         "collective after backprop (stacked), readiness-"
+                         "ordered bucket streaming interleaved with backprop "
+                         "(streamed; bitwise-identical trajectory), or the "
+                         "cost-model policy (auto)")
+    ap.add_argument("--stream-groups", type=int, default=None,
+                    help="streamed dispatch groups (default: one per bucket)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -88,6 +97,8 @@ def main(argv=None):
             transport=args.transport,
             backend=args.backend,
             stacked=not args.no_stacked,
+            schedule=args.schedule,
+            stream_groups=args.stream_groups,
         )
     step_cfg = StepConfig(
         mode=args.mode,

@@ -20,7 +20,6 @@ Features demanded by the assigned archs:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ reductions (norms, softmax, loss) run in f32.
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

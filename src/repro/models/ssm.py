@@ -18,7 +18,6 @@ with left padding; its (width-1)-deep tail is the conv cache at decode.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ Activation sharding constraints are applied when a :class:`MeshCtx` is given
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

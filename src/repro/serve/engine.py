@@ -14,7 +14,7 @@ use.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional
 
-import jax
 
 from repro.core.schedules import quantize_theta
 from repro.train import checkpoint as ckpt

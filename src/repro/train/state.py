@@ -8,7 +8,7 @@ checkpoints stay layout-independent (rebucketing a restored run is free)."""
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -26,11 +26,24 @@ step — bounded recompiles, see core/schedules.py).
 The compressed exchange is bucketed and transport-pluggable (DESIGN.md
 §8-§9): ``ReducerConfig.bucket_bytes`` splits the flat gradient into
 chunk-aligned buckets and ``ReducerConfig.transport`` picks the collective
-(``allgather`` | ``sequenced`` | ``psum``).  The ``sequenced`` transport
-issues one independent collective per bucket, which is what lets XLA's
-latency-hiding scheduler overlap bucket exchanges with the remaining
-backprop/optimizer compute inside this step.  The EF residual stays ONE flat
+(``allgather`` | ``sequenced`` | ``psum``).  The EF residual stays ONE flat
 vector in the state; per-bucket slices are taken inside the reducer.
+
+Overlap engine (DESIGN.md §15): ``ReducerConfig.schedule`` picks the
+exchange's dispatch shape.  With ``streamed`` the step is STAGED — the
+reducer splits the exchange into readiness-ordered dispatch groups
+(``comms/scheduler.py``), and because each group's compress+collective
+subgraph consumes only its own slice of the flat gradient (the slice
+backprop finalizes first), XLA's latency-hiding scheduler is free to issue
+group g's collective while lower-offset gradients are still being computed
+— communication hides behind the backward pass instead of serializing after
+it.  With ``auto`` this builder resolves the schedule ONCE per step build
+via the cost-model policy (`scheduler.resolve_schedule`), using the model's
+true parameter count and the batch's token count; the resolved decision is
+exposed on the returned step object (``.schedule_decision``).  Either way
+the trajectory is bitwise-identical to the stacked path, and jit-level
+buffer donation of the state is preserved (the streamed groups read gradient
+slices, not donated state buffers).
 """
 
 from __future__ import annotations
@@ -39,12 +52,12 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import jaxcompat as compat
+from repro.comms import scheduler
 from repro.comms.reducers import ReducerConfig, make_reducer
-from repro.models.sharding import spec_tree_to_pspecs
+from repro.models.sharding import count_params, spec_tree_to_pspecs
 from repro.models.transformer import MeshCtx
 from repro.optim import OptConfig, apply_updates, clip_by_global_norm
 
@@ -175,7 +188,17 @@ def build_train_step(
 
     # ---- compressed modes: partial-manual shard_map ------------------------
     assert step_cfg.reducer is not None, "compressed modes need a ReducerConfig"
-    reducer = make_reducer(step_cfg.reducer)
+    # overlap-engine auto policy (DESIGN.md §15): resolve the dispatch
+    # schedule HERE, where the model's parameter count and the batch's token
+    # count are known — the reducer then traces a concrete schedule
+    reducer_cfg = step_cfg.reducer
+    batch_tokens = _batch_tokens(batch_tree)
+    schedule_decision = None
+    if reducer_cfg.schedule == "auto":
+        resolved, schedule_decision = scheduler.resolve_schedule(
+            reducer_cfg, count_params(model.spec()), batch_tokens)
+        reducer_cfg = dataclasses.replace(reducer_cfg, schedule=resolved)
+    reducer = make_reducer(reducer_cfg, batch_tokens=batch_tokens)
     manual = step_cfg.manual_axes
     ef = step_cfg.reducer.error_feedback
 
@@ -235,8 +258,14 @@ def build_train_step(
     jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
     batch_sh_manual = NamedSharding(mesh, P(manual))
 
+    _resolved_cfg, _decision = reducer_cfg, schedule_decision
+
     class _Step:
         batch_sharding = batch_sh_manual
+        # the concrete config the step traced (auto resolved) and, when the
+        # auto policy ran, the cost-model numbers behind its verdict
+        reducer_config = _resolved_cfg
+        schedule_decision = _decision
 
         def __call__(self, state, batch):
             with compat.set_mesh(mesh):
@@ -247,3 +276,21 @@ def build_train_step(
                 return jitted.lower(state, batch)
 
     return _Step()
+
+
+def _batch_tokens(batch_tree) -> Optional[int]:
+    """Per-step token count for the auto-schedule policy's backprop model.
+
+    Sequence batches ('tokens' of shape (B, S)) yield B·S; otherwise the
+    leading (batch) dimension of the first leaf.  A policy hint, not an
+    accounting quantity."""
+    if isinstance(batch_tree, dict) and "tokens" in batch_tree:
+        shape = batch_tree["tokens"].shape
+        n = 1
+        for s in shape:
+            n *= int(s)
+        return n
+    leaves = jax.tree_util.tree_leaves(batch_tree)
+    if not leaves:
+        return None
+    return int(leaves[0].shape[0]) if leaves[0].shape else None

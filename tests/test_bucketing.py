@@ -1,6 +1,5 @@
 """Bucket layout invariants + the transport cost-model acceptance bound."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,111 @@
+"""Unit tests for tools/check_bench.py — the BENCH_throughput.json schema
+guard that used to be an untestable heredoc inside .github/workflows/ci.yml.
+Covers: the committed artifact passes, every column family is individually
+guarded (dropping one is caught), and the overlap-engine acceptance
+evidence (a streamed deep-model row with overlap_efficiency > 0) is
+enforced."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_bench  # noqa: E402
+
+
+@pytest.fixture()
+def committed():
+    with open(os.path.join(REPO, "BENCH_throughput.json")) as f:
+        return json.load(f)
+
+
+def test_committed_artifact_passes(committed):
+    assert check_bench.check(committed) == []
+
+
+def test_missing_sections_reported(committed):
+    for section in ("backends", "records", "schedules"):
+        data = copy.deepcopy(committed)
+        del data[section]
+        errors = check_bench.check(data)
+        assert any(section in e for e in errors), (section, errors)
+
+
+def test_dropped_backend_record_caught(committed):
+    data = copy.deepcopy(committed)
+    data["backends"] = [r for r in data["backends"]
+                       if r["backend"] != "pallas"]
+    assert any("pallas" in e for e in check_bench.check(data))
+    data = copy.deepcopy(committed)
+    del data["backends"][0]["compress_us"]
+    assert any("compress_us" in e for e in check_bench.check(data))
+
+
+def test_every_record_column_guarded(committed):
+    for key in check_bench.RECORD_KEYS:
+        data = copy.deepcopy(committed)
+        del data["records"][0][key]
+        errors = check_bench.check(data)
+        assert any(key in e for e in errors), key
+
+
+def test_stacked_must_price_one_collective(committed):
+    data = copy.deepcopy(committed)
+    data["records"][0]["model_n_collectives_stacked"] = 4
+    assert any("ONE" in e for e in check_bench.check(data))
+
+
+def test_streamable_rows_require_positive_overlap(committed):
+    data = copy.deepcopy(committed)
+    bucketed = [r for r in data["records"] if r["n_buckets"] > 1
+                and r["transport"] != "allgather"]
+    assert bucketed, "sweep lost its bucketed rows"
+    bucketed[0]["overlap_efficiency"] = 0.0
+    assert any("overlap_efficiency" in e for e in check_bench.check(data))
+    # monolithic rows must stay at exactly zero
+    data = copy.deepcopy(committed)
+    mono = [r for r in data["records"] if r["n_buckets"] == 1]
+    assert mono, "sweep lost its monolithic rows"
+    mono[0]["overlap_efficiency"] = 0.5
+    assert any("monolithic" in e for e in check_bench.check(data))
+
+
+def test_schedules_require_a_streamed_deep_model_row(committed):
+    data = copy.deepcopy(committed)
+    for r in data["schedules"]:
+        r["auto_schedule"] = "stacked"
+    errors = check_bench.check(data)
+    assert any("deep-model" in e or "streamed" in e for e in errors)
+    data = copy.deepcopy(committed)
+    for r in data["schedules"]:
+        r["overlap_efficiency"] = 0.0
+    assert check_bench.check(data)
+    for key in check_bench.SCHEDULE_KEYS:
+        data = copy.deepcopy(committed)
+        del data["schedules"][0][key]
+        assert any(key in e for e in check_bench.check(data)), key
+
+
+def test_bad_auto_schedule_value(committed):
+    data = copy.deepcopy(committed)
+    data["records"][0]["auto_schedule"] = "auto"  # must be RESOLVED
+    assert any("auto_schedule" in e for e in check_bench.check(data))
+
+
+def test_main_cli(tmp_path, committed, capsys):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(committed))
+    assert check_bench.main([str(good)]) == 0
+    assert "schema ok" in capsys.readouterr().out
+    bad = copy.deepcopy(committed)
+    del bad["records"][0]["overlap_efficiency"]
+    bad_path = tmp_path / "bad.json"
+    bad_path.write_text(json.dumps(bad))
+    assert check_bench.main([str(bad_path)]) == 1
+    assert "BENCH SCHEMA FAIL" in capsys.readouterr().out
+    assert check_bench.main([str(tmp_path / "missing.json")]) == 1

@@ -11,7 +11,6 @@ from repro.core.compressor import (
     FFTCompressorConfig,
     NoCompression,
     QuantOnlyCompressor,
-    TimeDomainCompressor,
 )
 
 G = jax.random.normal(jax.random.PRNGKey(0), (100_000,)) * 0.05

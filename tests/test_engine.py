@@ -14,7 +14,6 @@ Contract under test:
   payload, and the transports exchange pallas payloads unchanged.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -38,6 +38,9 @@ def test_smoke_matrix_covers_the_claims():
         for transport in ("sequenced", "psum"):
             assert f"{model}_fft_theta0.7_{transport}" in names
         assert f"{model}_fft_theta0.7_pallas" in names  # backend sweep axis
+        # exchange-schedule sweep axis (DESIGN.md §15)
+        assert f"{model}_fft_theta0.7_bucketed_stacked" in names
+        assert f"{model}_fft_theta0.7_bucketed_streamed" in names
 
 
 def test_spec_rejects_bad_configs():
@@ -56,7 +59,9 @@ def test_spec_rejects_bad_configs():
 
 
 def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
-              err_ratio=0.5, lr=3e-3, backend="reference"):
+              err_ratio=0.5, lr=3e-3, backend="reference",
+              transport="allgather", bucket_bytes=None,
+              exchange_schedule="stacked"):
     records = []
     for i, loss in enumerate(losses):
         rec = {"step": i, "loss": loss, "grad_sq": max(loss - 1.0, 0.05),
@@ -70,7 +75,9 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
     return {
         "spec": ExperimentSpec(
             name=name, model=model, reducer=reducer, theta=theta,
-            schedule=schedule, lr=lr, backend=backend).to_dict(),
+            schedule=schedule, lr=lr, backend=backend, transport=transport,
+            bucket_bytes=bucket_bytes,
+            exchange_schedule=exchange_schedule).to_dict(),
         "records": records,
         "n_elems": 10000,
         "entropy_floor": 1.0,
@@ -80,11 +87,12 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
 
 
 def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
-                 pallas_losses=None):
+                 pallas_losses=None, streamed_losses=None):
     dense = [4.0, 3.0, 2.5, 2.2, 2.0, 2.0]
     t07 = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02]
     trio = trio_losses if trio_losses is not None else t07
     pallas = pallas_losses if pallas_losses is not None else t07
+    streamed = streamed_losses if streamed_losses is not None else t07
     sched = {"kind": "constant", "theta": 0.7}
     return {
         "lm_dense": _fake_run("lm_dense", None, dense),
@@ -102,13 +110,20 @@ def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
         "lm_fft_theta0.7_pallas": _fake_run(
             "lm_fft_theta0.7_pallas", "fft", pallas, schedule=sched,
             backend="pallas"),
+        "lm_fft_theta0.7_bucketed_stacked": _fake_run(
+            "lm_fft_theta0.7_bucketed_stacked", "fft", t07, schedule=sched,
+            transport="sequenced", bucket_bytes=4096 * 4),
+        "lm_fft_theta0.7_bucketed_streamed": _fake_run(
+            "lm_fft_theta0.7_bucketed_streamed", "fft", streamed,
+            schedule=sched, transport="sequenced", bucket_bytes=4096 * 4,
+            exchange_schedule="streamed"),
     }
 
 
 def test_evaluator_passes_a_good_matrix():
     claims, ok = evaluate_results(_matrix_runs(), Tolerances(final_tail=2))
     assert ok, [c.to_dict() for c in claims if not c.passed]
-    assert len(claims) == 7  # one model family x seven claims
+    assert len(claims) == 8  # one model family x eight claims
 
 
 def test_evaluator_catches_theta09_not_degrading():
@@ -142,6 +157,20 @@ def test_evaluator_catches_backend_divergence():
     del runs["lm_fft_theta0.7_pallas"]
     claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
     assert "lm:backends_identical" in {c.name for c in claims if not c.passed}
+
+
+def test_evaluator_catches_streamed_divergence():
+    """The streamed_identical claim is BITWISE (atol 0): any divergence —
+    even one well inside float noise — must fail it, and a missing row pair
+    is a failure, not a silent skip."""
+    streamed = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 + 1e-7]
+    claims, ok = evaluate_results(
+        _matrix_runs(streamed_losses=streamed), Tolerances(final_tail=2))
+    assert "lm:streamed_identical" in {c.name for c in claims if not c.passed}
+    runs = _matrix_runs()
+    del runs["lm_fft_theta0.7_bucketed_streamed"]
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
+    assert "lm:streamed_identical" in {c.name for c in claims if not c.passed}
 
 
 def test_evaluator_catches_assumption31_violation():
@@ -264,7 +293,8 @@ def test_lab_smoke_matrix_end_to_end(tmp_path):
     for model in ("lm", "convnet"):
         for claim in ("theta0.7_matches_dense", "theta0.9_degrades",
                       "mixed_recovers", "transports_identical",
-                      "backends_identical", "assumption31", "thm34_envelope"):
+                      "backends_identical", "streamed_identical",
+                      "assumption31", "thm34_envelope"):
             assert f"{model}:{claim}" in claim_names, claim_names
     # per-step evidence is in the artifact (curves + probes + wire model)
     run = data["runs"]["lm_fft_theta0.7"]

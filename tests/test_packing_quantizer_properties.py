@@ -3,9 +3,7 @@ edge cases the PR-1 bucketed exchange exposed: all-zero buckets,
 single-element buckets, denormal-range values, and the int16 index ceiling
 (chunk = 32767)."""
 
-import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Reducer correctness across 8 fake devices (subprocess; see helpers.py)."""
 
-import pytest
 
 from helpers import run_with_devices
 

@@ -1,0 +1,446 @@
+"""Overlap engine (DESIGN.md §15): readiness schedules must be pure
+functions of the model's parameter order (same spec -> same bucket
+schedule), streamed dispatch must be bitwise-equal to the stacked path —
+payloads, exchanged means, EF residuals, and whole training trajectories,
+across theta x n_bits x ragged bucket tails on fake devices — and the auto
+policy must pick streamed exactly when the cost model says the backward
+pass can hide the exchange."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from helpers import given, st, run_with_devices
+
+from repro.comms import bucketing, cost_model as cm, executor, scheduler
+from repro.comms.reducers import ReducerConfig
+from repro.comms.transport import get_transport
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+
+# 5 full chunks + ragged tail (same fixture family as test_stacked.py):
+# 2-chunk buckets -> ragged tail NOT the widest; 3-chunk -> tail narrower.
+G = jax.random.normal(jax.random.PRNGKey(7), (5 * 4096 + 517,)) * 0.05
+
+
+def _layout(bucket_chunks):
+    return bucketing.build_layout(
+        G.shape[0], None if bucket_chunks is None else bucket_chunks * 4096 * 4)
+
+
+# ---------------------------------------------------------------------------
+# readiness metadata
+# ---------------------------------------------------------------------------
+
+
+def test_readiness_is_reverse_topological():
+    layout = _layout(2)  # 3 buckets
+    assert bucketing.readiness_ranks(layout) == (2, 1, 0)
+    assert bucketing.readiness_order(layout) == (2, 1, 0)
+    mono = _layout(None)
+    assert bucketing.readiness_ranks(mono) == (0,)
+
+
+def test_sub_layout_preserves_boundaries():
+    layout = _layout(2)
+    sub = bucketing.sub_layout(layout, 1, 3)
+    assert sub.total == layout.total - layout.boundaries[1]
+    assert sub.sizes() == layout.sizes()[1:3]
+    assert sub.chunk == layout.chunk
+    # single-bucket slice
+    one = bucketing.sub_layout(layout, 0, 1)
+    assert one.sizes() == (layout.sizes()[0],)
+    with pytest.raises(ValueError):
+        bucketing.sub_layout(layout, 2, 2)
+    with pytest.raises(ValueError):
+        bucketing.sub_layout(layout, 0, 99)
+
+
+def test_plan_is_pure_function_of_registry_entry():
+    """Same model registry entry -> same parameter count -> same layout ->
+    same readiness schedule, across independent derivations (the
+    every-worker-derives-the-same-schedule contract)."""
+    from repro.models import registry
+    from repro.models.sharding import count_params
+
+    def derive():
+        cfg = registry.get_config("gemma2_2b").reduced()
+        n = count_params(registry.build(cfg).spec())
+        layout = bucketing.build_layout(n, 64 << 10)
+        return scheduler.build_plan(layout), bucketing.readiness_ranks(layout)
+
+    (plan_a, ranks_a), (plan_b, ranks_b) = derive(), derive()
+    assert plan_a == plan_b  # frozen dataclass value equality
+    assert ranks_a == ranks_b
+    assert hash(plan_a) == hash(plan_b)  # executor cache key stability
+
+
+def test_build_plan_groups_partition_in_readiness_order():
+    layout = _layout(1)  # 6 buckets
+    plan = scheduler.build_plan(layout)
+    assert plan.n_groups == layout.n_buckets  # default: one group per bucket
+    assert plan.groups[0] == (layout.n_buckets - 1, layout.n_buckets)
+    for g in (1, 2, 3, 4, 6, 99):
+        p = scheduler.build_plan(layout, g)
+        assert p.n_groups == min(g, layout.n_buckets)
+        covered = sorted(b for lo, hi in p.groups for b in range(lo, hi))
+        assert covered == list(range(layout.n_buckets))
+        # readiness order: strictly descending bucket ranges
+        los = [lo for lo, _ in p.groups]
+        assert los == sorted(los, reverse=True)
+        assert abs(sum(p.group_fractions()) - 1.0) < 1e-12
+    with pytest.raises(ValueError):
+        scheduler.StreamPlan(layout, ((0, 2), (2, layout.n_buckets)))  # wrong order
+    with pytest.raises(ValueError):
+        scheduler.StreamPlan(layout, ((3, layout.n_buckets),))  # not a partition
+
+
+def test_schedule_names_mirror_lab_spec():
+    """lab/spec.py must stay jax-free so it mirrors SCHEDULE_NAMES as a
+    literal — this is the drift guard (same pattern as the backend list)."""
+    from repro.lab.spec import ExperimentSpec
+
+    for name in scheduler.SCHEDULE_NAMES:
+        if name == "streamed":
+            ExperimentSpec(name="x", exchange_schedule=name,
+                           transport="sequenced")
+        else:
+            ExperimentSpec(name="x", exchange_schedule=name)
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", exchange_schedule="nope")
+    with pytest.raises(ValueError):  # streamed needs a bucketed transport
+        ExperimentSpec(name="x", exchange_schedule="streamed",
+                       transport="allgather")
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: streamed dispatch == stacked execution
+# ---------------------------------------------------------------------------
+
+
+@given(theta=st.sampled_from([0.5, 0.7, 0.9]),
+       n_bits=st.sampled_from([4, 8]),
+       bucket_chunks=st.sampled_from([1, 2, 3]))
+def test_streamed_payloads_bitwise_equal_stacked(theta, n_bits, bucket_chunks):
+    """Group-wise compression emits, bucket for bucket, the exact payloads
+    of the one-shot stacked compress — same codes, indices, per-bucket
+    quantizer fits — across theta x n_bits x ragged bucket tails."""
+    layout = _layout(bucket_chunks)
+    comp = FFTCompressor(FFTCompressorConfig(theta=theta, n_bits=n_bits))
+    plan = scheduler.build_plan(layout)
+    stacked = executor.compress_fn(comp, layout, donate=False)(G)
+    group_payloads = executor.streamed_compress_fn(comp, plan)(G)
+    # groups are readiness-ordered; reassemble per-bucket payloads in index
+    # order and compare against the stacked slicer
+    per_bucket = {}
+    for (lo_b, hi_b), sp in zip(plan.groups, group_payloads):
+        for i, p in enumerate(sp.bucket_payloads()):
+            per_bucket[lo_b + i] = p
+    ref = stacked.bucket_payloads()
+    assert sorted(per_bucket) == list(range(len(ref)))
+    for b, expect in enumerate(ref):
+        got = per_bucket[b]
+        for plane in ("re", "im", "idx"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, plane)),
+                np.asarray(getattr(expect, plane)),
+                err_msg=f"bucket {b} plane {plane}")
+        if expect.quant is not None:
+            assert float(got.quant.eps) == float(expect.quant.eps), b
+            assert int(got.quant.p_codes) == int(expect.quant.p_codes), b
+    # the streamed roundtrip reconstruction is bitwise the stacked one's
+    np.testing.assert_array_equal(
+        np.asarray(executor.streamed_roundtrip_fn(comp, plan)(G)),
+        np.asarray(executor.roundtrip_fn(comp, layout, donate=False)(G)))
+
+
+def test_streamed_exchange_collective_count_scales_with_groups():
+    """Structural claim on the traced jaxpr: the streamed exchange issues
+    one collective set PER READINESS GROUP (the dispatch boundaries the
+    overlap engine exists for), vs the stacked path's single set."""
+    from repro.jaxcompat import make_auto_mesh, shard_map as smap
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_auto_mesh((1,), ("data",))
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    layout = _layout(1)  # 6 buckets
+
+    def count(prim, transport_name, plan):
+        transport = get_transport(transport_name)
+        if plan is None:
+            fn = lambda flat: transport.exchange_flat(
+                flat[0], layout, comp, "data")
+        else:
+            fn = lambda flat: scheduler.exchange_streamed(
+                transport, flat[0], plan, comp, "data")
+        wrapped = smap(fn, mesh=mesh, in_specs=P("data"), out_specs=P())
+        return str(jax.make_jaxpr(wrapped)(G[None])).count(prim)
+
+    for prim, tname in (("all_gather", "sequenced"), ("psum", "psum")):
+        base = count(prim, tname, None)
+        per_bucket = count(prim, tname, scheduler.build_plan(layout))
+        two_groups = count(prim, tname, scheduler.build_plan(layout, 2))
+        assert base >= 1
+        assert per_bucket == layout.n_buckets * base, (tname, per_bucket, base)
+        assert two_groups == 2 * base, (tname, two_groups, base)
+
+
+def test_streamed_trajectories_bitwise_equal_multidevice():
+    """End to end on 4 fake workers: flipping ReducerConfig.schedule between
+    stacked and streamed may not move one bit of the reduced gradient, the
+    EF residual, or a short training trajectory — for both bucketed
+    transports, theta x n_bits, ragged tails, and coarse/fine group counts."""
+    out = run_with_devices("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.jaxcompat import make_auto_mesh, shard_map as smap
+from repro.comms import ReducerConfig, make_reducer
+
+mesh = make_auto_mesh((4,), ("data",))
+n = 3 * 4096 + 517  # ragged tail
+grads = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, n)) * 0.1}
+
+def run(cfg):
+    r = make_reducer(cfg)
+    f = smap(lambda g: r(jax.tree.map(lambda x: x[0], g)),
+             mesh=mesh, in_specs=P("data"), out_specs=P())
+    return np.asarray(jax.jit(f)(grads)["w"])
+
+for transport in ("sequenced", "psum"):
+    for theta in (0.7, 0.9):
+        for n_bits in (4, 8):
+            base = ReducerConfig(kind="fft", axis="data", theta=theta,
+                                 n_bits=n_bits, transport=transport,
+                                 bucket_bytes=4096 * 4)
+            a = run(base)
+            for groups in (None, 2):
+                b = run(dataclasses.replace(base, schedule="streamed",
+                                            stream_groups=groups))
+                assert np.array_equal(a, b), (transport, theta, n_bits, groups)
+
+# EF trajectory: two chained reductions, residual threaded
+def run_ef(cfg):
+    r = make_reducer(cfg)
+    def stepfn(g, res):
+        out, new_res = r(jax.tree.map(lambda x: x[0], g), res[0])
+        return out["w"], new_res[None]
+    f = smap(stepfn, mesh=mesh, in_specs=(P("data"), P("data")),
+             out_specs=(P(), P("data")))
+    res = jnp.zeros((4, n))
+    outs = []
+    for _ in range(2):
+        got, res = jax.jit(f)(grads, res)
+        outs.append(np.asarray(got))
+    return outs, np.asarray(res)
+
+ef = ReducerConfig(kind="fft", axis="data", theta=0.7, transport="sequenced",
+                   bucket_bytes=4096 * 4, error_feedback=True)
+o_s, r_s = run_ef(dataclasses.replace(ef, schedule="streamed"))
+o_k, r_k = run_ef(ef)
+for a, b in zip(o_s, o_k):
+    assert np.array_equal(a, b)
+assert np.array_equal(r_s, r_k)
+assert np.linalg.norm(r_s) > 0.0  # EF live through the streamed path
+
+# whole TRAIN trajectory through build_train_step on 2 workers: 3 steps of
+# the lab LM, stacked vs streamed states bitwise-identical
+from repro.data import SyntheticConfig, SyntheticStream
+from repro.lab.runner import _LM_ARCH
+from repro.models.transformer import LM
+from repro.optim import OptConfig
+from repro.train import init_state
+from repro.train.step import StepConfig, build_train_step
+from repro import jaxcompat as compat
+
+mesh2 = make_auto_mesh((2,), ("data",))
+model = LM(_LM_ARCH)
+stream = SyntheticStream(SyntheticConfig(
+    vocab_size=_LM_ARCH.vocab_size, seq_len=16, global_batch=4, seed=3))
+opt = OptConfig(kind="adamw", lr=3e-3)
+
+def train(schedule):
+    rc = ReducerConfig(kind="fft", axis="data", theta=0.7,
+                       transport="sequenced", bucket_bytes=4096 * 4,
+                       schedule=schedule)
+    step_cfg = StepConfig(mode="compressed_dp", reducer=rc)
+    state = init_state(jax.random.PRNGKey(0), model, opt)
+    step = build_train_step(model, opt, step_cfg, mesh2, stream.batch_at(0),
+                            donate=False)
+    with compat.set_mesh(mesh2):
+        for i in range(3):
+            state, metrics = step(state, stream.batch_at(i))
+    return state
+
+s_stacked = train("stacked")
+s_streamed = train("streamed")
+for (pa, a), (pb, b) in zip(
+        jax.tree_util.tree_leaves_with_path(s_stacked),
+        jax.tree_util.tree_leaves_with_path(s_streamed)):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), pa
+print("STREAMED_TRAJECTORY_OK")
+""", devices=4)
+    assert "STREAMED_TRAJECTORY_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# policy layer + cost model
+# ---------------------------------------------------------------------------
+
+
+def test_reducer_config_schedule_validation():
+    ReducerConfig(kind="fft", schedule="streamed", transport="sequenced")
+    with pytest.raises(ValueError):
+        ReducerConfig(kind="fft", schedule="nope")
+    with pytest.raises(ValueError):
+        ReducerConfig(kind="fft", schedule="streamed", transport="allgather")
+    with pytest.raises(ValueError):
+        ReducerConfig(kind="fft", schedule="streamed", transport="sequenced",
+                      stream_groups=0)
+
+
+def test_choose_schedule_deep_streams_shallow_stacks():
+    layout = bucketing.build_layout(1 << 24, 1 << 20)  # 16 buckets
+    plan = scheduler.build_plan(layout)
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    bits = cm.bucketed_payload_bits(comp.wire_bits, layout.sizes(),
+                                    "sequenced", stacked=True,
+                                    chunk=layout.chunk)
+    deep = scheduler.choose_schedule(
+        plan, 4.0 * (1 << 24), bits, workers=8, transport="sequenced",
+        backprop_s=scheduler.modeled_backprop_s(1 << 24, 1 << 20))
+    assert deep.schedule == "streamed"
+    assert 0.0 < deep.overlap_efficiency < 1.0
+    assert deep.streamed_step_s < deep.stacked_step_s
+    # no backward pass to hide behind -> alpha-per-group only hurts
+    shallow = scheduler.choose_schedule(
+        plan, 4.0 * (1 << 24), bits, workers=8, transport="sequenced",
+        backprop_s=0.0)
+    assert shallow.schedule == "stacked"
+    assert shallow.overlap_efficiency == 0.0
+
+
+def test_resolve_schedule_pure_and_monolithic_falls_back():
+    cfg = ReducerConfig(kind="fft", transport="sequenced",
+                        bucket_bytes=1 << 20, schedule="auto")
+    a = scheduler.resolve_schedule(cfg, 1 << 24, 1 << 20)
+    b = scheduler.resolve_schedule(cfg, 1 << 24, 1 << 20)
+    assert a[0] == b[0] == "streamed"
+    assert a[1].to_dict() == b[1].to_dict()  # same spec -> same decision
+    # tiny model: latency-bound -> stacked
+    assert scheduler.resolve_schedule(cfg, 3 * 4096, 64)[0] == "stacked"
+    # monolithic layout: nothing to stream
+    mono = dataclasses.replace(cfg, bucket_bytes=None)
+    assert scheduler.resolve_schedule(mono, 1 << 24, 1 << 20)[0] == "stacked"
+    # allgather: monolithic by definition
+    ag = dataclasses.replace(cfg, transport="allgather")
+    assert scheduler.resolve_schedule(ag, 1 << 24, 1 << 20)[0] == "stacked"
+    # non-auto passes through untouched
+    for fixed in ("stacked", "streamed"):
+        f = dataclasses.replace(cfg, schedule=fixed)
+        assert scheduler.resolve_schedule(f, 1 << 24, 1 << 20) == (fixed, None)
+
+
+def test_train_step_resolves_auto_schedule():
+    """The step builder resolves `auto` with the model's real parameter
+    count and exposes the decision (train/step.py)."""
+    from repro.data import SyntheticConfig, SyntheticStream
+    from repro.lab.runner import _LM_ARCH
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.transformer import LM
+    from repro.optim import OptConfig
+    from repro.train.step import StepConfig, build_train_step
+
+    model = LM(_LM_ARCH)
+    stream = SyntheticStream(SyntheticConfig(
+        vocab_size=_LM_ARCH.vocab_size, seq_len=16, global_batch=2, seed=0))
+    rc = ReducerConfig(kind="fft", axis="data", transport="sequenced",
+                       bucket_bytes=4096 * 4, schedule="auto")
+    step = build_train_step(
+        model, OptConfig(kind="adamw", lr=1e-3),
+        StepConfig(mode="compressed_dp", reducer=rc),
+        make_local_mesh((1,), ("data",)), stream.batch_at(0), donate=False)
+    assert step.reducer_config.schedule in ("stacked", "streamed")
+    assert step.schedule_decision is not None
+    assert step.schedule_decision.schedule == step.reducer_config.schedule
+
+
+def test_streamed_cost_model_invariants():
+    kw = dict(workers=8, transport="sequenced")
+    fr = (0.25, 0.25, 0.25, 0.25)
+    net, thr = cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E
+    no_cover = cm.streamed_exchange_time_s(
+        64 << 20, 8e7, net, thr, group_fractions=fr, backprop_s=0.0, **kw)
+    assert no_cover.overlap_efficiency == 0.0
+    assert no_cover.exposed_s == pytest.approx(no_cover.exchange_s)
+    assert no_cover.n_collectives == 4
+    assert no_cover.launch_s == pytest.approx(4 * cm.COLLECTIVE_ALPHA_S)
+    covered = cm.streamed_exchange_time_s(
+        64 << 20, 8e7, net, thr, group_fractions=fr, backprop_s=10.0, **kw)
+    assert covered.hidden_s > no_cover.hidden_s
+    assert 0.0 < covered.overlap_efficiency < 1.0
+    assert covered.step_s >= 10.0
+    # the last group only becomes ready at the end of backprop, so its own
+    # exchange can never hide: efficiency is bounded away from 1
+    assert covered.exposed_s > 0.0
+    # work conservation
+    assert covered.hidden_s + covered.exposed_s == pytest.approx(
+        covered.exchange_s)
+    with pytest.raises(ValueError):
+        cm.streamed_exchange_time_s(1, 1, net, thr, group_fractions=(),
+                                    backprop_s=1.0, **kw)
+    with pytest.raises(ValueError):
+        cm.streamed_exchange_time_s(1, 1, net, thr, group_fractions=(0.5, 0.4),
+                                    backprop_s=1.0, **kw)
+    with pytest.raises(ValueError):
+        cm.streamed_exchange_time_s(1, 1, net, thr, group_fractions=(1.0,),
+                                    backprop_s=-1.0, **kw)
+
+
+def test_executor_streamed_cache_reuse():
+    executor.clear_cache()
+    layout = _layout(2)
+    plan = scheduler.build_plan(layout)
+    comp_a = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    comp_b = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    executor.streamed_compress_fn(comp_a, plan)
+    n = executor.cache_size()
+    assert n == plan.n_groups  # one cached executable per dispatch group
+    executor.streamed_compress_fn(comp_b, plan)  # equal config: no new entries
+    assert executor.cache_size() == n
+    executor.streamed_compress_fn(
+        FFTCompressor(FFTCompressorConfig(theta=0.9)), plan)
+    assert executor.cache_size() == 2 * n
+    executor.clear_cache()
+
+
+def test_executor_streamed_cache_keys_on_absolute_offsets():
+    """Regression: two parent layouts can contain an IDENTICAL group
+    sub-layout at different flat offsets (the compiled closure bakes the
+    slice in), so the cache key must carry the absolute range — a collision
+    silently compresses the wrong gradient slice."""
+    executor.clear_cache()
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
+    n = 4 * 4096
+    flat = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 0.05
+    # same sub-layout (one 4096-elem bucket) at offset 4096 vs offset 8192
+    lay_a = bucketing.BucketLayout(3 * 4096, (0, 4096, 3 * 4096), 4096)
+    lay_b = bucketing.BucketLayout(n, (0, 8192, n), 4096)
+    plan_a = scheduler.build_plan(lay_a, 2)
+    plan_b = scheduler.build_plan(lay_b, 2)
+    got_a = executor.streamed_compress_fn(comp, plan_a)(flat[: lay_a.total])
+    got_b = executor.streamed_compress_fn(comp, plan_b)(flat)
+    # every cached executable is offset-distinct: 2 groups x 2 plans
+    assert executor.cache_size() == 4
+    # plan_b's SECOND (index-order first) group covers flat[0:8192] — compare
+    # against a direct stacked compress of that slice
+    direct = executor.compress_fn(
+        comp, bucketing.sub_layout(lay_b, 0, 1), donate=False)(flat[:8192])
+    np.testing.assert_array_equal(
+        np.asarray(got_b[-1].re), np.asarray(direct.re))
+    # and plan_a's tail group (flat[4096:12288]) differs from plan_b's
+    # (flat[8192:16384]) — the collision would have made them equal
+    assert not np.array_equal(np.asarray(got_a[0].re),
+                              np.asarray(got_b[0].re))
+    executor.clear_cache()

@@ -4,7 +4,6 @@ both engine backends, ragged tails exact through the padded matrix, one
 collective per exchange instead of one per bucket, and a jit cache keyed on
 layout + config so steady state is one executable launch."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ transformer substrate and the paper-era convnet."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from helpers import run_with_devices
 from repro.models.convnet import ConvConfig, ConvNet, synthetic_image_batch

@@ -1,13 +1,10 @@
 """Training loop: convergence on learnable data, checkpoint/restart,
 failure-injection recovery (DESIGN.md §5)."""
 
-import dataclasses
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro import jaxcompat as compat
 from repro.configs.base import ArchConfig

@@ -1,0 +1,177 @@
+"""Schema guard for ``BENCH_throughput.json`` (CI `kernels` job).
+
+Extracted from the inline heredoc that used to live in
+``.github/workflows/ci.yml`` so the guard is unit-testable
+(``tests/test_check_bench.py``) and greppable.  The guard exists because the
+benchmark artifact is the repo's perf trajectory: a PR that silently drops a
+column (per-backend timings, the compile/steady split, the overlap-engine
+efficiency numbers) hides a regression from every later PR.  Checks:
+
+* ``backends`` — per-engine-backend compress/decompress timings
+  (DESIGN.md §13): records for both ``reference`` and ``pallas``.
+* ``records`` — the bucket × transport sweep (DESIGN.md §9/§14/§15):
+  compile/steady split for looped AND stacked execution, the looped vs
+  stacked modeled exchange (stacked must price ONE collective), and the
+  overlap-engine columns — streamed step-visible exchange time, overlap
+  efficiency (>0 on every streamable row: some exchange always hides behind
+  a nonzero backward pass), and the auto policy's pick.
+* ``schedules`` — the auto-policy profile sweep (DESIGN.md §15): at least
+  one deep-model row must record ``auto_schedule == "streamed"`` with
+  ``overlap_efficiency > 0`` — the acceptance evidence that the overlap
+  engine's point (hiding exchange behind backprop) survives in the model.
+
+Usage: ``python tools/check_bench.py [path-to-BENCH_throughput.json]``;
+exits nonzero listing every violation (not just the first).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+RECORD_KEYS = (
+    "host_compress_compile_us",
+    "host_compress_steady_us",
+    "host_compress_dispatch_us",
+    "stacked_compress_compile_us",
+    "stacked_compress_steady_us",
+    "model_exchange_ms",
+    "model_exchange_ms_stacked",
+    "model_n_collectives",
+    "model_n_collectives_stacked",
+    # overlap engine (DESIGN.md §15)
+    "model_backprop_ms",
+    "model_exchange_ms_streamed",
+    "model_n_collectives_streamed",
+    "overlap_efficiency",
+    "auto_schedule",
+)
+
+BACKEND_KEYS = ("compress_us", "decompress_us", "n_elems")
+
+SCHEDULE_KEYS = (
+    "profile",
+    "n_params",
+    "batch_tokens",
+    "n_buckets",
+    "model_backprop_ms",
+    "model_step_ms_stacked",
+    "model_step_ms_streamed",
+    "overlap_efficiency",
+    "auto_schedule",
+)
+
+SCHEDULE_NAMES = ("stacked", "streamed")
+
+
+def check_backends(data: dict) -> List[str]:
+    errors = []
+    backends = data.get("backends")
+    if not backends:
+        return ["missing 'backends' field (per-backend timing records)"]
+    names = {r.get("backend") for r in backends}
+    for missing in sorted({"reference", "pallas"} - names):
+        errors.append(f"backends field lacks a record for {missing!r}")
+    for r in backends:
+        for key in BACKEND_KEYS:
+            if key not in r:
+                errors.append(f"backend record {r.get('backend')!r} lacks {key!r}")
+    return errors
+
+
+def check_records(data: dict) -> List[str]:
+    errors = []
+    records = data.get("records")
+    if not records:
+        return ["missing 'records' field (bucket x transport sweep)"]
+    for r in records:
+        tag = f"{r.get('transport')}/{r.get('bucket_mb')}"
+        for key in RECORD_KEYS:
+            if key not in r:
+                errors.append(f"sweep record {tag} lacks {key!r}")
+        if r.get("model_n_collectives_stacked") != 1:
+            errors.append(
+                f"sweep record {tag}: stacked exchange must price ONE "
+                f"collective, got {r.get('model_n_collectives_stacked')!r}")
+        if r.get("auto_schedule") not in SCHEDULE_NAMES:
+            errors.append(
+                f"sweep record {tag}: auto_schedule must resolve to one of "
+                f"{SCHEDULE_NAMES}, got {r.get('auto_schedule')!r}")
+        streamable = (r.get("n_buckets", 1) > 1
+                      and r.get("transport") != "allgather")
+        eff = r.get("overlap_efficiency")
+        if streamable:
+            if not isinstance(eff, (int, float)) or not 0.0 < eff < 1.0:
+                errors.append(
+                    f"sweep record {tag}: streamable row must record "
+                    f"0 < overlap_efficiency < 1, got {eff!r}")
+            if r.get("model_n_collectives_streamed") != r.get("n_buckets"):
+                errors.append(
+                    f"sweep record {tag}: streamed dispatch is one collective "
+                    f"per bucket group, got "
+                    f"{r.get('model_n_collectives_streamed')!r} for "
+                    f"{r.get('n_buckets')!r} buckets")
+        elif eff not in (0, 0.0):
+            errors.append(
+                f"sweep record {tag}: monolithic row must record "
+                f"overlap_efficiency == 0, got {eff!r}")
+    return errors
+
+
+def check_schedules(data: dict) -> List[str]:
+    errors = []
+    schedules = data.get("schedules")
+    if not schedules:
+        return ["missing 'schedules' field (auto-policy profile sweep)"]
+    for r in schedules:
+        tag = r.get("profile", "?")
+        for key in SCHEDULE_KEYS:
+            if key not in r:
+                errors.append(f"schedule record {tag} lacks {key!r}")
+        if r.get("auto_schedule") not in SCHEDULE_NAMES:
+            errors.append(
+                f"schedule record {tag}: auto_schedule must be one of "
+                f"{SCHEDULE_NAMES}, got {r.get('auto_schedule')!r}")
+    deep_streamed = [
+        r for r in schedules
+        if r.get("auto_schedule") == "streamed"
+        and isinstance(r.get("overlap_efficiency"), (int, float))
+        and r.get("overlap_efficiency", 0) > 0
+    ]
+    if not deep_streamed:
+        errors.append(
+            "no schedule row picks 'streamed' with overlap_efficiency > 0 — "
+            "the overlap engine's deep-model win disappeared from the model")
+    return errors
+
+
+def check(data: dict) -> List[str]:
+    """All violations in one pass (empty list == schema ok)."""
+    return check_backends(data) + check_records(data) + check_schedules(data)
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    path = args[0] if args else "BENCH_throughput.json"
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"BENCH SCHEMA FAIL: cannot read {path}: {e}")
+        return 1
+    errors = check(data)
+    for e in errors:
+        print(f"BENCH SCHEMA FAIL: {e}")
+    if errors:
+        return 1
+    n_back = len(data.get("backends", []))
+    n_rec = len(data.get("records", []))
+    n_sched = len(data.get("schedules", []))
+    print(f"schema ok: {n_back} backend records, {n_rec} sweep records, "
+          f"{n_sched} schedule-policy records")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
