@@ -1,7 +1,8 @@
-"""CI perf smoke for the batched bucket executor (DESIGN.md §14).
+"""CI perf smoke for the batched bucket executor (DESIGN.md §14) and the
+selection engine (DESIGN.md §16).
 
 Small enough for a CI runner (8 MB buffer, 8 buckets), strict enough to catch
-the two regressions that would quietly undo the executor's point:
+the regressions that would quietly undo each subsystem's point:
 
 1. **steady state** — one stacked launch must not be slower than the jitted
    per-bucket loop (same math, fewer dispatches; tolerance covers timer
@@ -10,7 +11,11 @@ the two regressions that would quietly undo the executor's point:
    meaningfully faster than the per-bucket loop's one-subgraph-per-bucket
    program (this is the "one launch for all buckets" property: the looped
    program's build cost grows with the bucket count, the stacked one's does
-   not).
+   not);
+3. **selection** — the sampled selector's steady-state compress must beat
+   the sort selector's (the O(n) threshold's entire point), with a
+   deterministic structural fallback: the sampled compress jaxpr must
+   contain NO sort-family primitive while the sort compress still does.
 
 Flake policy: both gates compare WALL-CLOCK ratios, which a loaded CI runner
 can violate without any code regression (a noisy neighbor during exactly one
@@ -43,6 +48,10 @@ N = 1 << 21  # 2M floats = 8 MB
 BUCKET_BYTES = 1 << 20  # 1 MB buckets -> 8 buckets
 STEADY_SLACK = 1.25  # stacked steady <= looped steady * slack (timer noise)
 COMPILE_RATIO = 2.0  # looped compile must exceed stacked compile by this
+# selection engine (DESIGN.md §16): the sampled selector's steady-state
+# compress must beat the sort selector's (its entire point); the slack only
+# absorbs timer noise, not a real loss
+SELECTOR_SLACK = 1.0
 
 
 def _measure(comp, layout, g):
@@ -141,6 +150,73 @@ def _deterministic_fallback(comp) -> list:
     return failures
 
 
+def _measure_selectors(g):
+    """Fresh wall-clock steady-state compress per selector (DESIGN.md §16)."""
+    out = {}
+    for sel in ("sort", "sampled"):
+        comp = FFTCompressor(FFTCompressorConfig(theta=0.7, selector=sel))
+        _, steady = time_compiled(jax.jit(comp.compress), g)
+        out[sel] = steady
+    return out
+
+
+def _gate_selectors(t: dict) -> list:
+    if t["sampled"] > t["sort"] * SELECTOR_SLACK:
+        return [
+            f"sampled-selector steady-state compress ({t['sampled'] / 1e3:.1f} "
+            f"ms) is not faster than the sort selector "
+            f"({t['sort'] / 1e3:.1f} ms) — the O(n) selection win regressed "
+            f"(or the runner is loaded; deterministic fallback decides)"]
+    return []
+
+
+def _jaxpr_primitives(fn, *avals) -> set:
+    """All primitive names in a traced fn, nested jaxprs included."""
+    names = set()
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            names.add(eqn.primitive.name)
+            for v in eqn.params.values():
+                for w in (v if isinstance(v, (list, tuple)) else (v,)):
+                    if hasattr(w, "eqns"):
+                        walk(w)
+                    elif hasattr(w, "jaxpr"):
+                        walk(w.jaxpr)
+
+    walk(jax.make_jaxpr(fn)(*avals).jaxpr)
+    return names
+
+
+def _deterministic_selector_fallback() -> list:
+    """Structural selector assertions that cannot flake (DESIGN.md §16).
+
+    The sampled selector's entire claim is O(n) selection: its traced
+    compress must contain NO sort-family primitive anywhere (the DGC bracket,
+    the bisection refinement, and the count-and-compact binary search are all
+    compare/count/gather ops), while the sort selector's compress must still
+    contain one — if it stopped, this gate would be comparing sampled
+    against itself and the wall-clock numbers mean nothing.
+    """
+    failures = []
+    g = jax.ShapeDtypeStruct((N,), jax.numpy.float32)
+    sort_family = {"sort", "top_k", "approx_top_k"}
+    for sel, want_sort in (("sampled", False), ("sort", True)):
+        comp = FFTCompressor(FFTCompressorConfig(theta=0.7, selector=sel))
+        found = _jaxpr_primitives(comp.compress, g) & sort_family
+        if want_sort and not found:
+            failures.append(
+                "sort-selector compress no longer contains a sort/top_k "
+                "primitive — the baseline this gate compares against has "
+                "changed shape")
+        if not want_sort and found:
+            failures.append(
+                f"sampled-selector compress contains sort-family primitives "
+                f"{sorted(found)} — the O(n) selection property regressed "
+                f"structurally")
+    return failures
+
+
 def main() -> int:
     g = jax.random.normal(jax.random.PRNGKey(0), (N,)) * 0.05
     comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
@@ -149,14 +225,20 @@ def main() -> int:
 
     t = _measure(comp, layout, g)
     failures = _gate(t, layout.n_buckets)
+    ts = _measure_selectors(g)
+    sel_failures = _gate_selectors(ts)
     attempt = 1
-    if failures:
+    if failures or sel_failures:
         print("PERF SMOKE: wall-clock gate missed; rerunning once "
               "(loaded-runner tolerance):")
-        for f in failures:
+        for f in failures + sel_failures:
             print("  -", f)
-        t = _measure(comp, layout, g)
-        failures = _gate(t, layout.n_buckets)
+        if failures:
+            t = _measure(comp, layout, g)
+            failures = _gate(t, layout.n_buckets)
+        if sel_failures:
+            ts = _measure_selectors(g)
+            sel_failures = _gate_selectors(ts)
         attempt = 2
 
     print(f"looped : compile {t['looped_compile'] / 1e3:9.1f} ms   "
@@ -164,23 +246,30 @@ def main() -> int:
           f"({layout.n_buckets} buckets)")
     print(f"stacked: compile {t['stacked_compile'] / 1e3:9.1f} ms   "
           f"steady {t['stacked_steady'] / 1e3:8.1f} ms   (1 launch)")
+    print(f"selector: sort steady {ts['sort'] / 1e3:8.1f} ms   "
+          f"sampled steady {ts['sampled'] / 1e3:8.1f} ms   "
+          f"({ts['sort'] / max(ts['sampled'], 1e-9):.2f}x)")
 
-    if not failures:
-        print(f"PERF SMOKE OK: stacked executor holds both bounds "
-              f"(attempt {attempt})")
+    if not failures and not sel_failures:
+        print(f"PERF SMOKE OK: stacked executor and sampled selector hold "
+              f"their bounds (attempt {attempt})")
         return 0
 
     print("PERF SMOKE: wall-clock gates failed twice; falling back to "
           "deterministic modeled/structural assertions:")
-    for f in failures:
+    for f in failures + sel_failures:
         print("  - (timing)", f)
-    det = _deterministic_fallback(comp)
+    det = []
+    if failures:
+        det += _deterministic_fallback(comp)
+    if sel_failures:
+        det += _deterministic_selector_fallback()
     for f in det:
         print("PERF SMOKE FAIL:", f)
     if det:
         return 1
-    print("PERF SMOKE OK (deterministic): program-growth and launch-pricing "
-          "invariants hold; wall-clock miss attributed to runner load")
+    print("PERF SMOKE OK (deterministic): structural and modeled invariants "
+          "hold; wall-clock miss attributed to runner load")
     return 0
 
 

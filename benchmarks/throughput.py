@@ -90,6 +90,36 @@ def _backend_rows(theta: float) -> tuple:
     return rows, records
 
 
+def _selector_rows(theta: float) -> tuple:
+    """Selection-engine steady-state columns (DESIGN.md §16): the full jitted
+    compress on the 64 MB buffer under the exact sort vs the O(n) sampled-
+    threshold selector.  This is the tentpole's acceptance row —
+    ``tools/check_bench.py`` enforces sampled steady <= sort steady on the
+    ``n_elems == N`` record, and ``perf_smoke`` gates the same comparison
+    with a deterministic no-sort-op jaxpr fallback."""
+    g = jax.random.normal(jax.random.PRNGKey(3), (N,)) * 0.05
+    rows, records = [], []
+    for sel in ("sort", "sampled"):
+        cfg = FFTCompressorConfig(theta=theta, selector=sel)
+        comp = FFTCompressor(cfg)
+        compile_us, steady_us = time_compiled(jax.jit(comp.compress), g)
+        rows.append(Row(
+            name=f"selector_{sel}_64mb",
+            compile_us=round(compile_us, 1),
+            steady_us=round(steady_us, 1),
+            host_gbps=round(4 * N / (steady_us / 1e6) / 1e9, 3),
+        ))
+        records.append({
+            "selector": sel,
+            "sample_rate": cfg.sample_rate,
+            "tau_refine_iters": cfg.tau_refine_iters,
+            "n_elems": N,
+            "compress_compile_us": round(compile_us, 1),
+            "compress_steady_us": round(steady_us, 1),
+        })
+    return rows, records
+
+
 def _compress_timings(comp: FFTCompressor, g, layout) -> dict:
     """Looped vs stacked host compress, compile and steady state split.
 
@@ -207,6 +237,12 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                 "n_buckets": layout.n_buckets,
                 "workers": SWEEP_WORKERS,
                 "message_mb": m_bytes / (1 << 20),
+                # selection-engine decision behind the measured compress
+                # columns (DESIGN.md §16; the sweep keeps the default sort
+                # selector so the perf trajectory stays comparable across PRs)
+                "selector": comp.config.selector,
+                "sample_rate": comp.config.sample_rate,
+                "tau_refine_iters": comp.config.tau_refine_iters,
                 **timings,
                 "payload_bits": payload_bits,
                 "wire_bits_per_worker": plan.wire_bits_per_worker,
@@ -219,6 +255,8 @@ def _sweep_rows(comp: FFTCompressor) -> list:
             })
     backend_rows, backend_records = _backend_rows(comp.config.theta)
     rows.extend(backend_rows)
+    selector_rows, selector_records = _selector_rows(comp.config.theta)
+    rows.extend(selector_rows)
     schedule_rows, schedule_records = _schedule_rows(comp)
     rows.extend(schedule_rows)
     with open(BENCH_JSON, "w") as f:
@@ -227,6 +265,7 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                    "n_bits": comp.config.n_bits,
                    "records": records,
                    "backends": backend_records,
+                   "selectors": selector_records,
                    "schedules": schedule_records}, f, indent=2)
     return rows
 

@@ -139,8 +139,20 @@ class ReducerConfig:
     schedule: str = "stacked"
     # streamed dispatch groups (None: one group per bucket — finest grain)
     stream_groups: Optional[int] = None
+    # selection engine (DESIGN.md §16): sort|sampled|bisect|auto top-k
+    # selector on the compression hot path, plus the sampled estimator's
+    # subsample rate and bracket-refinement sweep count
+    selector: str = "sort"
+    sample_rate: float = 1.0 / 64.0
+    tau_refine_iters: int = 16
 
     def __post_init__(self):
+        from repro.core.selection import SELECTOR_NAMES
+
+        if self.selector not in SELECTOR_NAMES:
+            raise ValueError(
+                f"unknown selector {self.selector!r}; expected one of "
+                f"{SELECTOR_NAMES}")
         if self.transport not in TRANSPORT_NAMES:
             raise ValueError(
                 f"unknown transport {self.transport!r}; expected {TRANSPORT_NAMES}"
@@ -175,6 +187,9 @@ class ReducerConfig:
             range_mode=self.range_mode,
             fixed_range=self.fixed_range,
             backend=self.backend,
+            selector=self.selector,
+            sample_rate=self.sample_rate,
+            tau_refine_iters=self.tau_refine_iters,
         )
 
     def layout_for(self, total: int) -> bucketing.BucketLayout:

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fft as cfft
-from repro.core import packing, sparsify
+from repro.core import packing, selection, sparsify
 from repro.core.quantizer import (
     FittedQuantizer,
     RangeQuantConfig,
@@ -182,6 +182,15 @@ class FFTCompressorConfig:
     index_bits: int = 16
     # stage-execution engine: reference | pallas | auto (kernels/engine.py)
     backend: str = "reference"
+    # selection engine (core/selection.py, DESIGN.md §16): how the top-k kept
+    # set is found.  "sort" is the seed behavior (exact lax.top_k); "bisect"
+    # and "sampled" are the O(n) threshold selectors; "auto" resolves per row
+    # width.  sample_rate / tau_refine_iters / selector_seed parameterize the
+    # sampled estimator and are inert under other selectors.
+    selector: str = "sort"
+    sample_rate: float = 1.0 / 64.0
+    tau_refine_iters: int = 16
+    selector_seed: int = 0
 
     def __post_init__(self):
         # payloads carry int16 indices (and bill index_bits=16 on the wire);
@@ -190,6 +199,17 @@ class FFTCompressorConfig:
             raise ValueError(f"chunk must be <= 32767 (int16 indices), got {self.chunk}")
         if self.chunk < 1:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
+        from repro.core.selection import SELECTOR_NAMES
+
+        if self.selector not in SELECTOR_NAMES:
+            raise ValueError(
+                f"unknown selector {self.selector!r}; expected one of {SELECTOR_NAMES}")
+        if not 0.0 < self.sample_rate <= 1.0:
+            raise ValueError(
+                f"sample_rate must be in (0, 1], got {self.sample_rate}")
+        if self.tau_refine_iters < 1:
+            raise ValueError(
+                f"tau_refine_iters must be >= 1, got {self.tau_refine_iters}")
         from repro.kernels.engine import BACKEND_NAMES
 
         if self.backend not in BACKEND_NAMES:
@@ -272,7 +292,9 @@ class TimeDomainCompressor:
         cfg = self.config
         x2d, n = cfft.pad_to_chunks(x_flat, cfg.chunk)
         k = sparsify.keep_count(cfg.chunk, cfg.theta)
-        idx = sparsify.topk_select(jnp.abs(x2d), k)
+        idx, _ = selection.select_indices(
+            jnp.abs(x2d), k, cfg.selector, sample_rate=cfg.sample_rate,
+            refine_iters=cfg.tau_refine_iters, seed=cfg.selector_seed)
         vals = packing.pack_by_indices(x2d, idx)
         if cfg.quantize:
             quant = fit_quantizer(vals.min(), vals.max(), self._qcfg)
@@ -308,7 +330,9 @@ class TimeDomainCompressor:
         c_max = padded // cfg.chunk
         x3 = stacked.reshape(n_buckets, c_max, cfg.chunk).astype(jnp.float32)
         k = sparsify.keep_count(cfg.chunk, cfg.theta)
-        idx = sparsify.topk_select(jnp.abs(x3), k)
+        idx, _ = selection.select_indices(
+            jnp.abs(x3), k, cfg.selector, sample_rate=cfg.sample_rate,
+            refine_iters=cfg.tau_refine_iters, seed=cfg.selector_seed)
         vals = packing.pack_by_indices(x3, idx)
         if cfg.quantize:
             valid = valid_chunk_mask(sizes, c_max, cfg.chunk)

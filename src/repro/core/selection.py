@@ -1,0 +1,367 @@
+"""Selection engine: pluggable top-k selectors for the compression hot path.
+
+PR 4's honest benchmark showed steady-state compress on a 64 MB gradient is
+dominated by ``jax.lax.top_k`` — a full per-chunk sort.  The paper itself uses
+count-based bucketSelect rather than a global sort (§III-B.1), and Deep
+Gradient Compression (arXiv 1712.01887) estimates the threshold ``tau`` from a
+small magnitude subsample in O(n).  This module is the shared math of every
+selector; ``FFTCompressorConfig.selector`` picks one:
+
+* ``sort``    — the seed behavior: ``jax.lax.top_k`` (exact, magnitude-
+                descending slot order).  Bitwise-identical to every pre-engine
+                payload; the library default.
+* ``bisect``  — the threshold kernel's value-axis bisection
+                (``kernels/topk_threshold.py``) as a pure-jnp path: 48
+                compare+count sweeps over the full [0, max] range, then one
+                count-and-compact pass.  No sort primitive anywhere.
+* ``sampled`` — DGC-style: bracket tau from a strided magnitude subsample
+                (two cheap bisections on ~1/64 of the data), clamp the bracket
+                so the bisection invariant provably holds on the FULL rows
+                (mis-bracketing costs accuracy, never correctness), refine
+                with ``tau_refine_iters`` sweeps, then count-and-compact.
+                O(n) with a small constant; the steady-state winner.
+* ``auto``    — ``sampled`` when rows are wide enough for the subsample to
+                carry signal (``AUTO_SAMPLED_MIN_COLS``), else ``sort``.
+
+Exact-k repair: thresholding keeps ``count >= k`` coefficients (ties, or a
+sampled tau that converged a few ulps below the k-th order statistic).
+``count_compact`` packs the kept set index-ascending into ``k+1`` slots and
+drops the overflow slot — the highest-index surplus entries truncate under the
+static budget, identical to bucketSelect semantics and to what
+``kernels/fused_compress.py`` already does.  Payload SHAPES therefore never
+depend on the selector, and error-feedback residuals stay exact (the residual
+is ``corrected - roundtrip``, exact for any kept set).
+
+The bisection invariant everything rests on::
+
+    count(mag >= lo) >= k  >  count(mag >= hi)
+
+``upper_bracket`` widens ``hi`` one representable float above the row max
+(bitcast+1, clamped to FLT_MAX) so the invariant holds exactly even for rows
+whose max is denormal or near f32 overflow — the old ``max*1.0000002 + 1e-30``
+expression rounds back to ``max`` for both.
+
+The Pallas kernels (``kernels/topk_threshold.py``,
+``kernels/sampled_threshold.py``) call these same functions inside their
+kernel bodies, so the pure-jnp reference path and the fused path run
+literally the same arithmetic — that is what makes cross-backend payloads
+bitwise-comparable (DESIGN.md §16).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "SELECTOR_NAMES",
+    "BISECT_ITERS",
+    "DEFAULT_SAMPLE_RATE",
+    "DEFAULT_REFINE_ITERS",
+    "AUTO_SAMPLED_MIN_COLS",
+    "FLT_MAX",
+    "resolve_selector",
+    "upper_bracket",
+    "bisect_bracket",
+    "refine_bracket",
+    "bisect_tau",
+    "strided_sample",
+    "sample_bracket",
+    "sampled_tau",
+    "selector_tau",
+    "count_compact",
+    "select_indices",
+]
+
+SELECTOR_NAMES = ("sort", "sampled", "bisect", "auto")
+
+# enough sweeps that lo/hi reach ADJACENT f32 values even when tau sits far
+# below the row max (the interval halves from ~max each sweep; 48 covers
+# tau >= max * 2^-24, the f32 mantissa range).  Canonical home of the constant
+# the threshold kernels share (kernels/topk_threshold re-exports it) so the
+# reference and fused bisections can never desynchronize.
+BISECT_ITERS = 48
+
+# sampled-selector defaults (DGC samples 0.1-1%; 1/64 ~ 1.6% keeps the
+# sample order statistics tight enough that the clamped bracket rarely
+# falls back to the full range)
+DEFAULT_SAMPLE_RATE = 1.0 / 64.0
+DEFAULT_REFINE_ITERS = 16
+
+# auto policy: below this row width the subsample is too small for its order
+# statistics to bracket anything — fall back to the exact sort
+AUTO_SAMPLED_MIN_COLS = 512
+
+FLT_MAX = float(jnp.finfo(jnp.float32).max)
+
+
+def resolve_selector(selector: str, cols: int) -> str:
+    """Concrete selector for rows of this width (static, trace-time)."""
+    if selector not in SELECTOR_NAMES:
+        raise ValueError(
+            f"unknown selector {selector!r}; expected one of {SELECTOR_NAMES}")
+    if selector == "auto":
+        return "sampled" if cols >= AUTO_SAMPLED_MIN_COLS else "sort"
+    return selector
+
+
+# ---------------------------------------------------------------------------
+# bracket arithmetic
+# ---------------------------------------------------------------------------
+
+
+def upper_bracket(x: jnp.ndarray) -> jnp.ndarray:
+    """Smallest representable f32 strictly above ``x`` (nextafter-to-+inf),
+    clamped to FLT_MAX.
+
+    For non-negative finite f32, adding 1 to the bit pattern IS nextafter:
+    ``upper_bracket(0) = 2^-149`` (the smallest denormal, so all-zero rows
+    still satisfy ``count(>= hi) < k`` ... trivially 0), and a denormal max
+    steps to the exactly-next denormal.  At FLT_MAX the clamp keeps ``hi``
+    finite — bisection on an all-FLT_MAX row then converges to FLT_MAX and
+    the count-and-compact repair truncates, instead of ``mid = inf`` stalling
+    the loop forever.
+
+    On flush-to-zero hosts (XLA CPU) the denormal step itself flushes to 0,
+    collapsing the bracket to ``[0, 0]`` on all-zero/denormal rows; bisection
+    then converges to ``tau = 0`` whose kept count is the whole row ``>= k``,
+    so the invariant the callers rely on survives FTZ unharmed
+    (``tests/test_selection.py`` pins both behaviors).
+    """
+    x = x.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    nxt = jax.lax.bitcast_convert_type(bits + 1, jnp.float32)
+    return jnp.minimum(nxt, jnp.float32(FLT_MAX))
+
+
+def bisect_bracket(
+    mag: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, k: int, iters: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``iters`` value-axis bisection sweeps on rows ``mag`` (rows, cols).
+
+    Preserves the invariant ``count(>= lo) >= k > count(>= hi)`` the caller
+    establishes; returns the narrowed ``(lo, hi)``.  This one loop body is
+    shared by the pure-jnp selectors AND the Pallas kernel bodies
+    (``topk_threshold``, ``sampled_threshold``) so both paths run identical
+    arithmetic.
+    """
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum(mag >= mid[:, None], axis=-1)
+        feasible = count >= k  # mid keeps at least the budget
+        new_lo = jnp.where(feasible, mid, lo)
+        new_hi = jnp.where(feasible, hi, mid)
+        return new_lo, new_hi
+
+    return jax.lax.fori_loop(0, iters, body, (lo, hi))
+
+
+def refine_bracket(
+    mag: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray, k: int, iters: int
+) -> jnp.ndarray:
+    """Clamp an ESTIMATED bracket so the invariant provably holds, then
+    bisect; returns tau (rows,) with ``count(mag >= tau) >= k`` guaranteed.
+
+    The two clamp passes are what makes a sampled bracket safe: if the
+    subsample under- or over-shot, the offending edge falls back to the full
+    range (0 below, one-past-max above) — a bad sample costs refinement
+    accuracy, never the ``>= k`` guarantee the static payload budget needs.
+    """
+    lo = jnp.where(jnp.sum(mag >= lo[:, None], axis=-1) >= k,
+                   lo, jnp.zeros_like(lo))
+    hi_fallback = upper_bracket(jnp.max(mag, axis=-1))
+    hi = jnp.where(jnp.sum(mag >= hi[:, None], axis=-1) < k, hi, hi_fallback)
+    lo, _ = bisect_bracket(mag, lo, hi, k, iters)
+    return lo
+
+
+def bisect_tau(mag: jnp.ndarray, k: int, iters: int = BISECT_ITERS) -> jnp.ndarray:
+    """Full-range bisection threshold: tau (rows,) with ``count(>= tau) >= k``.
+
+    The ``bisect`` selector, and the exact math of the ``topk_threshold``
+    kernel body (which calls this)."""
+    hi = upper_bracket(jnp.max(mag, axis=-1))
+    lo = jnp.zeros_like(hi)
+    lo, _ = bisect_bracket(mag, lo, hi, k, iters)
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# sampled threshold (DGC-style)
+# ---------------------------------------------------------------------------
+
+
+def _sample_layout(cols: int, sample_rate: float, seed: int) -> Tuple[int, int, int]:
+    """Static (n_sample, stride, offset) of the strided subsample."""
+    if not 0.0 < sample_rate <= 1.0:
+        raise ValueError(f"sample_rate must be in (0, 1], got {sample_rate}")
+    s = max(1, min(cols, int(round(cols * sample_rate))))
+    stride = max(1, cols // s)
+    offset = seed % stride
+    return s, stride, offset
+
+
+def strided_sample(
+    mag: jnp.ndarray, sample_rate: float = DEFAULT_SAMPLE_RATE, seed: int = 0
+) -> jnp.ndarray:
+    """(rows, s) strided subsample of the magnitude rows.
+
+    A strided (not contiguous) pick because rfft magnitudes are strongly
+    ordered in frequency — a contiguous window would sample one band.  The
+    seed rotates the phase so repeated calls need not resample identical
+    bins; everything is static so the jaxpr carries a plain strided slice
+    (no gather, no sort).
+    """
+    cols = mag.shape[-1]
+    s, stride, offset = _sample_layout(cols, sample_rate, seed)
+    return jax.lax.slice_in_dim(
+        mag, offset, offset + (s - 1) * stride + 1, stride, axis=-1)
+
+
+def sample_bracket(
+    sample: jnp.ndarray, k: int, cols: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Bracket the full-row tau from sample order statistics: (lo, hi) rows.
+
+    The k-th largest of the row maps to rank ``k_s = k*s/cols`` in the
+    sample; a ``4*sqrt(k_s)+2`` rank margin on each side covers the sampling
+    noise of a binomial count (4 sigma) plus integer slop.  Each rank's value
+    is found by bisection ON THE SAMPLE — never ``jnp.sort`` — so the sampled
+    selector's jaxpr is sort-free end to end (the property
+    ``benchmarks/perf_smoke.py`` asserts deterministically).
+    """
+    s = sample.shape[-1]
+    k_s = k * s / cols
+    margin = 4.0 * (max(k_s, 1.0) ** 0.5) + 2.0
+    hi_rank = max(1, int(k_s - margin))
+    lo_rank = min(s, int(k_s + margin) + 1)
+    hi0 = upper_bracket(jnp.max(sample, axis=-1))
+    zero = jnp.zeros_like(hi0)
+    # value at sample-rank hi_rank (a HIGH magnitude: few sample entries
+    # above it) bounds tau from above; rank lo_rank bounds it from below
+    hi, _ = bisect_bracket(sample, zero, hi0, hi_rank, BISECT_ITERS)
+    lo, _ = bisect_bracket(sample, zero, hi0, lo_rank, BISECT_ITERS)
+    return lo, hi
+
+
+def sampled_tau(
+    mag: jnp.ndarray,
+    k: int,
+    *,
+    sample_rate: float = DEFAULT_SAMPLE_RATE,
+    refine_iters: int = DEFAULT_REFINE_ITERS,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """DGC-style sampled threshold: tau (rows,), ``count(>= tau) >= k``.
+
+    sample -> rank-bracket -> clamp -> ``refine_iters`` full-row sweeps.
+    Total full-row passes: 2 clamp + refine_iters (vs BISECT_ITERS=48 for
+    the full bisection; the sample bisections touch ~sample_rate of the
+    data)."""
+    sample = strided_sample(mag, sample_rate, seed)
+    lo, hi = sample_bracket(sample, k, mag.shape[-1])
+    return refine_bracket(mag, lo, hi, k, refine_iters)
+
+
+# ---------------------------------------------------------------------------
+# dispatch + exact-k compaction
+# ---------------------------------------------------------------------------
+
+
+def _as_rows(mag: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+    lead = mag.shape[:-1]
+    return mag.reshape(-1, mag.shape[-1]), lead
+
+
+def selector_tau(
+    mag: jnp.ndarray,
+    k: int,
+    selector: str,
+    *,
+    sample_rate: float = DEFAULT_SAMPLE_RATE,
+    refine_iters: int = DEFAULT_REFINE_ITERS,
+    seed: int = 0,
+) -> jnp.ndarray:
+    """Threshold (…, 1) for a RESOLVED threshold selector (bisect|sampled).
+
+    Shape-polymorphic over leading axes (chunk, bucket — any stack);
+    ``count(mag >= tau) >= k`` holds per row by the bisection invariant.
+    """
+    rows, lead = _as_rows(mag.astype(jnp.float32))
+    if selector == "bisect":
+        tau = bisect_tau(rows, k)
+    elif selector == "sampled":
+        tau = sampled_tau(rows, k, sample_rate=sample_rate,
+                          refine_iters=refine_iters, seed=seed)
+    else:
+        raise ValueError(
+            f"selector_tau takes a resolved threshold selector "
+            f"(bisect|sampled), got {selector!r}")
+    return tau.reshape(lead + (1,))
+
+
+def count_compact(mag: jnp.ndarray, tau: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact-k index compaction of the tau mask: (…, k) int32, index-ascending.
+
+    Slot ``j`` holds the index of the ``(j+1)``-th kept coefficient, found by
+    a vectorized lower-bound binary search on the mask's running count: the
+    search target ``j+1`` first appears in ``cumsum(mask)`` exactly at that
+    coefficient.  Surplus kept entries (ties, or a tau a few ulps under the
+    k-th order statistic) simply never get a slot — the highest-INDEX surplus
+    truncates under the static budget, exactly bucketSelect's semantics and
+    exactly what the fused kernel's compaction does, so reference and pallas
+    payloads stay slot-for-slot comparable.  Requires ``count(>= tau) >= k``
+    (every selector in this module guarantees it).
+
+    Cost: one O(n) cumsum + ``k·ceil(log2(n))`` gathers — no sort primitive
+    and no dense scatter (an ``.at[pos].set`` compaction benches ~3x slower
+    on CPU hosts, and the one-hot matmul form the fused kernel uses is
+    VPU-shaped, not host-shaped).
+    """
+    rows, lead = _as_rows(mag)
+    trows = tau.reshape(-1, 1).astype(rows.dtype)
+    n_rows, cols = rows.shape
+    cum = jnp.cumsum((rows >= trows).astype(jnp.int32), axis=-1)
+    targets = jnp.arange(1, k + 1, dtype=jnp.int32)
+    lo = jnp.zeros((n_rows, k), jnp.int32)
+    hi = jnp.full((n_rows, k), cols - 1, jnp.int32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) >> 1
+        found = jnp.take_along_axis(cum, mid, axis=-1) >= targets[None, :]
+        return jnp.where(found, lo, mid + 1), jnp.where(found, mid, hi)
+
+    steps = max(1, (cols - 1).bit_length())
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo.reshape(lead + (k,))
+
+
+def select_indices(
+    mag: jnp.ndarray,
+    k: int,
+    selector: str,
+    *,
+    sample_rate: float = DEFAULT_SAMPLE_RATE,
+    refine_iters: int = DEFAULT_REFINE_ITERS,
+    seed: int = 0,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-call selection: resolved-selector indices (…, k) plus tau (…, 1).
+
+    ``sort`` returns magnitude-descending ``top_k`` indices and ``tau=None``;
+    the threshold selectors return index-ascending compacted indices and the
+    tau their kept set (pre-truncation) is defined by — callers that fit a
+    quantizer range use ``mag >= tau`` so the fit matches the fused kernel's
+    mask (DESIGN.md §16).
+    """
+    resolved = resolve_selector(selector, mag.shape[-1])
+    if resolved == "sort":
+        _, idx = jax.lax.top_k(mag, k)
+        return idx, None
+    tau = selector_tau(mag, k, resolved, sample_rate=sample_rate,
+                       refine_iters=refine_iters, seed=seed)
+    return count_compact(mag, tau, k), tau

@@ -44,12 +44,18 @@ def topk_select(mag: jnp.ndarray, k: int) -> jnp.ndarray:
 
 
 def topk_mask(mag: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Boolean mask keeping the per-row top-k by magnitude."""
-    idx = topk_select(mag, k)
-    mask = jnp.zeros(mag.shape, bool)
-    return jax.vmap(lambda m, i: m.at[i].set(True))(
-        mask.reshape(-1, mag.shape[-1]), idx.reshape(-1, idx.shape[-1])
-    ).reshape(mag.shape)
+    """Boolean mask keeping the per-row top-k by magnitude.
+
+    Tau-comparison form (selection engine, DESIGN.md §16): the k-th order
+    statistic from ``top_k`` IS the threshold, and ``mag >= tau`` is one
+    vectorized compare — no O(n·k) index scatter.  Under bitwise ties at tau
+    the mask may keep MORE than k entries (every tied coefficient), which is
+    the honest semantics for a mask: thresholding cannot distinguish tied
+    values, and downstream static-budget packing truncates, as always.
+    """
+    vals = jax.lax.top_k(mag, k)[0]
+    tau = vals[..., -1:]
+    return mag >= tau
 
 
 def frequency_sparsify(

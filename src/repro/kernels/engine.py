@@ -58,14 +58,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fft as cfft
-from repro.core import packing, sparsify
+from repro.core import packing, selection, sparsify
 from repro.core.quantizer import (
     RangeQuantConfig,
     decode as q_decode,
     encode as q_encode,
     fit_quantizer,
 )
-from repro.kernels import fused_compress, fused_decompress, ops
+from repro.kernels import fused_compress, fused_decompress, ops, sampled_threshold
 from repro.kernels.fft4step import CHUNK as KERNEL_CHUNK
 from repro.kernels.runtime import mosaic_available
 
@@ -131,6 +131,29 @@ def _weighted_magnitude(re, im, w):
 
 def _qcfg(cfg) -> RangeQuantConfig:
     return RangeQuantConfig(cfg.n_bits, cfg.m_bits)
+
+
+def _selector_tau(cfg, mag, k: int, sel: str):
+    """Pure-jnp threshold for a resolved threshold selector (…, 1)."""
+    return selection.selector_tau(
+        mag, k, sel, sample_rate=cfg.sample_rate,
+        refine_iters=cfg.tau_refine_iters, seed=cfg.selector_seed)
+
+
+def _pallas_tau(cfg, mag2d, k: int, sel: str):
+    """Threshold-kernel dispatch for the pallas backend: (tau (r,1), count).
+
+    ``sort`` and ``bisect`` both map to the full bisection kernel — on this
+    backend the "sort" selector has always BEEN count-based selection
+    (``threshold_pallas``); ``bisect`` just names it explicitly.  ``sampled``
+    runs the sampled-bracket kernel, whose body calls the same
+    ``core/selection`` math the reference selector runs (DESIGN.md §16).
+    """
+    if sel == "sampled":
+        return sampled_threshold.sampled_select(
+            mag2d, k=k, sample_rate=cfg.sample_rate,
+            refine_iters=cfg.tau_refine_iters, seed=cfg.selector_seed)
+    return ops.threshold_select(mag2d, k)
 
 
 def _scatter_spectrum(idx, kept, f_bins: int) -> jnp.ndarray:
@@ -275,11 +298,26 @@ class ReferenceBackend(CompressorBackend):
         re_p = jnp.real(freqs).astype(jnp.float32)
         im_p = jnp.imag(freqs).astype(jnp.float32)
         mag = _weighted_magnitude(re_p, im_p, w)
-        idx = sparsify.topk_select(mag, k)
+        sel = selection.resolve_selector(cfg.selector, mag.shape[-1])
+        if sel == "sort":
+            idx = sparsify.topk_select(mag, k)
+            tau = None
+        else:
+            # threshold selector (DESIGN.md §16): O(n) tau + one count-and-
+            # compact pass; slots come out index-ascending (pallas order)
+            tau = _selector_tau(cfg, mag, k, sel)
+            idx = selection.count_compact(mag, tau, k)
         kept = packing.pack_by_indices(freqs, idx)
         re, im = jnp.real(kept), jnp.imag(kept)
         if cfg.quantize:
-            quant = self._fit(cfg, re, im)
+            if tau is None:
+                quant = self._fit(cfg, re, im)
+            else:
+                # fit over the PRE-truncation tau mask — the same set the
+                # pallas backend fits over, so cross-backend codes stay
+                # bitwise-equal under every selector (tie caveat as in
+                # PallasBackend.compress)
+                quant = self._fit_masked(cfg, re_p, im_p, mag >= tau)
             re, im = q_encode(re, quant), q_encode(im, quant)
         else:
             quant = None
@@ -292,6 +330,19 @@ class ReferenceBackend(CompressorBackend):
             return fit_quantizer(lo, hi, _qcfg(cfg))
         lo = jnp.minimum(re.min(), im.min())
         hi = jnp.maximum(re.max(), im.max())
+        return fit_quantizer(lo, hi, _qcfg(cfg))
+
+    def _fit_masked(self, cfg, re_p, im_p, mask):
+        """Range fit over masked spectrum PLANES — expression-for-expression
+        the fit the pallas backend runs, so the two backends' quantizer
+        params are bitwise-identical whenever their tau is."""
+        if cfg.range_mode == "fixed":
+            lo, hi = cfg.fixed_range
+            return fit_quantizer(lo, hi, _qcfg(cfg))
+        lo = jnp.minimum(jnp.where(mask, re_p, jnp.inf).min(),
+                         jnp.where(mask, im_p, jnp.inf).min())
+        hi = jnp.maximum(jnp.where(mask, re_p, -jnp.inf).max(),
+                         jnp.where(mask, im_p, -jnp.inf).max())
         return fit_quantizer(lo, hi, _qcfg(cfg))
 
     def compress_stacked(self, cfg, stacked: jnp.ndarray, sizes):
@@ -311,6 +362,7 @@ class ReferenceBackend(CompressorBackend):
         k = _keep_k(cfg)
         w = cfft.hermitian_weights(cfg.chunk)
         counts = jnp.asarray([-(-s // cfg.chunk) for s in sizes])
+        sel = selection.resolve_selector(cfg.selector, cfg.chunk // 2 + 1)
 
         def one_bucket(args):
             x2d, c_b = args  # (max_chunks, chunk) rows, true chunk count
@@ -321,7 +373,14 @@ class ReferenceBackend(CompressorBackend):
             re_p = jnp.real(freqs).astype(jnp.float32)
             im_p = jnp.imag(freqs).astype(jnp.float32)
             mag = _weighted_magnitude(re_p, im_p, w)
-            idx = sparsify.topk_select(mag, k)
+            if sel == "sort":
+                idx = sparsify.topk_select(mag, k)
+                tau = None
+            else:
+                # per-row threshold selection is bucket-independent, so the
+                # stacked result matches the looped compress row-for-row
+                tau = _selector_tau(cfg, mag, k, sel)
+                idx = selection.count_compact(mag, tau, k)
             kept = packing.pack_by_indices(freqs, idx)
             re, im = jnp.real(kept), jnp.imag(kept)
             if not cfg.quantize:
@@ -329,12 +388,22 @@ class ReferenceBackend(CompressorBackend):
             if cfg.range_mode == "fixed":
                 lo, hi = cfg.fixed_range
                 quant = fit_quantizer(lo, hi, _qcfg(cfg))
-            else:
+            elif tau is None:
                 valid = (jnp.arange(c_max) < c_b)[:, None]
                 lo = jnp.minimum(jnp.where(valid, re, jnp.inf).min(),
                                  jnp.where(valid, im, jnp.inf).min())
                 hi = jnp.maximum(jnp.where(valid, re, -jnp.inf).max(),
                                  jnp.where(valid, im, -jnp.inf).max())
+                quant = fit_quantizer(lo, hi, _qcfg(cfg))
+            else:
+                # pre-truncation tau mask, with the all-zero PADDING rows
+                # (tau 0 -> mask all-true) excluded so the fit sees exactly
+                # what the looped per-bucket fit saw
+                m = (mag >= tau) & (jnp.arange(c_max) < c_b)[:, None]
+                lo = jnp.minimum(jnp.where(m, re_p, jnp.inf).min(),
+                                 jnp.where(m, im_p, jnp.inf).min())
+                hi = jnp.maximum(jnp.where(m, re_p, -jnp.inf).max(),
+                                 jnp.where(m, im_p, -jnp.inf).max())
                 quant = fit_quantizer(lo, hi, _qcfg(cfg))
             return q_encode(re, quant), q_encode(im, quant), idx, quant
 
@@ -374,11 +443,12 @@ class PallasBackend(CompressorBackend):
         k = _keep_k(cfg)
         w = cfft.hermitian_weights(cfg.chunk)
         mag = _weighted_magnitude(re, im, w)
+        sel = selection.resolve_selector(cfg.selector, mag.shape[-1])
 
         if not cfg.quantize:
             _log_once("pallas compress: quantize=False -> per-stage "
                       "threshold+pack kernels (no fused quantization)")
-            tau, _ = ops.threshold_select(mag, k)
+            tau, _ = _pallas_tau(cfg, mag, k, sel)
             mvals, idx = ops.pack_threshold(mag, tau, k)  # width pad_k(k)
             valid = mvals != 0
             re_k = jnp.take_along_axis(re, idx, axis=-1) * valid
@@ -396,8 +466,13 @@ class PallasBackend(CompressorBackend):
         # gap between the k-th and (k+1)-th magnitudes, where an ulp of noise
         # on either side cannot flip the comparison.  (Bitwise ties at the
         # boundary still truncate under the static budget, as documented on
-        # the slice below.)
-        tau_k, _ = ops.threshold_select(mag, k)  # exact k-th order statistic
+        # the slice below.)  Under selector=sampled the same contract holds
+        # with the sampled-bracket tau: count(>= tau) >= k is guaranteed by
+        # the in-kernel clamp, the surplus (a few near-tau values the short
+        # refinement didn't split) truncates index-ascending, and the fit
+        # below covers the full pre-truncation mask — exactly what the
+        # reference selector path fits (DESIGN.md §16).
+        tau_k, _ = _pallas_tau(cfg, mag, k, sel)
         below = jnp.max(jnp.where(mag < tau_k, mag, 0.0), axis=-1,
                         keepdims=True)  # largest dropped magnitude (or 0)
         tau = 0.5 * (tau_k + below)
@@ -445,11 +520,12 @@ class PallasBackend(CompressorBackend):
         k = _keep_k(cfg)
         w = cfft.hermitian_weights(cfg.chunk)
         mag = _weighted_magnitude(re, im, w)
+        sel = selection.resolve_selector(cfg.selector, mag.shape[-1])
 
         if not cfg.quantize:
             _log_once("pallas compress_stacked: quantize=False -> per-stage "
                       "threshold+pack kernels (no fused quantization)")
-            tau, _ = ops.threshold_select(mag, k)
+            tau, _ = _pallas_tau(cfg, mag, k, sel)
             mvals, idx = ops.pack_threshold(mag, tau, k)
             valid = mvals != 0
             re_k = jnp.take_along_axis(re, idx, axis=-1) * valid
@@ -460,9 +536,9 @@ class PallasBackend(CompressorBackend):
                 idx[:, :k].astype(jnp.int16).reshape(n_buckets, c_max, k),
                 None, sizes, cfg.chunk)
 
-        # same one-bisection/mid-gap-tau contract as the looped compress,
+        # same one-threshold/mid-gap-tau contract as the looped compress,
         # batched over every bucket's chunks in one threshold-kernel launch
-        tau_k, _ = ops.threshold_select(mag, k)
+        tau_k, _ = _pallas_tau(cfg, mag, k, sel)
         below = jnp.max(jnp.where(mag < tau_k, mag, 0.0), axis=-1,
                         keepdims=True)
         tau = 0.5 * (tau_k + below)

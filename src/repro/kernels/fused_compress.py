@@ -25,9 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.core import selection
 from repro.kernels.range_quant import encode_math
 from repro.kernels.runtime import resolve_interpret
-from repro.kernels.topk_threshold import BISECT_ITERS as _BISECT_ITERS
 
 __all__ = ["fused_compress_pallas"]
 
@@ -63,17 +63,10 @@ def _fused_body(params_ref, re_ref, im_ref, w_ref, tau_in_ref,
     if tau_in_ref is not None:
         tau = tau_in_ref[...][:, 0]
     else:
-        hi = jnp.max(mag, axis=-1) * 1.0000002 + 1e-30
-        lo = jnp.zeros_like(hi)
-
-        def bisect(_, carry):
-            lo, hi = carry
-            mid = 0.5 * (lo + hi)
-            feasible = jnp.sum(mag >= mid[:, None], axis=-1) >= k_keep
-            return jnp.where(feasible, mid, lo), jnp.where(feasible, hi, mid)
-
-        lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, bisect, (lo, hi))
-        tau = lo
+        # shared selection-engine math (DESIGN.md §16): identical arithmetic
+        # to threshold_pallas and the pure-jnp bisect selector, including the
+        # nextafter-widened upper bracket
+        tau = selection.bisect_tau(mag, k_keep)
     tau_ref[...] = tau[:, None]
 
     # 3. compaction positions

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: sampled-bracket threshold refinement (selection engine).
+
+The ``sampled`` selector (DESIGN.md §16) splits threshold selection into a
+cheap host-side estimate and a short on-chip refinement:
+
+1. host (pure jnp, O(n·sample_rate)): strided magnitude subsample -> bracket
+   ``(lo, hi)`` around tau from the sample's order statistics
+   (``core/selection.sample_bracket`` — count-based bisection on the sample,
+   never a sort, so the whole pipeline's jaxpr is sort-free);
+2. kernel (this file): each VMEM-resident row clamps the bracket so the
+   bisection invariant ``count(>= lo) >= k > count(>= hi)`` provably holds on
+   the FULL row, then runs ``refine_iters`` compare+count sweeps —
+   ``refine_iters`` (default 16) instead of the full-range ``BISECT_ITERS``
+   (48) because the sampled bracket already spans a narrow value interval.
+
+The kernel body calls ``core/selection.refine_bracket`` directly: the
+pure-jnp reference selector and this fused path run literally the same
+arithmetic, so cross-backend payloads stay bitwise-comparable in interpret
+mode (tests/test_selection.py).
+
+Outputs per row match ``threshold_pallas``: ``tau`` (smallest kept
+magnitude, count(>= tau) >= k guaranteed by the clamp) and ``count``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import selection
+from repro.kernels.runtime import resolve_interpret
+
+__all__ = ["sampled_threshold_pallas", "sampled_select"]
+
+
+def _sampled_body(mag_ref, lo_ref, hi_ref, tau_ref, count_ref,
+                  *, k: int, iters: int):
+    mag = mag_ref[...]  # (block_rows, cols)
+    lo = lo_ref[...][:, 0]
+    hi = hi_ref[...][:, 0]
+    tau = selection.refine_bracket(mag, lo, hi, k, iters)
+    count = jnp.sum(mag >= tau[:, None], axis=-1)
+    tau_ref[...] = tau[:, None]
+    count_ref[...] = count[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "refine_iters",
+                                             "block_rows", "interpret"))
+def sampled_threshold_pallas(
+    mag2d: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    *,
+    k: int,
+    refine_iters: int = selection.DEFAULT_REFINE_ITERS,
+    block_rows: int = 8,
+    interpret: bool = None,
+):
+    """(rows, cols) magnitudes + estimated bracket -> (tau (rows,1), count).
+
+    ``lo``/``hi`` are per-row bracket estimates (any shape reshapeable to
+    (rows, 1)); rows where the estimate violates the bisection invariant
+    fall back to the full [0, nextafter(max)] range in-kernel.
+    """
+    interpret = resolve_interpret(interpret)
+    rows, cols = mag2d.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    edge = lambda: pl.BlockSpec((block_rows, 1), lambda i: (i, 0),
+                                memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        functools.partial(_sampled_body, k=k, iters=refine_iters),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cols), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            edge(), edge(),
+        ],
+        out_specs=[edge(), edge()],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+            jax.ShapeDtypeStruct((rows, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mag2d.astype(jnp.float32),
+      lo.reshape(rows, 1).astype(jnp.float32),
+      hi.reshape(rows, 1).astype(jnp.float32))
+
+
+def sampled_select(
+    mag2d: jnp.ndarray,
+    *,
+    k: int,
+    sample_rate: float = selection.DEFAULT_SAMPLE_RATE,
+    refine_iters: int = selection.DEFAULT_REFINE_ITERS,
+    seed: int = 0,
+    interpret: bool = None,
+):
+    """Full sampled selection: (tau (rows,1) f32, count (rows,1) i32).
+
+    Drop-in for ``ops.threshold_select`` under ``selector=sampled`` — the
+    sample/bracket stage runs as plain jnp (it touches ~sample_rate of the
+    data), the full-row clamp+refine runs in the Pallas kernel.
+    """
+    sample = selection.strided_sample(mag2d, sample_rate, seed)
+    lo, hi = selection.sample_bracket(sample, k, mag2d.shape[-1])
+    return sampled_threshold_pallas(
+        mag2d, lo, hi, k=k, refine_iters=refine_iters, interpret=interpret)

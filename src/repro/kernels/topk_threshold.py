@@ -22,40 +22,26 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.core.selection import BISECT_ITERS
 from repro.kernels.runtime import resolve_interpret
+from repro.core import selection
 
 __all__ = ["threshold_pallas", "BISECT_ITERS"]
 
-# enough sweeps that lo/hi reach ADJACENT f32 values even when tau sits far
-# below the row max (the interval halves from ~max each sweep; 48 covers
-# tau >= max * 2^-24, the f32 mantissa range).  Short of adjacency the kept
-# count can exceed k without a genuine bitwise tie — at 30 iterations a tau
-# near max*1e-3 leaves a ~2^-30·max window spanning several representable
-# values, and backend code parity (DESIGN.md §13) would break data-dependently.
-# Shared with fused_compress's in-kernel (tau=None) search so the two
-# bisections can never desynchronize.
-BISECT_ITERS = 48
+# BISECT_ITERS now lives in core/selection.py (the selection engine's shared
+# math, DESIGN.md §16) and is re-exported here for back-compat; the kernel
+# body below calls selection.bisect_tau so the pure-jnp bisect selector and
+# this kernel can never desynchronize.
 _BISECT_ITERS = BISECT_ITERS
 
 
 def _threshold_body(mag_ref, tau_ref, count_ref, *, k: int):
     mag = mag_ref[...]  # (block_rows, cols)
-    # invariant: count(>= lo) >= k, count(>= hi) < k
-    hi = jnp.max(mag, axis=-1) * 1.0000002 + 1e-30  # strictly above max
-    lo = jnp.zeros_like(hi)
-
-    def body(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        count = jnp.sum(mag >= mid[:, None], axis=-1)
-        feasible = count >= k  # mid keeps at least the budget
-        new_lo = jnp.where(feasible, mid, lo)
-        new_hi = jnp.where(feasible, hi, mid)
-        return new_lo, new_hi
-
-    lo, hi = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi))
-    # lower edge: guarantees count >= k (never drops below budget)
-    tau = lo
+    # upper bracket = one representable f32 above the row max (nextafter via
+    # bitcast+1, clamped to FLT_MAX) so the count(>= hi) < k invariant holds
+    # exactly for denormal and near-overflow rows; lower edge tau guarantees
+    # count >= k (never drops below budget)
+    tau = selection.bisect_tau(mag, k)
     count = jnp.sum(mag >= tau[:, None], axis=-1)
     tau_ref[...] = tau[:, None]
     count_ref[...] = count[:, None].astype(jnp.int32)

@@ -21,6 +21,11 @@ model family (paper sections in brackets):
   (stacked single collective vs backprop-interleaved readiness streaming,
   DESIGN.md §15) trace BITWISE-identical loss curves (atol 0 on CPU: the
   schedule reorders dispatch, never arithmetic).
+* ``sampled_selector_matches_sort`` — runs differing ONLY in top-k selector
+  (exact sort vs O(n) sampled threshold, DESIGN.md §16) reach final losses
+  within ``loss_tol`` of each other: the selector perturbs the kept set by a
+  few near-tau coefficients, so the claim is convergence-equivalence under
+  the same tolerance the theta<=0.7 compression claim uses, not bitwise.
 * ``assumption31`` — every probed step's live-gradient reconstruction obeys
   ``err <= 1.05*sqrt(theta) + quant_margin`` (the provable sqrt(theta) energy
   bound of DESIGN.md §6 plus the range-quantizer's relative-error envelope),
@@ -161,6 +166,22 @@ def evaluate_results(
                   f"backend: {div:.2e} (atol {tol.backend_atol})")
         else:
             claim(f"{m}:backends_identical", False, "missing pallas-backend run")
+
+        # selection engine (DESIGN.md §16): the sampled selector changes the
+        # kept SET (a few near-tau coefficients), not the payload shape, so
+        # the contract is convergence within the theta<=0.7 loss tolerance —
+        # the same envelope the compression itself gets — not bitwise curves.
+        sampled = _named(runs, f"{m}_fft_theta0.7_sampled")
+        if t07 and sampled:
+            f7 = _final(t07, tol.final_tail)
+            fs = _final(sampled, tol.final_tail)
+            gap = _rel_gap(fs, f7)
+            claim(f"{m}:sampled_selector_matches_sort", gap <= tol.loss_tol,
+                  f"final sort-selector {f7:.4f} vs sampled {fs:.4f} "
+                  f"(gap {gap:+.2%}, tol {tol.loss_tol:.0%})")
+        else:
+            claim(f"{m}:sampled_selector_matches_sort", False,
+                  "missing sampled-selector run")
 
         b_stacked = _named(runs, f"{m}_fft_theta0.7_bucketed_stacked")
         b_streamed = _named(runs, f"{m}_fft_theta0.7_bucketed_streamed")

@@ -117,14 +117,14 @@ def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
         quantize=spec.quantize, bucket_bytes=spec.bucket_bytes,
         transport=spec.transport, error_feedback=spec.error_feedback,
         backend=spec.backend, stacked=spec.stacked,
-        schedule=spec.exchange_schedule,
+        schedule=spec.exchange_schedule, selector=spec.selector,
     )
 
 
 def _compressor_at(spec: ExperimentSpec, theta: float):
     """The compressor a worker runs at this theta (for probe + wire model)."""
     cfg = FFTCompressorConfig(theta=theta, quantize=spec.quantize,
-                              backend=spec.backend)
+                              backend=spec.backend, selector=spec.selector)
     if spec.reducer == "fft":
         return FFTCompressor(cfg)
     if spec.reducer == "timedomain":

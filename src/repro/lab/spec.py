@@ -53,6 +53,9 @@ class ExperimentSpec:
     # stacked | streamed | auto.  Named exchange_schedule because `schedule`
     # is this spec's THETA schedule; maps to ReducerConfig.schedule.
     exchange_schedule: str = "stacked"
+    # selection engine (DESIGN.md §16): sort | sampled | bisect | auto top-k
+    # selector; maps to ReducerConfig.selector
+    selector: str = "sort"
     # Assumption 3.1 probe cadence: 1 = every step (smoke default); 0 = off
     probe_every: int = 1
 
@@ -69,6 +72,10 @@ class ExperimentSpec:
         if self.exchange_schedule not in ("stacked", "streamed", "auto"):
             raise ValueError(
                 f"unknown exchange_schedule {self.exchange_schedule!r}")
+        # mirrors core/selection.SELECTOR_NAMES (same jax-free constraint;
+        # tests/test_selection.py asserts the lists agree)
+        if self.selector not in ("sort", "sampled", "bisect", "auto"):
+            raise ValueError(f"unknown selector {self.selector!r}")
         if self.exchange_schedule == "streamed" and self.transport == "allgather":
             raise ValueError(
                 "exchange_schedule='streamed' needs a bucketed transport "
@@ -147,6 +154,15 @@ def _matrix(model: str, *, workers: int, steps: int, seed: int = 0) -> List[Expe
     # choice, never a numerics choice.
     specs.append(ExperimentSpec(
         name=f"{model}_fft_theta0.7_pallas", theta=0.7, backend="pallas",
+        schedule={"kind": "constant", "theta": 0.7}, **base))
+    # selection-engine sweep axis (DESIGN.md §16): the theta0.7 config with
+    # the O(n) sampled-threshold selector replacing the exact sort.  The
+    # evaluator's sampled_selector_matches_sort claim requires this curve to
+    # track the sort row within the theta<=0.7 loss tolerance — the selector
+    # trades exactness of the kept SET (never payload shape) for speed, so
+    # convergence, not bitwise equality, is the contract.
+    specs.append(ExperimentSpec(
+        name=f"{model}_fft_theta0.7_sampled", theta=0.7, selector="sampled",
         schedule={"kind": "constant", "theta": 0.7}, **base))
     # exchange-schedule sweep axis (overlap engine, DESIGN.md §15): the same
     # bucketed config dispatched stacked (one collective after backprop) vs

@@ -69,6 +69,15 @@ def main(argv=None):
                          "cost-model policy (auto)")
     ap.add_argument("--stream-groups", type=int, default=None,
                     help="streamed dispatch groups (default: one per bucket)")
+    ap.add_argument("--selector", default="auto",
+                    choices=["sort", "sampled", "bisect", "auto"],
+                    help="top-k selection engine (DESIGN.md §16): exact "
+                         "lax.top_k sort, O(n) DGC-style sampled threshold, "
+                         "full value-axis bisection, or auto (sampled on "
+                         "wide rows)")
+    ap.add_argument("--sample-rate", type=float, default=1.0 / 64.0,
+                    help="sampled selector: fraction of magnitudes in the "
+                         "tau-estimation subsample")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -99,6 +108,8 @@ def main(argv=None):
             stacked=not args.no_stacked,
             schedule=args.schedule,
             stream_groups=args.stream_groups,
+            selector=args.selector,
+            sample_rate=args.sample_rate,
         )
     step_cfg = StepConfig(
         mode=args.mode,

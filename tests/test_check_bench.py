@@ -29,7 +29,7 @@ def test_committed_artifact_passes(committed):
 
 
 def test_missing_sections_reported(committed):
-    for section in ("backends", "records", "schedules"):
+    for section in ("backends", "records", "schedules", "selectors"):
         data = copy.deepcopy(committed)
         del data[section]
         errors = check_bench.check(data)
@@ -89,6 +89,32 @@ def test_schedules_require_a_streamed_deep_model_row(committed):
         data = copy.deepcopy(committed)
         del data["schedules"][0][key]
         assert any(key in e for e in check_bench.check(data)), key
+
+
+def test_dropped_selector_record_caught(committed):
+    data = copy.deepcopy(committed)
+    data["selectors"] = [r for r in data["selectors"]
+                         if r["selector"] != "sampled"]
+    assert any("sampled" in e for e in check_bench.check(data))
+    for key in check_bench.SELECTOR_KEYS:
+        data = copy.deepcopy(committed)
+        del data["selectors"][0][key]
+        assert any(key in e for e in check_bench.check(data)), key
+
+
+def test_sampled_selector_must_not_lose_to_sort(committed):
+    data = copy.deepcopy(committed)
+    big = {r["selector"]: r for r in data["selectors"]
+           if r["n_elems"] == check_bench.SELECTOR_N_ELEMS}
+    assert {"sort", "sampled"} <= set(big), "lost the 64 MB selector pair"
+    big["sampled"]["compress_steady_us"] = (
+        big["sort"]["compress_steady_us"] * 2.0)
+    assert any("regressed" in e for e in check_bench.check(data))
+    # shrinking the buffer away from the reference size is also caught
+    data = copy.deepcopy(committed)
+    for r in data["selectors"]:
+        r["n_elems"] = 1 << 20
+    assert any("64 MB" in e for e in check_bench.check(data))
 
 
 def test_bad_auto_schedule_value(committed):

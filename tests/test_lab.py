@@ -41,6 +41,8 @@ def test_smoke_matrix_covers_the_claims():
         # exchange-schedule sweep axis (DESIGN.md §15)
         assert f"{model}_fft_theta0.7_bucketed_stacked" in names
         assert f"{model}_fft_theta0.7_bucketed_streamed" in names
+        # selection-engine sweep axis (DESIGN.md §16)
+        assert f"{model}_fft_theta0.7_sampled" in names
 
 
 def test_spec_rejects_bad_configs():
@@ -61,7 +63,7 @@ def test_spec_rejects_bad_configs():
 def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
               err_ratio=0.5, lr=3e-3, backend="reference",
               transport="allgather", bucket_bytes=None,
-              exchange_schedule="stacked"):
+              exchange_schedule="stacked", selector="sort"):
     records = []
     for i, loss in enumerate(losses):
         rec = {"step": i, "loss": loss, "grad_sq": max(loss - 1.0, 0.05),
@@ -77,7 +79,7 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
             name=name, model=model, reducer=reducer, theta=theta,
             schedule=schedule, lr=lr, backend=backend, transport=transport,
             bucket_bytes=bucket_bytes,
-            exchange_schedule=exchange_schedule).to_dict(),
+            exchange_schedule=exchange_schedule, selector=selector).to_dict(),
         "records": records,
         "n_elems": 10000,
         "entropy_floor": 1.0,
@@ -87,12 +89,14 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
 
 
 def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
-                 pallas_losses=None, streamed_losses=None):
+                 pallas_losses=None, streamed_losses=None,
+                 sampled_losses=None):
     dense = [4.0, 3.0, 2.5, 2.2, 2.0, 2.0]
     t07 = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02]
     trio = trio_losses if trio_losses is not None else t07
     pallas = pallas_losses if pallas_losses is not None else t07
     streamed = streamed_losses if streamed_losses is not None else t07
+    sampled = sampled_losses if sampled_losses is not None else t07
     sched = {"kind": "constant", "theta": 0.7}
     return {
         "lm_dense": _fake_run("lm_dense", None, dense),
@@ -117,13 +121,16 @@ def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
             "lm_fft_theta0.7_bucketed_streamed", "fft", streamed,
             schedule=sched, transport="sequenced", bucket_bytes=4096 * 4,
             exchange_schedule="streamed"),
+        "lm_fft_theta0.7_sampled": _fake_run(
+            "lm_fft_theta0.7_sampled", "fft", sampled, schedule=sched,
+            selector="sampled"),
     }
 
 
 def test_evaluator_passes_a_good_matrix():
     claims, ok = evaluate_results(_matrix_runs(), Tolerances(final_tail=2))
     assert ok, [c.to_dict() for c in claims if not c.passed]
-    assert len(claims) == 8  # one model family x eight claims
+    assert len(claims) == 9  # one model family x nine claims
 
 
 def test_evaluator_catches_theta09_not_degrading():
@@ -171,6 +178,28 @@ def test_evaluator_catches_streamed_divergence():
     del runs["lm_fft_theta0.7_bucketed_streamed"]
     claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
     assert "lm:streamed_identical" in {c.name for c in claims if not c.passed}
+
+
+def test_evaluator_catches_sampled_selector_divergence():
+    """sampled_selector_matches_sort is a loss-TOLERANCE claim (the selector
+    may trade a few near-tau coefficients), so only a gap beyond loss_tol
+    fails it; a missing sampled row is a failure, not a silent skip."""
+    sampled = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 * 1.2]  # 20% >> 5% tol
+    claims, ok = evaluate_results(
+        _matrix_runs(sampled_losses=sampled), Tolerances(final_tail=1))
+    assert "lm:sampled_selector_matches_sort" in {
+        c.name for c in claims if not c.passed}
+    # inside the tolerance: small drift must PASS (not a bitwise claim)
+    sampled = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 * 1.01]
+    claims, ok = evaluate_results(
+        _matrix_runs(sampled_losses=sampled), Tolerances(final_tail=1))
+    assert "lm:sampled_selector_matches_sort" not in {
+        c.name for c in claims if not c.passed}
+    runs = _matrix_runs()
+    del runs["lm_fft_theta0.7_sampled"]
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
+    assert "lm:sampled_selector_matches_sort" in {
+        c.name for c in claims if not c.passed}
 
 
 def test_evaluator_catches_assumption31_violation():
@@ -294,6 +323,7 @@ def test_lab_smoke_matrix_end_to_end(tmp_path):
         for claim in ("theta0.7_matches_dense", "theta0.9_degrades",
                       "mixed_recovers", "transports_identical",
                       "backends_identical", "streamed_identical",
+                      "sampled_selector_matches_sort",
                       "assumption31", "thm34_envelope"):
             assert f"{model}:{claim}" in claim_names, claim_names
     # per-step evidence is in the artifact (curves + probes + wire model)

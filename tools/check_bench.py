@@ -19,6 +19,11 @@ efficiency numbers) hides a regression from every later PR.  Checks:
   one deep-model row must record ``auto_schedule == "streamed"`` with
   ``overlap_efficiency > 0`` — the acceptance evidence that the overlap
   engine's point (hiding exchange behind backprop) survives in the model.
+* ``selectors`` — the selection-engine comparison (DESIGN.md §16): records
+  for both the ``sort`` and ``sampled`` selectors at the large (64 MB)
+  buffer, and the sampled selector's steady-state compress must not be
+  slower than sort's — the acceptance evidence that O(n) sampled-threshold
+  selection keeps steady-state compression kernel-bound.
 
 Usage: ``python tools/check_bench.py [path-to-BENCH_throughput.json]``;
 exits nonzero listing every violation (not just the first).
@@ -46,9 +51,25 @@ RECORD_KEYS = (
     "model_n_collectives_streamed",
     "overlap_efficiency",
     "auto_schedule",
+    # selection engine (DESIGN.md §16)
+    "selector",
+    "sample_rate",
+    "tau_refine_iters",
 )
 
 BACKEND_KEYS = ("compress_us", "decompress_us", "n_elems")
+
+SELECTOR_KEYS = (
+    "selector",
+    "sample_rate",
+    "tau_refine_iters",
+    "n_elems",
+    "compress_compile_us",
+    "compress_steady_us",
+)
+
+# the selector comparison's reference buffer: 16M floats = 64 MB
+SELECTOR_N_ELEMS = 1 << 24
 
 SCHEDULE_KEYS = (
     "profile",
@@ -146,9 +167,46 @@ def check_schedules(data: dict) -> List[str]:
     return errors
 
 
+def check_selectors(data: dict) -> List[str]:
+    errors = []
+    selectors = data.get("selectors")
+    if not selectors:
+        return ["missing 'selectors' field (selection-engine comparison)"]
+    names = {r.get("selector") for r in selectors}
+    for missing in sorted({"sort", "sampled"} - names):
+        errors.append(f"selectors field lacks a record for {missing!r}")
+    for r in selectors:
+        for key in SELECTOR_KEYS:
+            if key not in r:
+                errors.append(
+                    f"selector record {r.get('selector')!r} lacks {key!r}")
+    big = {
+        r.get("selector"): r for r in selectors
+        if r.get("n_elems") == SELECTOR_N_ELEMS
+    }
+    if {"sort", "sampled"} - set(big):
+        errors.append(
+            f"selectors field lacks the sort/sampled pair at the "
+            f"{SELECTOR_N_ELEMS}-element (64 MB) reference buffer")
+    else:
+        t_sort = big["sort"].get("compress_steady_us")
+        t_samp = big["sampled"].get("compress_steady_us")
+        if not all(isinstance(t, (int, float)) for t in (t_sort, t_samp)):
+            errors.append(
+                f"selector 64 MB records lack numeric compress_steady_us "
+                f"(sort {t_sort!r}, sampled {t_samp!r})")
+        elif t_samp > t_sort:
+            errors.append(
+                f"sampled selector steady-state compress ({t_samp:.0f} us) is "
+                f"slower than sort ({t_sort:.0f} us) at 64 MB — the O(n) "
+                f"selection win regressed")
+    return errors
+
+
 def check(data: dict) -> List[str]:
     """All violations in one pass (empty list == schema ok)."""
-    return check_backends(data) + check_records(data) + check_schedules(data)
+    return (check_backends(data) + check_records(data)
+            + check_schedules(data) + check_selectors(data))
 
 
 def main(argv=None) -> int:
@@ -168,8 +226,9 @@ def main(argv=None) -> int:
     n_back = len(data.get("backends", []))
     n_rec = len(data.get("records", []))
     n_sched = len(data.get("schedules", []))
+    n_sel = len(data.get("selectors", []))
     print(f"schema ok: {n_back} backend records, {n_rec} sweep records, "
-          f"{n_sched} schedule-policy records")
+          f"{n_sched} schedule-policy records, {n_sel} selector records")
     return 0
 
 
