@@ -33,7 +33,14 @@ modeled exchange time hidden behind backprop) plus the auto policy's pick.
 A separate ``schedules`` section runs the policy over model-registry
 profiles (tiny lab model -> deep registry archs), which is where the
 "streamed wins on deep models, stacked on latency-bound ones" claim is
-recorded per PR.  ``tools/check_bench.py`` schema-guards all of it in CI.
+recorded per PR.
+
+Calibrated cost model (DESIGN.md §17): a ``calibration`` section runs the
+real profiling pass (``comms/calibrate.py``) on this host's mesh — fitted
+α–β per collective family, measured stage throughputs — and records the
+auto policy's verdict per model profile under the static constants vs under
+the measured profile.  ``tools/check_bench.py`` schema-guards all of it in
+CI.
 """
 
 from __future__ import annotations
@@ -259,6 +266,8 @@ def _sweep_rows(comp: FFTCompressor) -> list:
     rows.extend(selector_rows)
     schedule_rows, schedule_records = _schedule_rows(comp)
     rows.extend(schedule_rows)
+    calibration_rows, calibration_section = _calibration_rows(comp)
+    rows.extend(calibration_rows)
     with open(BENCH_JSON, "w") as f:
         json.dump({"benchmark": "throughput_exchange_sweep",
                    "theta": comp.config.theta,
@@ -266,7 +275,8 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                    "records": records,
                    "backends": backend_records,
                    "selectors": selector_records,
-                   "schedules": schedule_records}, f, indent=2)
+                   "schedules": schedule_records,
+                   "calibration": calibration_section}, f, indent=2)
     return rows
 
 
@@ -329,6 +339,80 @@ def _schedule_rows(comp: FFTCompressor) -> tuple:
             "auto_schedule": decision.schedule,
         })
     return rows, records
+
+
+def _calibration_rows(comp: FFTCompressor) -> tuple:
+    """Calibrated cost model (DESIGN.md §17): run the real profiling pass on
+    this host's mesh and record (a) the fitted α–β per collective family,
+    the measured stage throughputs and the backprop-rate default, and (b)
+    the auto policy's verdict per model profile under the STATIC constants
+    vs under the MEASURED profile — the per-PR record of where calibration
+    changes the decision.  The whole section is schema-guarded by
+    ``tools/check_bench.py`` (fitted α > 0, β > 0, both verdicts present).
+    """
+    import dataclasses
+
+    from repro.comms import calibrate
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    profile = calibrate.calibrate(
+        mesh, "data", sizes_bytes=calibrate.SMOKE_SIZES_BYTES,
+        throughput_elems=1 << 18)
+    rows, decisions = [], []
+    for name, n_params, batch_tokens, bucket_bytes in SCHEDULE_PROFILES:
+        m_bytes = 4.0 * n_params
+        layout = bucketing.build_layout(n_params, bucket_bytes)
+        plan = scheduler.build_plan(layout)
+        payload_bits = cm.bucketed_payload_bits(
+            comp.wire_bits, layout.sizes(), "sequenced", stacked=True,
+            chunk=layout.chunk)
+        static = scheduler.choose_schedule(
+            plan, m_bytes, payload_bits, workers=SWEEP_WORKERS,
+            transport="sequenced",
+            backprop_s=scheduler.modeled_backprop_s(n_params, batch_tokens))
+        calibrated = scheduler.choose_schedule(
+            plan, m_bytes, payload_bits, workers=SWEEP_WORKERS,
+            transport="sequenced",
+            backprop_s=profile.backprop_s(n_params, batch_tokens),
+            profile=profile)
+        rows.append(Row(
+            name=f"calibration_decision_{name}",
+            auto_static=static.schedule,
+            auto_calibrated=calibrated.schedule,
+            stacked_step_ms=round(calibrated.stacked_step_s * 1e3, 3),
+            streamed_step_ms=round(calibrated.streamed_step_s * 1e3, 3),
+        ))
+        decisions.append({
+            "profile": name,
+            "n_params": n_params,
+            "batch_tokens": batch_tokens,
+            "workers": SWEEP_WORKERS,
+            "transport": "sequenced",
+            "auto_static": static.schedule,
+            "auto_calibrated": calibrated.schedule,
+            "model_step_ms_stacked_calibrated": calibrated.stacked_step_s * 1e3,
+            "model_step_ms_streamed_calibrated": calibrated.streamed_step_s * 1e3,
+            "overlap_efficiency_calibrated": calibrated.overlap_efficiency,
+        })
+    for fit in profile.fits:
+        rows.append(Row(
+            name=f"calibration_fit_{fit.family}",
+            alpha_us=round(fit.alpha_s * 1e6, 2),
+            link_gbps=round(fit.t_comm / 1e9, 3),
+            n_points=fit.n_points,
+        ))
+    section = {
+        "platform": profile.key.platform,
+        "jax_version": profile.key.jax_version,
+        "mesh": [list(ax) for ax in profile.key.mesh],
+        "decision_workers": SWEEP_WORKERS,
+        "fits": [f.to_dict() for f in profile.fits],
+        "throughputs": dataclasses.asdict(profile.throughputs),
+        "backprop_flops_per_s": profile.backprop_flops_per_s,
+        "decisions": decisions,
+    }
+    return rows, section
 
 
 def run() -> list:

@@ -1,0 +1,675 @@
+"""Cost-model calibration: measure α–β and backprop on the live mesh.
+
+The §III-D/§11/§15 pricing functions (``cost_model.py``) and the auto
+schedule policy (``scheduler.choose_schedule``) stand on four numbers:
+collective launch latency α, link byte-rate (β⁻¹), the compression-stage
+``Throughputs`` table, and the backward-pass FLOP rate.  Until this module,
+all four were hardcoded napkin figures (``COLLECTIVE_ALPHA_S``, ``TPU_V5E``,
+``BACKPROP_FLOPS_PER_S``) — fiction on any particular host.  This module
+makes them measurements (DESIGN.md §17):
+
+* ``benchmark_collectives`` times REAL collectives (``all_gather`` for the
+  gather transports, ``psum`` for the spectrum transport) inside a jitted
+  ``shard_map`` over the live mesh, at a geometric sweep of message sizes —
+  the SSFusion-style ``_benchmark_communication`` startup pass;
+* ``fit_alpha_beta`` least-squares-fits the linear α–β (latency–bandwidth)
+  model ``t(wire_bytes) = α + β·wire_bytes`` per collective family, the
+  standard measured basis for scheduling decisions (arXiv 2003.03009);
+* ``measure_throughputs`` times the jitted compression stages (quantize,
+  FFT, pack, select) on this host and rebuilds the §III-D table from the
+  measured byte-rates;
+* ``measure_backprop_rate`` times the backward pass of the ACTUAL model and
+  converts it to a FLOP rate via the 4·N·T backward-FLOP model, so
+  ``modeled_backprop_s`` stops assuming an MXU that may not exist.
+
+The result is a frozen :class:`CostProfile`.  It persists as a JSON artifact
+keyed on (platform, mesh shape, model, jax version) — production jobs load
+it (``CostProfile.load``) instead of re-profiling; a key mismatch (different
+mesh, different jax, different model) raises :class:`ProfileKeyMismatch` so
+a stale calibration can never silently price a new topology.
+
+Threading: ``scheduler.choose_schedule``/``resolve_schedule``,
+``cost_model.exchange_time_s``/``streamed_exchange_time_s`` all accept
+``profile=``; ``train/step.py`` loads the artifact named by
+``StepConfig.calibration_path``; ``launch/train.py --calibrate`` runs this
+pass at startup on the live mesh.  Without a profile every call site keeps
+the documented uncalibrated defaults bit-for-bit.
+
+jax is imported inside the measurement functions only (the priceable values
+— ``CostProfile``, the α–β fit — are host-side pure Python like
+``cost_model``), so the CLI (``python -m repro.comms.calibrate --devices N``)
+can pin a fake host-device count before the jax BACKEND initializes: the
+import chain loads jax but nothing in it touches devices, and XLA reads
+``XLA_FLAGS`` at first backend use, not at import.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.comms import cost_model
+
+__all__ = [
+    "ARTIFACT_VERSION",
+    "COLLECTIVE_FAMILIES",
+    "CostProfile",
+    "LinkFit",
+    "ProfileKey",
+    "ProfileKeyMismatch",
+    "UNCALIBRATED",
+    "benchmark_collectives",
+    "calibrate",
+    "collective_family",
+    "fit_alpha_beta",
+    "load_or_calibrate",
+    "load_profile_for",
+    "measure_backprop_rate",
+    "measure_throughputs",
+    "profile_key",
+]
+
+ARTIFACT_VERSION = 1
+
+# Collective families the transports lower to: the gather transports
+# (allgather/sequenced) ride ``jax.lax.all_gather``; the spectrum transport
+# rides ``jax.lax.psum``.  One α–β fit per family.
+COLLECTIVE_FAMILIES = ("gather", "psum")
+
+_FAMILY_FOR_TRANSPORT = {
+    "allgather": "gather",
+    "sequenced": "gather",
+    "psum": "psum",
+}
+
+# Fit floors: CPU-host timings are noisy enough that an unconstrained
+# least-squares intercept/slope can come out non-positive; a profile must
+# stay usable as a divisor (and check_bench requires α > 0, β > 0).
+ALPHA_FLOOR_S = 1e-9
+BETA_FLOOR_S_PER_BYTE = 1e-15  # 1 PB/s bandwidth cap
+
+# Default geometric size sweep (per-worker payload bytes): 64 KiB .. 16 MiB,
+# 4x steps — small enough to finish in seconds on a CPU host, wide enough
+# that the bandwidth term dominates the top and the latency term the bottom.
+DEFAULT_SIZES_BYTES = tuple(1 << p for p in range(16, 25, 2))
+SMOKE_SIZES_BYTES = (1 << 14, 1 << 16, 1 << 18)
+
+
+def collective_family(transport: str) -> str:
+    """The α–β fit family a transport's collective belongs to."""
+    try:
+        return _FAMILY_FOR_TRANSPORT[transport]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {transport!r}; expected one of "
+            f"{tuple(_FAMILY_FOR_TRANSPORT)}") from None
+
+
+class ProfileKeyMismatch(ValueError):
+    """A persisted calibration artifact does not match the live system."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileKey:
+    """What a calibration is valid FOR.  All four fields must match for a
+    persisted artifact to be loadable: α–β depend on platform + mesh, the
+    backprop rate on the model, and kernel/collective lowering on the jax
+    version."""
+
+    platform: str  # jax.default_backend()
+    mesh: Tuple[Tuple[str, int], ...]  # ((axis, size), ...) in mesh order
+    model: str  # "<ClassName>/<param_count>" or "none"
+    jax_version: str
+
+    def to_dict(self) -> dict:
+        return {
+            "platform": self.platform,
+            "mesh": [list(ax) for ax in self.mesh],
+            "model": self.model,
+            "jax_version": self.jax_version,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ProfileKey":
+        return cls(
+            platform=d["platform"],
+            mesh=tuple((str(a), int(s)) for a, s in d["mesh"]),
+            model=d["model"],
+            jax_version=d["jax_version"],
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkFit:
+    """Fitted α–β model of one collective family: t(wire_bytes) = α + β·b.
+
+    ``wire_bytes`` is the cost model's per-worker wire volume for that
+    collective (P·payload for gather, 2·(P-1)/P·buffer for psum), so
+    ``1/β`` plugs directly into the pricing functions as ``t_comm``.
+    """
+
+    family: str  # "gather" | "psum"
+    alpha_s: float
+    beta_s_per_byte: float
+    n_points: int = 0
+
+    def __post_init__(self):
+        if self.family not in COLLECTIVE_FAMILIES:
+            raise ValueError(
+                f"unknown collective family {self.family!r}; expected one of "
+                f"{COLLECTIVE_FAMILIES}")
+        if self.alpha_s <= 0.0 or self.beta_s_per_byte <= 0.0:
+            raise ValueError(
+                f"alpha/beta must be positive, got α={self.alpha_s} "
+                f"β={self.beta_s_per_byte}")
+
+    @property
+    def t_comm(self) -> float:
+        """Fitted link byte-rate (bytes/second)."""
+        return 1.0 / self.beta_s_per_byte
+
+    def time_s(self, wire_bytes: float) -> float:
+        return self.alpha_s + self.beta_s_per_byte * wire_bytes
+
+    def to_dict(self) -> dict:
+        return dict(dataclasses.asdict(self), t_comm_bytes_per_s=self.t_comm)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostProfile:
+    """A complete, frozen calibration of the cost model for one system.
+
+    Every pricing input the §11/§15 models consume, measured (or, for
+    :data:`UNCALIBRATED`, the documented static defaults).  Hashable pure
+    value: equal profiles price identically, so decision functions stay pure
+    functions of (config, profile).
+    """
+
+    key: ProfileKey
+    fits: Tuple[LinkFit, ...]  # one per COLLECTIVE_FAMILIES entry
+    throughputs: cost_model.Throughputs
+    backprop_flops_per_s: float
+    calibrated: bool = True  # False: the static-defaults profile
+
+    def __post_init__(self):
+        families = tuple(f.family for f in self.fits)
+        if sorted(families) != sorted(COLLECTIVE_FAMILIES):
+            raise ValueError(
+                f"profile needs exactly one fit per family "
+                f"{COLLECTIVE_FAMILIES}, got {families}")
+        if self.backprop_flops_per_s <= 0.0:
+            raise ValueError(
+                f"backprop_flops_per_s must be positive, got "
+                f"{self.backprop_flops_per_s}")
+
+    # -- pricing accessors (what cost_model/scheduler consume) --------------
+
+    def fit_for(self, transport: str) -> LinkFit:
+        family = collective_family(transport)
+        return next(f for f in self.fits if f.family == family)
+
+    def alpha_s(self, transport: str) -> float:
+        return self.fit_for(transport).alpha_s
+
+    def t_comm(self, transport: str) -> float:
+        return self.fit_for(transport).t_comm
+
+    def backprop_s(self, n_params: int, batch_tokens: int) -> float:
+        """Backward-pass wall time at the measured rate (4 FLOPs/param/token
+        — the standard 6·N·T split's backward share)."""
+        return 4.0 * float(n_params) * float(batch_tokens) / self.backprop_flops_per_s
+
+    # -- persistence --------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "version": ARTIFACT_VERSION,
+            "key": self.key.to_dict(),
+            "fits": [f.to_dict() for f in self.fits],
+            "throughputs": dataclasses.asdict(self.throughputs),
+            "backprop_flops_per_s": self.backprop_flops_per_s,
+            "calibrated": self.calibrated,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CostProfile":
+        if d.get("version") != ARTIFACT_VERSION:
+            raise ProfileKeyMismatch(
+                f"calibration artifact version {d.get('version')!r} != "
+                f"supported {ARTIFACT_VERSION}")
+        return cls(
+            key=ProfileKey.from_dict(d["key"]),
+            fits=tuple(
+                LinkFit(family=f["family"], alpha_s=f["alpha_s"],
+                        beta_s_per_byte=f["beta_s_per_byte"],
+                        n_points=int(f.get("n_points", 0)))
+                for f in d["fits"]),
+            throughputs=cost_model.Throughputs(
+                **{k: float(v) for k, v in d["throughputs"].items()}),
+            backprop_flops_per_s=float(d["backprop_flops_per_s"]),
+            calibrated=bool(d.get("calibrated", True)),
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2)
+
+    @classmethod
+    def load(cls, path: str, expect: Optional[ProfileKey] = None,
+             strict: bool = True) -> "CostProfile":
+        """Load a persisted artifact.  With ``expect`` and ``strict`` (the
+        default), a key mismatch raises :class:`ProfileKeyMismatch` — a
+        calibration measured on another platform/mesh/model/jax must never
+        silently price this one.  ``strict=False`` downgrades the mismatch
+        to acceptance (for offline analysis of foreign artifacts)."""
+        with open(path) as f:
+            profile = cls.from_dict(json.load(f))
+        if expect is not None and profile.key != expect:
+            msg = (f"calibration artifact at {path} was measured for "
+                   f"{profile.key}, but this system is {expect}")
+            if strict:
+                raise ProfileKeyMismatch(msg)
+        return profile
+
+
+# The documented static defaults as a profile: what every pricing call used
+# before calibration existed, and what profile=None still means.  Kept as a
+# value so code can treat "calibrated or not" uniformly.
+UNCALIBRATED = CostProfile(
+    key=ProfileKey(platform="static", mesh=(), model="none",
+                   jax_version="any"),
+    fits=(
+        LinkFit("gather", cost_model.COLLECTIVE_ALPHA_S,
+                1.0 / cost_model.NETWORKS["tpu-dcn-host"]),
+        LinkFit("psum", cost_model.COLLECTIVE_ALPHA_S,
+                1.0 / cost_model.NETWORKS["tpu-dcn-host"]),
+    ),
+    throughputs=cost_model.TPU_V5E,
+    backprop_flops_per_s=cost_model.BACKPROP_FLOPS_PER_S,
+    calibrated=False,
+)
+
+
+# ---------------------------------------------------------------------------
+# α–β fit
+# ---------------------------------------------------------------------------
+
+
+def fit_alpha_beta(wire_bytes: Sequence[float],
+                   times_s: Sequence[float]) -> Tuple[float, float]:
+    """Least-squares fit of ``t = α + β·bytes`` -> (alpha_s, beta_s_per_byte).
+
+    Closed-form simple linear regression; degenerate sweeps (fewer than two
+    distinct sizes — e.g. a 1-worker psum whose wire volume is 0 at every
+    size) fall back to α = mean(t) at the β floor.  Both coefficients are
+    clamped to positive floors so the fit always yields a usable profile
+    (noisy host timings can produce a negative intercept).
+    """
+    xs = [float(x) for x in wire_bytes]
+    ts = [float(t) for t in times_s]
+    if len(xs) != len(ts) or not xs:
+        raise ValueError(
+            f"need matching non-empty sweeps, got {len(xs)} sizes / "
+            f"{len(ts)} times")
+    n = len(xs)
+    mean_x = sum(xs) / n
+    mean_t = sum(ts) / n
+    var_x = sum((x - mean_x) ** 2 for x in xs)
+    if var_x <= 0.0:
+        alpha, beta = mean_t, BETA_FLOOR_S_PER_BYTE
+    else:
+        beta = sum((x - mean_x) * (t - mean_t)
+                   for x, t in zip(xs, ts)) / var_x
+        alpha = mean_t - beta * mean_x
+    return (max(alpha, ALPHA_FLOOR_S), max(beta, BETA_FLOOR_S_PER_BYTE))
+
+
+# ---------------------------------------------------------------------------
+# measurement passes (jax imported lazily: see module docstring)
+# ---------------------------------------------------------------------------
+
+
+def _median_time_s(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _modeled_wire_bytes(family: str, per_worker_bytes: int, workers: int) -> float:
+    """The cost model's per-worker wire volume for one timed collective —
+    the fit's x variable, so the fitted 1/β is directly the model's t_comm."""
+    if family == "gather":
+        return float(workers * per_worker_bytes)
+    return 2.0 * per_worker_bytes * (workers - 1) / workers  # ring allreduce
+
+
+def benchmark_collectives(
+    mesh,
+    axis: str,
+    sizes_bytes: Sequence[int] = DEFAULT_SIZES_BYTES,
+    *,
+    iters: int = 3,
+) -> Dict[str, List[Tuple[float, float]]]:
+    """Time real collectives on the live mesh at a geometric size sweep.
+
+    Returns ``{family: [(modeled_wire_bytes, seconds), ...]}`` for each
+    collective family — the direct input to :func:`fit_alpha_beta`.  Each
+    point times a jitted ``shard_map`` whose body is ONLY the collective
+    (all_gather / psum of a per-worker f32 buffer), median-of-``iters`` after
+    a compile+warmup call.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import jaxcompat as compat
+
+    workers = dict(mesh.shape)[axis]
+    key = jax.random.PRNGKey(0)
+    out: Dict[str, List[Tuple[float, float]]] = {f: [] for f in COLLECTIVE_FAMILIES}
+    for size in sizes_bytes:
+        n = max(1, int(size) // 4)
+        x = jax.random.normal(key, (workers, n), jnp.float32)
+        gather = compat.shard_map(
+            lambda v: jax.lax.all_gather(v[0], axis),
+            mesh, in_specs=P(axis), out_specs=P())
+        psum = compat.shard_map(
+            lambda v: jax.lax.psum(v[0], axis),
+            mesh, in_specs=P(axis), out_specs=P())
+        with compat.set_mesh(mesh):
+            t_gather = _median_time_s(jax.jit(gather), x, iters=iters)
+            t_psum = _median_time_s(jax.jit(psum), x, iters=iters)
+        out["gather"].append(
+            (_modeled_wire_bytes("gather", 4 * n, workers), t_gather))
+        out["psum"].append(
+            (_modeled_wire_bytes("psum", 4 * n, workers), t_psum))
+    return out
+
+
+def measure_throughputs(n_elems: int = 1 << 20, *,
+                        theta: float = 0.7) -> cost_model.Throughputs:
+    """Measured §III-D stage throughputs (bytes/s) on this host.
+
+    Times the SAME jitted stages the Fig. 15 benchmark times (quantize ->
+    t_m, chunked rfft -> t_f, index pack -> t_p, top-k select -> t_s), at a
+    calibration-sized buffer, and rebuilds the throughput table from the
+    measured byte-rates.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import fft as cfft
+    from repro.core import packing, sparsify
+    from repro.core.quantizer import RangeQuantConfig, encode, fit_quantizer
+
+    g = jax.random.normal(jax.random.PRNGKey(1), (n_elems,)) * 0.05
+    fft_fn = jax.jit(lambda x: cfft.chunked_rfft(x)[0])
+    freqs = fft_fn(g)
+    k = sparsify.keep_count(freqs.shape[-1], theta)
+    mag = jnp.abs(freqs)
+    select_fn = jax.jit(lambda m: sparsify.topk_select(m, k))
+    idx = select_fn(mag)
+    pack_fn = jax.jit(lambda f, i: packing.pack_by_indices(f, i))
+    q = fit_quantizer(-1.0, 1.0, RangeQuantConfig(8, 3))
+    vals = jnp.real(pack_fn(freqs, idx))
+    quant_fn = jax.jit(lambda v: encode(v, q))
+
+    def rate(fn, args, bytes_in):
+        return bytes_in / _median_time_s(fn, *args)
+
+    return cost_model.Throughputs(
+        t_m=rate(quant_fn, (vals,), 4 * vals.size),
+        t_f=rate(fft_fn, (g,), 4 * n_elems),
+        t_p=rate(pack_fn, (freqs, idx), 8 * freqs.size),
+        t_s=rate(select_fn, (mag,), 4 * mag.size),
+    )
+
+
+def measure_backprop_rate(model, params, batch, *,
+                          batch_tokens: Optional[int] = None,
+                          iters: int = 3) -> float:
+    """Measured backward-pass FLOP rate of the ACTUAL model (FLOP/s).
+
+    Times jitted ``grad(loss)`` on a real batch and converts the wall time
+    via the 4·N·T backward-FLOP model — the same model
+    ``modeled_backprop_s`` prices with, so rate-in/time-out round-trips.
+    """
+    import jax
+
+    from repro.models.sharding import count_params
+
+    n_params = count_params(model.spec())
+    tokens = _batch_tokens(batch) if batch_tokens is None else batch_tokens
+    grad_fn = jax.jit(jax.grad(lambda p, b: model.loss(p, b, ctx=None)[0]))
+    t = _median_time_s(grad_fn, params, batch, iters=iters)
+    return 4.0 * float(n_params) * float(tokens) / t
+
+
+def _batch_tokens(batch_tree) -> int:
+    """Per-step token count (mirrors train/step._batch_tokens, which cannot
+    be imported here without a cycle: train.step imports this module)."""
+    import jax
+
+    if isinstance(batch_tree, dict) and "tokens" in batch_tree:
+        n = 1
+        for s in batch_tree["tokens"].shape:
+            n *= int(s)
+        return n
+    leaves = jax.tree_util.tree_leaves(batch_tree)
+    if not leaves or not leaves[0].shape:
+        return 1
+    return int(leaves[0].shape[0])
+
+
+# ---------------------------------------------------------------------------
+# the startup profiling pass
+# ---------------------------------------------------------------------------
+
+
+def profile_key(mesh, model=None, model_name: Optional[str] = None) -> ProfileKey:
+    """The key a calibration of THIS system persists under."""
+    import jax
+
+    if model_name is None:
+        if model is None:
+            model_name = "none"
+        else:
+            from repro.models.sharding import count_params
+
+            model_name = f"{type(model).__name__}/{count_params(model.spec())}"
+    return ProfileKey(
+        platform=jax.default_backend(),
+        mesh=tuple((str(a), int(s)) for a, s in dict(mesh.shape).items()),
+        model=model_name,
+        jax_version=jax.__version__,
+    )
+
+
+def calibrate(
+    mesh,
+    axis: str = "data",
+    *,
+    model=None,
+    params=None,
+    batch=None,
+    sizes_bytes: Sequence[int] = DEFAULT_SIZES_BYTES,
+    iters: int = 3,
+    throughput_elems: int = 1 << 20,
+    measure_stages: bool = True,
+) -> CostProfile:
+    """The startup profiling pass: one measured :class:`CostProfile`.
+
+    Times collectives over ``axis`` of the live ``mesh``, fits α–β per
+    collective family, measures the compression-stage throughputs, and —
+    when ``(model, params, batch)`` are given — the model's real backward
+    pass.  Without a model the backprop rate keeps the static default (the
+    profile is still calibrated on the comms side; its key records
+    ``model="none"`` so it will not be accepted for a model-keyed load).
+    """
+    sweeps = benchmark_collectives(mesh, axis, sizes_bytes, iters=iters)
+    fits = []
+    for family in COLLECTIVE_FAMILIES:
+        points = sweeps[family]
+        alpha, beta = fit_alpha_beta([b for b, _ in points],
+                                     [t for _, t in points])
+        fits.append(LinkFit(family, alpha, beta, n_points=len(points)))
+    thr = (measure_throughputs(throughput_elems) if measure_stages
+           else cost_model.TPU_V5E)
+    if model is not None and params is not None and batch is not None:
+        backprop = measure_backprop_rate(model, params, batch, iters=iters)
+    else:
+        backprop = cost_model.BACKPROP_FLOPS_PER_S
+    return CostProfile(
+        key=profile_key(mesh, model=model),
+        fits=tuple(fits),
+        throughputs=thr,
+        backprop_flops_per_s=backprop,
+    )
+
+
+def load_profile_for(path: str, mesh, model=None) -> CostProfile:
+    """Load an artifact for THIS mesh/model (what ``build_train_step`` uses).
+
+    Platform, mesh shape and jax version must match the live system exactly;
+    the model key must match the live model OR be ``"none"`` — a comms-only
+    calibration prices any model's collectives (its backprop rate is the
+    static default, so nothing model-specific is being trusted).  Any other
+    mismatch raises :class:`ProfileKeyMismatch`.
+    """
+    profile = CostProfile.load(path)
+    live = profile_key(mesh, model=model)
+    ok = (profile.key.platform == live.platform
+          and profile.key.mesh == live.mesh
+          and profile.key.jax_version == live.jax_version
+          and profile.key.model in (live.model, "none"))
+    if not ok:
+        raise ProfileKeyMismatch(
+            f"calibration artifact at {path} was measured for {profile.key}, "
+            f"but this system is {live}")
+    return profile
+
+
+def load_or_calibrate(
+    path: Optional[str],
+    mesh,
+    axis: str = "data",
+    *,
+    expect: Optional[ProfileKey] = None,
+    **calibrate_kwargs,
+) -> CostProfile:
+    """Artifact-first entry point: load ``path`` when it exists and matches
+    ``expect``; otherwise run the profiling pass and persist it to ``path``
+    (when given) so the NEXT job skips the warm-up."""
+    import os
+
+    if path is not None and os.path.exists(path):
+        return CostProfile.load(path, expect=expect)
+    profile = calibrate(mesh, axis, **calibrate_kwargs)
+    if path is not None:
+        profile.save(path)
+    return profile
+
+
+# ---------------------------------------------------------------------------
+# CLI: smoke/offline profiling without a training job
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    """``python -m repro.comms.calibrate``: run the profiling pass (or check
+    an existing artifact) on this host.  ``--devices N`` pins N fake host
+    devices BEFORE jax's first import (this module is jax-free at import
+    time precisely so this works), which is how the CI calibration-smoke leg
+    exercises real multi-worker collectives on a CPU host."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description="cost-model calibration pass")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="fake host device count (must be set before jax "
+                         "initializes; ignored if jax is already imported "
+                         "with enough devices)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small size sweep + tiny throughput buffer (CI)")
+    ap.add_argument("--out", default=None, help="persist the artifact here")
+    ap.add_argument("--check", default=None,
+                    help="load an artifact, verify it against this host's "
+                         "key, print it, and exit")
+    args = ap.parse_args(argv)
+
+    if args.devices is not None:
+        _pin_host_devices(args.devices)
+
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    if args.check is not None:
+        profile = CostProfile.load(args.check, expect=None)
+        live = profile_key(mesh, model_name=profile.key.model)
+        if profile.key != live:
+            print(f"[calibrate] STALE artifact: measured for {profile.key}, "
+                  f"live system is {live}")
+            return 1
+        print(json.dumps(profile.to_dict(), indent=2))
+        print("[calibrate] artifact matches the live system")
+        return 0
+
+    sizes = SMOKE_SIZES_BYTES if args.smoke else DEFAULT_SIZES_BYTES
+    profile = calibrate(
+        mesh, "data", sizes_bytes=sizes,
+        throughput_elems=(1 << 16) if args.smoke else (1 << 20))
+    print(json.dumps(profile.to_dict(), indent=2))
+    for fit in profile.fits:
+        print(f"[calibrate] {fit.family}: α={fit.alpha_s * 1e6:.1f} µs  "
+              f"1/β={fit.t_comm / 1e9:.2f} GB/s  ({fit.n_points} points)")
+    if args.out:
+        profile.save(args.out)
+        print(f"[calibrate] wrote {args.out}")
+    return 0
+
+
+def _pin_host_devices(n: int) -> None:
+    """Request ``n`` fake host devices via
+    ``--xla_force_host_platform_device_count``.
+
+    jax is already imported by the time the CLI runs (this module's import
+    chain pulls it), but XLA reads ``XLA_FLAGS`` at first BACKEND use, not
+    at import — so setting the flag here still works as long as nothing has
+    touched devices yet.  The flag is written first and the device count
+    checked second, so the checking call itself initializes the backend with
+    the flag in place; an insufficient count afterwards means the backend
+    was already up, which only a fresh process can fix."""
+    import os
+    import re
+
+    pat = re.compile(r"--xla_force_host_platform_device_count=(\d+)")
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = pat.search(flags)
+    if m is None:
+        flags = (flags + f" --xla_force_host_platform_device_count={n}").strip()
+    elif int(m.group(1)) < n:
+        flags = pat.sub(f"--xla_force_host_platform_device_count={n}", flags)
+    os.environ["XLA_FLAGS"] = flags
+
+    import jax
+
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"jax backend already initialized with {len(jax.devices())} "
+            f"devices; need {n}. Run `python -m repro.comms.calibrate` in a "
+            "fresh process.")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

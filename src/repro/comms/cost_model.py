@@ -14,17 +14,31 @@ terms of the Pallas kernels (bytes touched / 819 GB/s HBM for the
 bandwidth-bound passes; MXU-limited for the 4-step FFT), replacing the paper's
 V100 numbers.  The paper's measured GPU numbers are kept for reproducing
 Fig. 9 exactly.
+
+Calibration (DESIGN.md §17): every constant in this module —
+``COLLECTIVE_ALPHA_S``, ``BACKPROP_FLOPS_PER_S``, the ``TPU_V5E`` throughput
+table, and the ``NETWORKS`` byte-rates — is an UNCALIBRATED DEFAULT: a
+documented napkin figure, not a measurement of the host this process runs
+on.  ``comms/calibrate.py`` measures all of them on the live mesh (timed
+collectives at a geometric size sweep, least-squares α–β fit, timed backward
+pass) and packages the result as a frozen ``CostProfile``.  The pricing
+functions below (``exchange_time_s``, ``streamed_exchange_time_s``) accept
+``profile=`` and resolve any argument the caller leaves ``None`` from it;
+with no profile they fall back to the static constants, which keeps every
+pre-calibration call site bit-identical.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "saved_comm_s", "k_min", "is_beneficial", "NETWORKS",
            "bucket_count", "transport_wire_bits", "overlap_fraction",
            "bucketed_payload_bits", "exchange_time_s", "ExchangePlan",
-           "COLLECTIVE_ALPHA_S",
+           "COLLECTIVE_ALPHA_S", "BACKPROP_FLOPS_PER_S",
+           "WIRE_MODES", "dense_spectrum_bits",
            "StreamedExchangePlan", "streamed_exchange_time_s",
            "dense_allreduce_bits", "RunWireAccount", "run_wire_account"]
 
@@ -72,15 +86,19 @@ def saved_comm_s(message_bytes: float, t_comm: float, k: float) -> float:
     return message_bytes / t_comm * (1.0 - 1.0 / k)
 
 
-def k_min(t_comm: float, thr: Throughputs) -> float:
+def k_min(t_comm: Optional[float] = None, thr: Optional[Throughputs] = None,
+          *, profile=None) -> float:
     """Minimal beneficial compression ratio; inf if never beneficial."""
+    t_comm, thr, _ = _resolve_pricing("allgather", t_comm, thr, 0.0, profile)
     denom = 1.0 - 2.0 * t_comm * thr.inv_sum()
     if denom <= 0.0:
         return float("inf")
     return 1.0 / denom
 
 
-def is_beneficial(message_bytes: float, t_comm: float, k: float, thr: Throughputs) -> bool:
+def is_beneficial(message_bytes: float, t_comm: Optional[float], k: float,
+                  thr: Optional[Throughputs] = None, *, profile=None) -> bool:
+    t_comm, thr, _ = _resolve_pricing("allgather", t_comm, thr, 0.0, profile)
     return 2.0 * compression_cost_s(message_bytes, thr) < saved_comm_s(
         message_bytes, t_comm, k
     )
@@ -113,7 +131,29 @@ def bucket_count(message_bytes: float, bucket_bytes, chunk: int = 4096,
     return build_layout(total, bucket_bytes, chunk, dtype_bytes).n_buckets
 
 
-def transport_wire_bits(transport: str, payload_bits: float, workers: int) -> float:
+WIRE_MODES = ("modeled", "runtime")
+
+
+def dense_spectrum_bits(n_elems: int, chunk: int = 4096) -> float:
+    """Wire bits of the DENSE dequantized spectrum of an n-element buffer.
+
+    The runtime psum transport (``transport._psum_mean_payload``) moves two
+    f32 planes (real + imag) of ``ceil(n/chunk) * (chunk//2 + 1)`` rfft bins
+    — independent of theta.  This is what actually rides the collective
+    today, as opposed to the O(k) sparse-allreduce endpoint the modeled
+    pricing assumes.
+    """
+    if n_elems < 1:
+        raise ValueError(f"n_elems must be >= 1, got {n_elems}")
+    n_chunks = -(-int(n_elems) // int(chunk))
+    bins = n_chunks * (int(chunk) // 2 + 1)
+    return 2.0 * 32.0 * bins
+
+
+def transport_wire_bits(transport: str, payload_bits: float, workers: int,
+                        *, mode: str = "modeled",
+                        n_elems: Optional[int] = None,
+                        chunk: int = 4096) -> float:
     """Per-worker wire bits to exchange one compressed payload among P workers.
 
     * ``allgather``/``sequenced`` — every worker materializes all P payloads:
@@ -126,17 +166,36 @@ def transport_wire_bits(transport: str, payload_bits: float, workers: int) -> fl
       bandwidth-optimal model; it is what makes the psum transport's wire
       volume ≤ 1/P of the all-gather transport's at equal theta.
 
-      CAVEAT: the current runtime transport (transport.py) realizes the psum
-      SEMANTICS with a dense-spectrum ``jax.lax.psum`` — its actual wire
-      volume is the dense spectrum, not B.  This function prices the
-      sparse-allreduce endpoint the transport abstraction is built for; use
-      it for trajectory planning, not for predicting today's XLA lowering.
+    ``mode`` selects which endpoint is priced:
+
+    * ``"modeled"`` (default) — the sparse-allreduce endpoint the transport
+      abstraction is built for.  Use it for trajectory planning; it is NOT a
+      prediction of today's XLA lowering for psum.
+    * ``"runtime"`` — the bytes the CURRENT lowering actually moves.  The
+      gather transports are priced identically (the all_gather really does
+      land P payloads per worker), but the psum transport realizes its
+      semantics with a dense-spectrum ``jax.lax.psum`` (see the NOTE in
+      ``transport._psum_mean_payload``), so its runtime wire is a ring
+      all-reduce of ``dense_spectrum_bits(n_elems, chunk)`` — 2·(P-1)/P of
+      the dense spectrum per worker, theta-independent.  ``n_elems`` (the
+      uncompressed element count) is required for psum in this mode.
+      ``choose_schedule`` prices decisions in this mode so ``schedule=auto``
+      reflects the collective that will actually run.
     """
     if workers < 1:
         raise ValueError(f"workers must be >= 1, got {workers}")
+    if mode not in WIRE_MODES:
+        raise ValueError(f"unknown wire mode {mode!r}; expected {WIRE_MODES}")
     if transport in ("allgather", "sequenced"):
         return workers * payload_bits
     if transport == "psum":
+        if mode == "runtime":
+            if n_elems is None:
+                raise ValueError(
+                    "runtime psum pricing needs n_elems (the dense element "
+                    "count): the lowering moves the dense spectrum")
+            spectrum = dense_spectrum_bits(n_elems, chunk)
+            return 2.0 * spectrum * (workers - 1) / workers
         return float(payload_bits)
     raise ValueError(f"unknown transport {transport!r}")
 
@@ -197,7 +256,34 @@ def overlap_fraction(n_buckets: int) -> float:
 # bucketed exchange pays it PER BUCKET; the stacked executor (DESIGN.md §14)
 # pays it once per exchange.  25 µs is a practical DCN collective-launch
 # figure; ICI launches are cheaper but the ratio is what the model prices.
+# UNCALIBRATED DEFAULT — comms/calibrate.py fits the real α per collective
+# family from timed collectives on the live mesh (CostProfile.alpha_s).
 COLLECTIVE_ALPHA_S = 25e-6
+
+# Modeled backward-pass compute rate (FLOP/s) for the overlap policy.
+# Matches the MXU-class figure the §III-D throughput model uses for the
+# 4-step FFT (TPU_V5E derivation): ~50 TFLOP/s sustained f32.
+# UNCALIBRATED DEFAULT — comms/calibrate.py measures the actual model's
+# backward pass (CostProfile.backprop_flops_per_s).
+BACKPROP_FLOPS_PER_S = 50e12
+
+
+def _resolve_pricing(transport: str, t_comm, thr, alpha_s, profile):
+    """(t_comm, thr, alpha_s) with explicit args > profile > static defaults.
+
+    ``profile`` is a ``calibrate.CostProfile`` (duck-typed: anything with
+    ``t_comm(transport)``, ``alpha_s(transport)``, ``throughputs``); ``None``
+    keeps the documented uncalibrated constants.
+    """
+    if t_comm is None:
+        t_comm = (profile.t_comm(transport) if profile is not None
+                  else NETWORKS["tpu-dcn-host"])
+    if thr is None:
+        thr = profile.throughputs if profile is not None else TPU_V5E
+    if alpha_s is None:
+        alpha_s = (profile.alpha_s(transport) if profile is not None
+                   else COLLECTIVE_ALPHA_S)
+    return t_comm, thr, alpha_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -217,14 +303,17 @@ class ExchangePlan:
 def exchange_time_s(
     message_bytes: float,
     payload_bits: float,
-    t_comm: float,
-    thr: Throughputs,
+    t_comm: Optional[float] = None,
+    thr: Optional[Throughputs] = None,
     *,
     workers: int,
     transport: str = "allgather",
     n_buckets: int = 1,
     stacked: bool = False,
-    alpha_s: float = COLLECTIVE_ALPHA_S,
+    alpha_s: Optional[float] = None,
+    profile=None,
+    wire_mode: str = "modeled",
+    chunk: int = 4096,
 ) -> ExchangePlan:
     """Modeled wall time of one compressed gradient exchange.
 
@@ -239,9 +328,18 @@ def exchange_time_s(
     (α·n), the stacked executor (``stacked=True``) ships every bucket in one
     ``StackedPayload`` collective (α·1, no per-bucket pipelining — the single
     fused program serializes compress and wire but pays one launch).
+
+    ``t_comm``/``thr``/``alpha_s`` left ``None`` resolve from ``profile`` (a
+    measured ``calibrate.CostProfile``) or, without one, from the static
+    uncalibrated defaults; ``wire_mode="runtime"`` prices the bytes today's
+    lowering actually moves (see ``transport_wire_bits``).
     """
+    t_comm, thr, alpha_s = _resolve_pricing(
+        transport, t_comm, thr, alpha_s, profile)
     comp_s = 2.0 * compression_cost_s(message_bytes, thr)  # compress + decompress
-    wire_per_worker = transport_wire_bits(transport, payload_bits, workers)
+    wire_per_worker = transport_wire_bits(
+        transport, payload_bits, workers, mode=wire_mode,
+        n_elems=int(-(-message_bytes // 4)), chunk=chunk)
     wire_s = wire_per_worker / 8.0 / t_comm
     if stacked or transport == "allgather" or n_buckets <= 1:
         n_coll = 1
@@ -302,14 +400,17 @@ class StreamedExchangePlan:
 def streamed_exchange_time_s(
     message_bytes: float,
     payload_bits: float,
-    t_comm: float,
-    thr: Throughputs,
+    t_comm: Optional[float] = None,
+    thr: Optional[Throughputs] = None,
     *,
     workers: int,
     transport: str,
     group_fractions: "tuple[float, ...]",
     backprop_s: float,
-    alpha_s: float = COLLECTIVE_ALPHA_S,
+    alpha_s: Optional[float] = None,
+    profile=None,
+    wire_mode: str = "modeled",
+    chunk: int = 4096,
 ) -> StreamedExchangePlan:
     """Readiness-timeline model of one streamed exchange.
 
@@ -331,8 +432,13 @@ def streamed_exchange_time_s(
         raise ValueError(f"group fractions must sum to 1: {group_fractions}")
     if backprop_s < 0.0:
         raise ValueError(f"backprop_s must be >= 0, got {backprop_s}")
+    t_comm, thr, alpha_s = _resolve_pricing(
+        transport, t_comm, thr, alpha_s, profile)
+    wire_bits = transport_wire_bits(
+        transport, payload_bits, workers, mode=wire_mode,
+        n_elems=int(-(-message_bytes // 4)), chunk=chunk)
     comp_total = 2.0 * compression_cost_s(message_bytes, thr)
-    wire_total = transport_wire_bits(transport, payload_bits, workers) / 8.0 / t_comm
+    wire_total = wire_bits / 8.0 / t_comm
     finish = 0.0
     total_work = 0.0
     ready = 0.0
@@ -342,16 +448,20 @@ def streamed_exchange_time_s(
         start = max(ready, finish)
         finish = start + e_g
         total_work += e_g
-    exposed = max(0.0, finish - backprop_s)
+    # Accounting identity (tests/test_calibrate.py property): the exchange
+    # work splits EXACTLY into the exposed tail and the hidden remainder —
+    # exposed_s + hidden_s == exchange_s always.  Hidden derives from
+    # exposed, never clamped independently: ``finish >= total_work`` (work
+    # only accumulates) and total readiness waiting is <= backprop_s, so
+    # 0 <= hidden <= backprop_s follows structurally.
+    exposed = min(max(0.0, finish - backprop_s), total_work)
     hidden = total_work - exposed
-    # a group can never hide more work than backprop provides cover for
-    hidden = max(0.0, min(hidden, backprop_s))
     n_groups = len(group_fractions)
     return StreamedExchangePlan(
         transport=transport,
         n_groups=n_groups,
         workers=workers,
-        wire_bits_per_worker=transport_wire_bits(transport, payload_bits, workers),
+        wire_bits_per_worker=wire_bits,
         exchange_s=total_work,
         exposed_s=exposed,
         hidden_s=hidden,

@@ -212,16 +212,20 @@ def _make_compressor(config: ReducerConfig):
     raise ValueError(f"unknown compressed reducer kind {config.kind!r}")
 
 
-def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None):
+def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
+                 workers: Optional[int] = None, profile=None):
     """Returns reduce_fn(grads[, residual]) for use INSIDE shard_map.
 
     Without error feedback: reduce_fn(grads) -> mean_grads.
     With error feedback:    reduce_fn(grads, residual) -> (mean_grads, residual').
 
-    ``batch_tokens`` is the auto-schedule policy's backprop-length hint
-    (DESIGN.md §15): the train-step builder passes the real per-step token
-    count so ``schedule='auto'`` prices the actual backward pass; direct
-    callers may omit it (a documented default keeps the decision
+    ``batch_tokens``, ``workers`` and ``profile`` are the auto-schedule
+    policy's pricing inputs (DESIGN.md §15/§17): the train-step builder
+    passes the real per-step token count, the gradient axis's mesh size, and
+    (when ``StepConfig.calibration_path`` names one) the measured
+    ``calibrate.CostProfile``, so ``schedule='auto'`` prices the actual
+    backward pass on the actual topology with fitted constants.  Direct
+    callers may omit all three (documented defaults keep the decision
     deterministic).
     """
     if config.kind == "dense":
@@ -247,7 +251,8 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None):
         """Concrete dispatch schedule for a flat buffer of this size —
         resolved at trace time (the flat length is static inside jit), so
         an auto decision is one pure host-side computation per trace."""
-        resolved, _ = scheduler.resolve_schedule(config, total, batch_tokens)
+        resolved, _ = scheduler.resolve_schedule(
+            config, total, batch_tokens, workers=workers, profile=profile)
         return resolved
 
     def _exchange_flat(flat: jnp.ndarray, axis: str) -> jnp.ndarray:

@@ -60,14 +60,22 @@ __all__ = [
     "resolve_schedule",
     "BACKPROP_FLOPS_PER_S",
     "DEFAULT_BATCH_TOKENS",
+    "DEFAULT_WORKERS",
 ]
 
 SCHEDULE_NAMES = ("stacked", "streamed", "auto")
 
-# Modeled backward-pass compute rate for the policy layer.  Matches the
-# MXU-class figure the §III-D throughput model uses for the 4-step FFT
-# (cost_model.TPU_V5E derivation): ~50 TFLOP/s sustained f32.
-BACKPROP_FLOPS_PER_S = 50e12
+# Modeled backward-pass compute rate for the policy layer — re-exported
+# from the cost model, where it is documented as an UNCALIBRATED DEFAULT
+# (comms/calibrate.py measures the real rate into CostProfile).
+BACKPROP_FLOPS_PER_S = cost_model.BACKPROP_FLOPS_PER_S
+
+# Worker-count assumption when the caller cannot supply the mesh's gradient
+# axis size (a reducer built outside a train step).  Two is the smallest
+# mesh that exchanges at all; gather-transport wire only grows with P, so
+# this is the conservative case for stacked.  build_train_step always
+# passes the REAL axis size (the workers=2 mispricing was a bug).
+DEFAULT_WORKERS = 2
 
 # Batch-token assumption when the caller cannot supply one (a reducer built
 # outside a train step).  The decision rule is a pure function of its
@@ -237,11 +245,13 @@ def choose_schedule(
     workers: int,
     transport: str,
     backprop_s: float,
-    t_comm: float = cost_model.NETWORKS["tpu-dcn-host"],
-    thr: cost_model.Throughputs = cost_model.TPU_V5E,
-    alpha_s: float = cost_model.COLLECTIVE_ALPHA_S,
+    t_comm: Optional[float] = None,
+    thr: Optional[cost_model.Throughputs] = None,
+    alpha_s: Optional[float] = None,
+    profile=None,
+    wire_mode: str = "runtime",
 ) -> ScheduleDecision:
-    """The auto decision rule (DESIGN.md §15).
+    """The auto decision rule (DESIGN.md §15/§17).
 
     stacked step time  = backprop + (α·1 + compress + wire), serialized;
     streamed step time = the readiness-timeline finish
@@ -249,15 +259,24 @@ def choose_schedule(
     backward pass is long enough to hide the per-group exchanges despite
     paying α per group — deep, bandwidth-bound models; stacked wins when
     α·n_groups dominates — small, latency-bound models.
+
+    Pricing inputs left ``None`` resolve from ``profile`` (a measured
+    ``calibrate.CostProfile``) or the documented uncalibrated defaults.  A
+    DECISION must price the bytes today's lowering actually moves, so the
+    default ``wire_mode`` is ``"runtime"`` — for the psum transport that is
+    the dense dequantized spectrum, not the sparse-allreduce endpoint the
+    trajectory-planning model (``wire_mode="modeled"``) prices.
     """
     stacked_plan = cost_model.exchange_time_s(
         message_bytes, payload_bits, t_comm, thr, workers=workers,
         transport=transport, n_buckets=plan.layout.n_buckets, stacked=True,
-        alpha_s=alpha_s)
+        alpha_s=alpha_s, profile=profile, wire_mode=wire_mode,
+        chunk=plan.layout.chunk)
     streamed_plan = cost_model.streamed_exchange_time_s(
         message_bytes, payload_bits, t_comm, thr, workers=workers,
         transport=transport, group_fractions=plan.group_fractions(),
-        backprop_s=backprop_s, alpha_s=alpha_s)
+        backprop_s=backprop_s, alpha_s=alpha_s, profile=profile,
+        wire_mode=wire_mode, chunk=plan.layout.chunk)
     stacked_step = backprop_s + stacked_plan.exchange_s
     streamed_step = streamed_plan.step_s
     return ScheduleDecision(
@@ -274,15 +293,25 @@ def resolve_schedule(
     config,
     n_elems: int,
     batch_tokens: Optional[int] = None,
+    *,
+    workers: Optional[int] = None,
+    profile=None,
 ) -> Tuple[str, Optional[ScheduleDecision]]:
     """Resolve a ``ReducerConfig.schedule`` to a concrete name.
 
-    Pure function of ``(config, n_elems, batch_tokens)`` — the same spec
-    always yields the same schedule (tests/test_scheduler.py).  Non-auto
-    schedules pass through; ``auto`` runs :func:`choose_schedule` with the
-    config's own layout/payload model.  The monolithic cases — allgather
-    transport or a single-bucket layout — have nothing to stream and
-    resolve to ``stacked``.
+    Pure function of ``(config, n_elems, batch_tokens, workers, profile)`` —
+    the same inputs always yield the same schedule (tests/test_scheduler.py).
+    Non-auto schedules pass through; ``auto`` runs :func:`choose_schedule`
+    with the config's own layout/payload model.  The monolithic cases —
+    allgather transport or a single-bucket layout — have nothing to stream
+    and resolve to ``stacked``.
+
+    ``workers`` is the gradient-axis size of the live mesh
+    (``build_train_step`` passes it); ``None`` falls back to the documented
+    :data:`DEFAULT_WORKERS` assumption.  ``profile`` is a measured
+    ``calibrate.CostProfile``: with one, α–β, the stage throughputs AND the
+    backprop length come from measurements (``profile.backprop_s``) instead
+    of the static constants.
     """
     if config.schedule != "auto":
         return config.schedule, None
@@ -297,13 +326,15 @@ def resolve_schedule(
         stacked=True, chunk=layout.chunk)
     plan = build_plan(layout, config.stream_groups)
     tokens = DEFAULT_BATCH_TOKENS if batch_tokens is None else batch_tokens
-    # worker count is a mesh property unknown to the config; price the
-    # 2-worker lower bound — gather-transport wire only grows with P, which
-    # favors streaming, so P=2 is the conservative case for stacked
+    p = DEFAULT_WORKERS if workers is None else int(workers)
+    if profile is not None:
+        backprop_s = profile.backprop_s(n_elems, tokens)
+    else:
+        backprop_s = modeled_backprop_s(n_elems, tokens)
     decision = choose_schedule(
         plan, 4.0 * n_elems, payload_bits,
-        workers=2, transport=config.transport,
-        backprop_s=modeled_backprop_s(n_elems, tokens))
+        workers=p, transport=config.transport,
+        backprop_s=backprop_s, profile=profile)
     return decision.schedule, decision
 
 

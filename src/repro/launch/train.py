@@ -78,6 +78,17 @@ def main(argv=None):
     ap.add_argument("--sample-rate", type=float, default=1.0 / 64.0,
                     help="sampled selector: fraction of magnitudes in the "
                          "tau-estimation subsample")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the cost-model calibration pass on the live "
+                         "mesh before training (DESIGN.md §17): time real "
+                         "collectives, fit α–β, measure the compression "
+                         "stages and this model's backward pass; the auto "
+                         "schedule then prices with measurements")
+    ap.add_argument("--calibration-path", default=None,
+                    help="calibration artifact path: loaded when it exists "
+                         "(key-checked against this platform/mesh/model/jax), "
+                         "written after --calibrate so later jobs skip the "
+                         "profiling pass")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -115,6 +126,7 @@ def main(argv=None):
         mode=args.mode,
         multi_pod="pod" in mesh.axis_names,
         reducer=reducer,
+        calibration_path=args.calibration_path,
     )
     opt_cfg = OptConfig(kind="adamw", lr=args.lr)
 
@@ -147,6 +159,30 @@ def main(argv=None):
             w *= dict(mesh.shape)[ax]
         n = state["residual"].shape[0]
         state["residual"] = jnp.zeros((w, n), jnp.float32)
+
+    if args.calibrate and args.mode != "pjit":
+        import dataclasses
+        import tempfile
+
+        from repro.comms import calibrate as cal
+
+        with compat.set_mesh(mesh):
+            profile = cal.calibrate(
+                mesh, "data", model=model, params=state["params"],
+                batch=stream.batch_at(0))
+        path = args.calibration_path
+        if path is None:  # the step loads the profile by path
+            fd, path = tempfile.mkstemp(suffix=".calibration.json")
+            import os
+
+            os.close(fd)
+        profile.save(path)
+        step_cfg = dataclasses.replace(step_cfg, calibration_path=path)
+        for fit in profile.fits:
+            print(f"[calibrate] {fit.family}: α={fit.alpha_s * 1e6:.1f} µs  "
+                  f"1/β={fit.t_comm / 1e9:.2f} GB/s")
+        print(f"[calibrate] backprop {profile.backprop_flops_per_s / 1e12:.2f} "
+              f"TFLOP/s; artifact at {path}")
 
     loop_cfg = TrainLoopConfig(
         total_steps=args.steps,

@@ -39,7 +39,10 @@ group g's collective while lower-offset gradients are still being computed
 — communication hides behind the backward pass instead of serializing after
 it.  With ``auto`` this builder resolves the schedule ONCE per step build
 via the cost-model policy (`scheduler.resolve_schedule`), using the model's
-true parameter count and the batch's token count; the resolved decision is
+true parameter count, the batch's token count, the exchange axis's REAL
+mesh size, and — when ``StepConfig.calibration_path`` names a persisted
+calibration artifact (DESIGN.md §17) — the measured ``CostProfile`` in
+place of the static pricing constants; the resolved decision is
 exposed on the returned step object (``.schedule_decision``).  Either way
 the trajectory is bitwise-identical to the stacked path, and jit-level
 buffer donation of the state is preserved (the streamed groups read gradient
@@ -71,6 +74,12 @@ class StepConfig:
     multi_pod: bool = False
     clip_norm: float = 1.0
     reducer: Optional[ReducerConfig] = None  # compressed modes
+    # calibration artifact (DESIGN.md §17): path to a persisted CostProfile
+    # measured on this (platform, mesh, model, jax) — the auto-schedule
+    # policy then prices with fitted α–β, measured stage throughputs and the
+    # measured backprop rate instead of the static defaults.  A key mismatch
+    # raises calibrate.ProfileKeyMismatch at step-build time.
+    calibration_path: Optional[str] = None
 
     @property
     def batch_axes(self) -> Tuple[str, ...]:
@@ -193,12 +202,26 @@ def build_train_step(
     # count are known — the reducer then traces a concrete schedule
     reducer_cfg = step_cfg.reducer
     batch_tokens = _batch_tokens(batch_tree)
+    # the compressed exchange's collective runs over ONE axis (pod for
+    # hierarchical, the data axis otherwise); its mesh size is the worker
+    # count the wire model must price — NOT a hardcoded 2
+    exchange_axis = (reducer_cfg.pod_axis if reducer_cfg.kind == "hierarchical"
+                     else reducer_cfg.axis)
+    exchange_workers = axes.get(exchange_axis, 1) if exchange_axis else 1
+    profile = None
+    if step_cfg.calibration_path is not None:
+        from repro.comms import calibrate
+
+        profile = calibrate.load_profile_for(
+            step_cfg.calibration_path, mesh, model=model)
     schedule_decision = None
     if reducer_cfg.schedule == "auto":
         resolved, schedule_decision = scheduler.resolve_schedule(
-            reducer_cfg, count_params(model.spec()), batch_tokens)
+            reducer_cfg, count_params(model.spec()), batch_tokens,
+            workers=exchange_workers, profile=profile)
         reducer_cfg = dataclasses.replace(reducer_cfg, schedule=resolved)
-    reducer = make_reducer(reducer_cfg, batch_tokens=batch_tokens)
+    reducer = make_reducer(reducer_cfg, batch_tokens=batch_tokens,
+                           workers=exchange_workers, profile=profile)
     manual = step_cfg.manual_axes
     ef = step_cfg.reducer.error_feedback
 

@@ -1,0 +1,358 @@
+"""Calibrated cost model (DESIGN.md §17): the α–β fit must recover known
+constants from synthetic timings, the calibration artifact must round-trip
+and reject stale keys, profile-threaded pricing must equal the static
+defaults when uncalibrated, and the three mispriced-input bugfixes stay
+fixed — the real worker count reaches the auto policy (a borderline
+8-worker decision flips vs the old hardcoded P=2), the streamed timeline's
+``exposed + hidden == exchange`` accounting identity holds everywhere, and
+psum decisions price the dense runtime wire, not the sparse modeled
+endpoint."""
+
+import dataclasses
+import json
+
+import pytest
+
+from helpers import given, settings, st, run_with_devices
+
+from repro.comms import bucketing, calibrate, cost_model as cm, scheduler
+from repro.comms.calibrate import (
+    CostProfile,
+    LinkFit,
+    ProfileKey,
+    ProfileKeyMismatch,
+    UNCALIBRATED,
+    fit_alpha_beta,
+)
+from repro.comms.reducers import ReducerConfig, make_reducer
+
+
+# ---------------------------------------------------------------------------
+# α–β fit
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    alpha_us=st.floats(1.0, 500.0),
+    gbps=st.floats(0.1, 400.0),
+)
+def test_fit_recovers_known_alpha_beta(alpha_us, gbps):
+    """Noiseless timings generated from a known linear model fit back to it."""
+    alpha = alpha_us * 1e-6
+    beta = 1.0 / (gbps * 1e9)
+    sizes = [float(1 << p) for p in range(16, 25, 2)]
+    times = [alpha + beta * b for b in sizes]
+    a, b = fit_alpha_beta(sizes, times)
+    assert a == pytest.approx(alpha, rel=1e-6)
+    assert b == pytest.approx(beta, rel=1e-6)
+
+
+def test_fit_floors_degenerate_sweeps():
+    # single distinct size (zero variance): alpha = mean time, beta floored
+    a, b = fit_alpha_beta([0.0, 0.0, 0.0], [1e-4, 2e-4, 3e-4])
+    assert a == pytest.approx(2e-4)
+    assert b == calibrate.BETA_FLOOR_S_PER_BYTE
+    # noisy negative intercept clamps to the alpha floor, never <= 0
+    a, b = fit_alpha_beta([1e6, 2e6], [1e-4, 3e-4])
+    assert a >= calibrate.ALPHA_FLOOR_S
+    assert b > 0
+    with pytest.raises(ValueError):
+        fit_alpha_beta([], [])
+    with pytest.raises(ValueError):
+        fit_alpha_beta([1.0], [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# artifact persistence
+# ---------------------------------------------------------------------------
+
+
+def _profile(model="m/100", platform="cpu", jax_version="0.0.0"):
+    return CostProfile(
+        key=ProfileKey(platform=platform, mesh=(("data", 4),),
+                       model=model, jax_version=jax_version),
+        fits=(LinkFit("gather", 25e-6, 1e-10, n_points=5),
+              LinkFit("psum", 12e-6, 2e-10, n_points=5)),
+        throughputs=cm.TPU_V5E,
+        backprop_flops_per_s=3.2e12,
+    )
+
+
+def test_artifact_roundtrip(tmp_path):
+    path = str(tmp_path / "cal.json")
+    prof = _profile()
+    prof.save(path)
+    loaded = CostProfile.load(path, expect=prof.key)
+    assert loaded == prof
+    # numeric accessors survive the trip
+    assert loaded.alpha_s("sequenced") == prof.alpha_s("sequenced")
+    assert loaded.t_comm("psum") == pytest.approx(1.0 / 2e-10)
+    assert loaded.backprop_s(100, 10) == pytest.approx(4.0 * 1000 / 3.2e12)
+
+
+def test_stale_key_rejected(tmp_path):
+    path = str(tmp_path / "cal.json")
+    _profile().save(path)
+    other = ProfileKey(platform="tpu", mesh=(("data", 4),),
+                       model="m/100", jax_version="0.0.0")
+    with pytest.raises(ProfileKeyMismatch):
+        CostProfile.load(path, expect=other)
+    # strict=False downgrades the mismatch to acceptance
+    assert CostProfile.load(path, expect=other, strict=False).key.platform == "cpu"
+
+
+def test_unknown_artifact_version_rejected(tmp_path):
+    path = str(tmp_path / "cal.json")
+    d = _profile().to_dict()
+    d["version"] = 999
+    with open(path, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(ProfileKeyMismatch):
+        CostProfile.load(path)
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError):  # missing psum family
+        dataclasses.replace(_profile(), fits=(LinkFit("gather", 1e-6, 1e-10),))
+    with pytest.raises(ValueError):  # non-positive alpha
+        LinkFit("gather", 0.0, 1e-10)
+    with pytest.raises(ValueError):  # unknown family
+        LinkFit("broadcast", 1e-6, 1e-10)
+    with pytest.raises(ValueError):
+        calibrate.collective_family("carrier-pigeon")
+
+
+def test_load_profile_for_accepts_comms_only_artifacts(tmp_path):
+    """A model-less calibration prices any model's collectives; any other
+    key field mismatch still rejects."""
+    import jax
+
+    from repro.launch.mesh import make_local_mesh
+
+    mesh = make_local_mesh()
+    live = calibrate.profile_key(mesh)
+    path = str(tmp_path / "cal.json")
+
+    ok = dataclasses.replace(_profile(), key=live)
+    ok.save(path)
+    assert calibrate.load_profile_for(path, mesh).key == live
+
+    # model="none" artifact loads for a model-keyed system
+    modeless = dataclasses.replace(
+        _profile(), key=dataclasses.replace(live, model="none"))
+    modeless.save(path)
+    assert calibrate.load_profile_for(path, mesh).key.model == "none"
+
+    stale = dataclasses.replace(
+        _profile(), key=dataclasses.replace(live, jax_version="0.0.0-stale"))
+    stale.save(path)
+    with pytest.raises(ProfileKeyMismatch):
+        calibrate.load_profile_for(path, mesh)
+    del jax  # imported only to mirror the call site's environment
+
+
+# ---------------------------------------------------------------------------
+# profile-threaded pricing
+# ---------------------------------------------------------------------------
+
+
+def test_uncalibrated_profile_equals_static_defaults():
+    """profile=None and profile=UNCALIBRATED price bit-for-bit the same."""
+    kw = dict(workers=4, transport="sequenced", n_buckets=4, stacked=True)
+    a = cm.exchange_time_s(1e6, 1e6, **kw)
+    b = cm.exchange_time_s(1e6, 1e6, profile=UNCALIBRATED, **kw)
+    assert a == b
+    sa = cm.streamed_exchange_time_s(
+        1e6, 1e6, workers=4, transport="sequenced",
+        group_fractions=(0.5, 0.5), backprop_s=1e-3)
+    sb = cm.streamed_exchange_time_s(
+        1e6, 1e6, workers=4, transport="sequenced",
+        group_fractions=(0.5, 0.5), backprop_s=1e-3, profile=UNCALIBRATED)
+    assert sa == sb
+
+
+def test_calibrated_profile_changes_pricing():
+    slow = dataclasses.replace(
+        _profile(),
+        fits=(LinkFit("gather", 1e-3, 1e-6), LinkFit("psum", 1e-3, 1e-6)))
+    base = cm.exchange_time_s(1e6, 1e6, workers=4, transport="sequenced")
+    cal = cm.exchange_time_s(1e6, 1e6, workers=4, transport="sequenced",
+                             profile=slow)
+    assert cal.exchange_s > base.exchange_s
+    # explicit arguments still win over the profile
+    override = cm.exchange_time_s(
+        1e6, 1e6, cm.NETWORKS["tpu-dcn-host"], workers=4,
+        transport="sequenced", profile=slow,
+        alpha_s=cm.COLLECTIVE_ALPHA_S)
+    assert override == base
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: real worker count reaches the auto policy
+# ---------------------------------------------------------------------------
+
+
+def _skewed_plan():
+    """3 buckets tiny/huge/tiny -> readiness fractions ~(.005, .99, .005).
+
+    With near-uniform fractions the streamed-vs-stacked boundary is
+    wire-independent (the timeline algebra cancels it); skewed fractions
+    put weight on an interior dispatch group, which is where the per-worker
+    gather wire enters the decision."""
+    chunk = 4096
+    sizes = (chunk, 200 * chunk, chunk)
+    bounds = (0, sizes[0], sizes[0] + sizes[1], sum(sizes))
+    layout = bucketing.BucketLayout(
+        total=sum(sizes), boundaries=bounds, chunk=chunk)
+    return scheduler.build_plan(layout)
+
+
+def test_workers_flip_borderline_decision():
+    """Regression (scheduler.py used to hardcode workers=2): an 8-worker
+    sequenced exchange must flip a borderline decision P=2 gets wrong —
+    gather wire grows with P, and at 8 workers the big interior group's
+    wire is too large to justify serializing after backprop."""
+    plan = _skewed_plan()
+    m_bytes = 4.0 * plan.layout.total
+    kw = dict(transport="sequenced", backprop_s=500e-6)
+    two = scheduler.choose_schedule(plan, m_bytes, 100e6, workers=2, **kw)
+    eight = scheduler.choose_schedule(plan, m_bytes, 100e6, workers=8, **kw)
+    assert two.schedule == "stacked"
+    assert eight.schedule == "streamed"
+
+
+def test_resolve_schedule_threads_workers():
+    cfg = ReducerConfig(kind="fft", schedule="auto", transport="sequenced",
+                        bucket_bytes=1 << 20)
+    n = 1 << 22
+    _, d2 = scheduler.resolve_schedule(cfg, n, 4096, workers=2)
+    _, d8 = scheduler.resolve_schedule(cfg, n, 4096, workers=8)
+    default, _ = scheduler.resolve_schedule(cfg, n, 4096)
+    # wire priced at the ACTUAL worker count: 8 gather targets cost more
+    assert d8.stacked_step_s > d2.stacked_step_s
+    assert d8.streamed_step_s > d2.streamed_step_s
+    # workers=None keeps the documented DEFAULT_WORKERS assumption
+    assert scheduler.DEFAULT_WORKERS == 2
+    assert default == scheduler.resolve_schedule(cfg, n, 4096, workers=2)[0]
+    # and make_reducer accepts/threads the same inputs
+    assert callable(make_reducer(cfg, batch_tokens=4096, workers=8))
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: exposed + hidden == exchange, always
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    backprop_us=st.floats(0.0, 1e5),
+    payload_mbits=st.floats(0.001, 1e3),
+    n_groups=st.integers(1, 32),
+    workers=st.integers(2, 64),
+)
+def test_streamed_accounting_identity(backprop_us, payload_mbits,
+                                      n_groups, workers):
+    """Property (regression: the old clamp broke it when the timeline's
+    exposed tail exceeded backprop_s): the exchange work splits EXACTLY
+    into hidden + exposed, and hidden can never exceed the backward pass
+    it hides behind."""
+    fracs = tuple(1.0 / n_groups for _ in range(n_groups))
+    p = cm.streamed_exchange_time_s(
+        8e6, payload_mbits * 1e6, workers=workers, transport="sequenced",
+        group_fractions=fracs, backprop_s=backprop_us * 1e-6)
+    assert p.exposed_s + p.hidden_s == pytest.approx(p.exchange_s, rel=1e-12)
+    assert 0.0 <= p.hidden_s <= backprop_us * 1e-6 + 1e-15
+    assert p.exposed_s >= 0.0
+    assert p.step_s >= backprop_us * 1e-6
+
+
+def test_accounting_identity_in_saturated_regime():
+    """The exact shape the old clamp broke: exchange far larger than the
+    backward pass, so hidden saturates at backprop_s and exposed must be
+    exchange - backprop, not the un-recomputed leftover."""
+    p = cm.streamed_exchange_time_s(
+        8e6, 1e9, workers=8, transport="sequenced",
+        group_fractions=(0.25, 0.25, 0.25, 0.25), backprop_s=1e-6)
+    assert p.exchange_s > 100 * 1e-6
+    assert p.exposed_s + p.hidden_s == pytest.approx(p.exchange_s, rel=1e-12)
+    assert p.hidden_s <= 1e-6 + 1e-18
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: psum decisions price the dense runtime wire
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_psum_wire_is_dense_spectrum():
+    n = 1 << 20
+    sparse_bits = 1e6
+    modeled = cm.transport_wire_bits("psum", sparse_bits, 8, mode="modeled")
+    runtime = cm.transport_wire_bits("psum", sparse_bits, 8, mode="runtime",
+                                     n_elems=n)
+    assert modeled == sparse_bits  # sparse-allreduce endpoint
+    # ring allreduce of BOTH dense f32 spectrum planes
+    assert runtime == pytest.approx(
+        2.0 * cm.dense_spectrum_bits(n) * 7 / 8)
+    assert runtime > 10 * modeled
+    with pytest.raises(ValueError):  # runtime psum needs the buffer size
+        cm.transport_wire_bits("psum", sparse_bits, 8, mode="runtime")
+    with pytest.raises(ValueError):
+        cm.transport_wire_bits("psum", sparse_bits, 8, mode="telepathy")
+    # gather transports move the same bytes in both modes
+    for t in ("allgather", "sequenced"):
+        assert cm.transport_wire_bits(t, sparse_bits, 8, mode="runtime",
+                                      n_elems=n) \
+            == cm.transport_wire_bits(t, sparse_bits, 8, mode="modeled")
+
+
+def test_choose_schedule_prices_psum_at_runtime_wire():
+    """Regression: the auto policy used to price psum at the O(k) sparse
+    endpoint; the runtime collective moves the dense dequantized spectrum,
+    which choose_schedule (wire_mode='runtime' default) must bill."""
+    layout = bucketing.build_layout(1 << 20, 1 << 18)
+    plan = scheduler.build_plan(layout)
+    kw = dict(workers=8, transport="psum", backprop_s=1e-3)
+    runtime = scheduler.choose_schedule(plan, 4.0 * (1 << 20), 1e6, **kw)
+    modeled = scheduler.choose_schedule(plan, 4.0 * (1 << 20), 1e6,
+                                        wire_mode="modeled", **kw)
+    assert runtime.stacked_step_s > modeled.stacked_step_s
+    assert runtime.streamed_step_s > modeled.streamed_step_s
+
+
+# ---------------------------------------------------------------------------
+# the profiling pass on a live (fake-device) mesh
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_on_live_mesh():
+    out = run_with_devices(
+        """
+import json
+from repro.comms import calibrate
+from repro.launch.mesh import make_local_mesh
+
+mesh = make_local_mesh()
+profile = calibrate.calibrate(
+    mesh, "data", sizes_bytes=(1 << 12, 1 << 14, 1 << 16), iters=2,
+    measure_stages=False)
+d = profile.to_dict()
+path = "/tmp/test_calibrate_artifact.json"
+profile.save(path)
+reloaded = calibrate.CostProfile.load(path, expect=profile.key)
+assert reloaded == profile
+assert calibrate.load_profile_for(path, mesh) == profile
+print(json.dumps({
+    "mesh": d["key"]["mesh"],
+    "calibrated": d["calibrated"],
+    "alphas": [f["alpha_s"] for f in d["fits"]],
+    "betas": [f["beta_s_per_byte"] for f in d["fits"]],
+}))
+""",
+        devices=2,
+    )
+    got = json.loads(out.strip().splitlines()[-1])
+    assert got["mesh"] == [["data", 2]]
+    assert got["calibrated"] is True
+    assert all(a > 0 for a in got["alphas"])
+    assert all(b > 0 for b in got["betas"])

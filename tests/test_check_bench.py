@@ -1,9 +1,10 @@
 """Unit tests for tools/check_bench.py — the BENCH_throughput.json schema
 guard that used to be an untestable heredoc inside .github/workflows/ci.yml.
 Covers: the committed artifact passes, every column family is individually
-guarded (dropping one is caught), and the overlap-engine acceptance
-evidence (a streamed deep-model row with overlap_efficiency > 0) is
-enforced."""
+guarded (dropping one is caught), the overlap-engine acceptance evidence
+(a streamed deep-model row with overlap_efficiency > 0) is enforced, and
+the calibration section must carry positive fitted α–β for both collective
+families plus calibrated-vs-static auto verdicts."""
 
 import copy
 import json
@@ -29,7 +30,8 @@ def test_committed_artifact_passes(committed):
 
 
 def test_missing_sections_reported(committed):
-    for section in ("backends", "records", "schedules", "selectors"):
+    for section in ("backends", "records", "schedules", "selectors",
+                    "calibration"):
         data = copy.deepcopy(committed)
         del data[section]
         errors = check_bench.check(data)
@@ -121,6 +123,41 @@ def test_bad_auto_schedule_value(committed):
     data = copy.deepcopy(committed)
     data["records"][0]["auto_schedule"] = "auto"  # must be RESOLVED
     assert any("auto_schedule" in e for e in check_bench.check(data))
+
+
+def test_calibration_section_guarded(committed):
+    # every top-level calibration key is individually guarded
+    for key in check_bench.CALIBRATION_KEYS:
+        data = copy.deepcopy(committed)
+        del data["calibration"][key]
+        assert any(key in e for e in check_bench.check(data)), key
+    # both collective families need a fit
+    data = copy.deepcopy(committed)
+    data["calibration"]["fits"] = [
+        f for f in data["calibration"]["fits"] if f["family"] != "psum"]
+    assert any("psum" in e for e in check_bench.check(data))
+    # fitted constants must be positive numbers
+    for field in ("alpha_s", "beta_s_per_byte"):
+        for bad in (0.0, -1e-6, None):
+            data = copy.deepcopy(committed)
+            data["calibration"]["fits"][0][field] = bad
+            errors = check_bench.check(data)
+            assert any(field in e for e in errors), (field, bad)
+
+
+def test_calibration_decisions_guarded(committed):
+    for key in check_bench.DECISION_KEYS:
+        data = copy.deepcopy(committed)
+        del data["calibration"]["decisions"][0][key]
+        assert any(key in e for e in check_bench.check(data)), key
+    # verdicts must be RESOLVED schedule names
+    data = copy.deepcopy(committed)
+    data["calibration"]["decisions"][0]["auto_calibrated"] = "auto"
+    assert any("auto_calibrated" in e for e in check_bench.check(data))
+    # an empty decision list is not acceptance evidence
+    data = copy.deepcopy(committed)
+    data["calibration"]["decisions"] = []
+    assert any("decision" in e for e in check_bench.check(data))
 
 
 def test_main_cli(tmp_path, committed, capsys):

@@ -24,6 +24,11 @@ efficiency numbers) hides a regression from every later PR.  Checks:
   buffer, and the sampled selector's steady-state compress must not be
   slower than sort's — the acceptance evidence that O(n) sampled-threshold
   selection keeps steady-state compression kernel-bound.
+* ``calibration`` — the measured cost model (DESIGN.md §17): an α–β fit for
+  both collective families with positive coefficients, the measured stage
+  throughputs and backprop rate, and per-profile calibrated-vs-static auto
+  verdicts — the acceptance evidence that ``schedule=auto`` decisions are
+  driven by measurements, not the static napkin constants.
 
 Usage: ``python tools/check_bench.py [path-to-BENCH_throughput.json]``;
 exits nonzero listing every violation (not just the first).
@@ -84,6 +89,27 @@ SCHEDULE_KEYS = (
 )
 
 SCHEDULE_NAMES = ("stacked", "streamed")
+
+# calibration section (DESIGN.md §17): the measured cost model
+CALIBRATION_FAMILIES = ("gather", "psum")
+
+CALIBRATION_KEYS = (
+    "platform",
+    "jax_version",
+    "fits",
+    "throughputs",
+    "backprop_flops_per_s",
+    "decisions",
+)
+
+DECISION_KEYS = (
+    "profile",
+    "workers",
+    "auto_static",
+    "auto_calibrated",
+    "model_step_ms_stacked_calibrated",
+    "model_step_ms_streamed_calibrated",
+)
 
 
 def check_backends(data: dict) -> List[str]:
@@ -203,10 +229,46 @@ def check_selectors(data: dict) -> List[str]:
     return errors
 
 
+def check_calibration(data: dict) -> List[str]:
+    errors = []
+    cal = data.get("calibration")
+    if not cal:
+        return ["missing 'calibration' field (measured cost model, "
+                "DESIGN.md §17)"]
+    for key in CALIBRATION_KEYS:
+        if key not in cal:
+            errors.append(f"calibration section lacks {key!r}")
+    fits = {f.get("family"): f for f in cal.get("fits", [])}
+    for missing in sorted(set(CALIBRATION_FAMILIES) - set(fits)):
+        errors.append(f"calibration fits lack the {missing!r} family")
+    for family, f in sorted(fits.items()):
+        for key in ("alpha_s", "beta_s_per_byte"):
+            v = f.get(key)
+            if not isinstance(v, (int, float)) or v <= 0:
+                errors.append(
+                    f"calibration fit {family!r}: {key} must be a positive "
+                    f"number, got {v!r}")
+    for d in cal.get("decisions", []):
+        tag = d.get("profile", "?")
+        for key in DECISION_KEYS:
+            if key not in d:
+                errors.append(f"calibration decision {tag} lacks {key!r}")
+        for key in ("auto_static", "auto_calibrated"):
+            if key in d and d.get(key) not in SCHEDULE_NAMES:
+                errors.append(
+                    f"calibration decision {tag}: {key} must be one of "
+                    f"{SCHEDULE_NAMES}, got {d.get(key)!r}")
+    if not cal.get("decisions"):
+        errors.append(
+            "calibration section records no calibrated-vs-static decisions")
+    return errors
+
+
 def check(data: dict) -> List[str]:
     """All violations in one pass (empty list == schema ok)."""
     return (check_backends(data) + check_records(data)
-            + check_schedules(data) + check_selectors(data))
+            + check_schedules(data) + check_selectors(data)
+            + check_calibration(data))
 
 
 def main(argv=None) -> int:
@@ -227,8 +289,10 @@ def main(argv=None) -> int:
     n_rec = len(data.get("records", []))
     n_sched = len(data.get("schedules", []))
     n_sel = len(data.get("selectors", []))
+    n_cal = len(data.get("calibration", {}).get("decisions", []))
     print(f"schema ok: {n_back} backend records, {n_rec} sweep records, "
-          f"{n_sched} schedule-policy records, {n_sel} selector records")
+          f"{n_sched} schedule-policy records, {n_sel} selector records, "
+          f"{n_cal} calibration decisions")
     return 0
 
 
