@@ -41,6 +41,15 @@ real profiling pass (``comms/calibrate.py``) on this host's mesh — fitted
 auto policy's verdict per model profile under the static constants vs under
 the measured profile.  ``tools/check_bench.py`` schema-guards all of it in
 CI.
+
+Two-level topology (DESIGN.md §18): a ``topology`` section sweeps (nodes,
+local) island shapes through the hierarchical cost model — per-axis wire
+bits (intra-node dense-spectrum psum per worker, inter-node compressed
+payloads per node AND per worker), flat psum vs hierarchical modeled
+exchange time, and the auto transport policy's pick.  ``check_bench``
+enforces the acceptance shape: per-worker inter-node wire strictly below
+the flat psum runtime wire on every swept shape, strictly shrinking as the
+island grows.
 """
 
 from __future__ import annotations
@@ -63,6 +72,11 @@ N = 1 << 24  # 16M floats = 64 MB
 SWEEP_WORKERS = 8
 SWEEP_BUCKET_MB = (None, 1, 4, 16)  # None = monolithic (seed behavior)
 SWEEP_TRANSPORTS = ("allgather", "sequenced", "psum")
+# two-level (nodes, local) island shapes (DESIGN.md §18) — all >= 4 nodes
+# (the ISSUE 8 acceptance regime), with growing islands per node count so
+# check_bench can assert the per-worker fabric share shrinks with `local`
+TOPOLOGY_SHAPES = ((4, 2), (4, 4), (4, 8), (8, 2), (8, 4))
+TOPOLOGY_BUCKET_MB = 4
 # engine backends timed on a smaller buffer: off-TPU the pallas backend runs
 # its kernels in interpret mode, so host numbers validate plumbing (and feed
 # the schema), while TPU runs measure the real fused-vs-staged gap (H-K1)
@@ -188,6 +202,64 @@ def _streamed_columns(layout, transport, stacked_bits, m_bytes,
     }
 
 
+def _topology_rows(comp: FFTCompressor) -> tuple:
+    """Two-level topology sweep (DESIGN.md §18): for each (nodes, local)
+    island shape, the per-axis wire split of one hierarchical exchange —
+    the intra-node dense-spectrum psum every island worker pays, the
+    ``nodes`` compressed payloads each island's fabric endpoint lands, and
+    each worker's share of that fabric hop — against the flat psum
+    transport's runtime wire at the same worker count, plus both modeled
+    exchange times and the auto transport policy's pick.  This is the
+    hierarchical-vs-flat wire table EXPERIMENTS.md cites, and check_bench
+    gates the acceptance shape on it."""
+    m_bytes = 4.0 * N
+    layout = bucketing.build_layout(N, TOPOLOGY_BUCKET_MB << 20)
+    payload_bits = cm.bucketed_payload_bits(
+        comp.wire_bits, layout.sizes(), "psum", stacked=True,
+        chunk=layout.chunk)
+    rows, records = [], []
+    for nodes, local in TOPOLOGY_SHAPES:
+        workers = nodes * local
+        flat = cm.exchange_time_s(
+            m_bytes, payload_bits, cm.NETWORKS["tpu-dcn-host"], cm.TPU_V5E,
+            workers=workers, transport="psum", n_buckets=layout.n_buckets,
+            stacked=True, wire_mode="runtime", chunk=layout.chunk)
+        hier = cm.two_level_exchange_time_s(
+            m_bytes, payload_bits, nodes=nodes, local=local,
+            wire_mode="runtime", chunk=layout.chunk)
+        decision = scheduler.choose_transport(
+            N, payload_bits, nodes=nodes, local=local,
+            n_buckets=layout.n_buckets, chunk=layout.chunk)
+        rows.append(Row(
+            name=f"topology_{nodes}x{local}",
+            intra_mbits=round(hier.wire.intra_bits_per_worker / 1e6, 1),
+            inter_mbits_node=round(hier.wire.inter_bits_per_node / 1e6, 1),
+            inter_mbits_worker=round(
+                hier.wire.inter_bits_per_worker / 1e6, 1),
+            flat_mbits_worker=round(flat.wire_bits_per_worker / 1e6, 1),
+            hier_ms=round(hier.exchange_s * 1e3, 3),
+            flat_ms=round(flat.exchange_s * 1e3, 3),
+            auto=decision.transport,
+        ))
+        records.append({
+            "nodes": nodes,
+            "local": local,
+            "workers": workers,
+            "n_buckets": layout.n_buckets,
+            "payload_bits": payload_bits,
+            "intra_bits_per_worker": hier.wire.intra_bits_per_worker,
+            "inter_bits_per_node": hier.wire.inter_bits_per_node,
+            "inter_bits_per_worker": hier.wire.inter_bits_per_worker,
+            "flat_wire_bits_per_worker": flat.wire_bits_per_worker,
+            "model_exchange_ms_hierarchical": hier.exchange_s * 1e3,
+            "model_exchange_ms_flat_psum": flat.exchange_s * 1e3,
+            "model_intra_ms": hier.intra_s * 1e3,
+            "model_inter_ms": hier.inter_s * 1e3,
+            "auto_transport": decision.transport,
+        })
+    return rows, records
+
+
 def _sweep_rows(comp: FFTCompressor) -> list:
     """Bucket size × transport sweep: modeled wire/time + measured compress."""
     m_bytes = 4 * N
@@ -268,6 +340,8 @@ def _sweep_rows(comp: FFTCompressor) -> list:
     rows.extend(schedule_rows)
     calibration_rows, calibration_section = _calibration_rows(comp)
     rows.extend(calibration_rows)
+    topology_rows, topology_records = _topology_rows(comp)
+    rows.extend(topology_rows)
     with open(BENCH_JSON, "w") as f:
         json.dump({"benchmark": "throughput_exchange_sweep",
                    "theta": comp.config.theta,
@@ -276,7 +350,8 @@ def _sweep_rows(comp: FFTCompressor) -> list:
                    "backends": backend_records,
                    "selectors": selector_records,
                    "schedules": schedule_records,
-                   "calibration": calibration_section}, f, indent=2)
+                   "calibration": calibration_section,
+                   "topology": topology_records}, f, indent=2)
     return rows
 
 

@@ -71,17 +71,26 @@ __all__ = [
     "profile_key",
 ]
 
-ARTIFACT_VERSION = 1
+# v2: ProfileKey records the calibration axes and LinkFit carries an
+# optional per-axis tag (DESIGN.md §18) — v1 artifacts, which treated the
+# mesh as one flat shape with no record of WHICH axis the collectives were
+# timed over, are rejected rather than silently mispricing a new topology.
+ARTIFACT_VERSION = 2
 
 # Collective families the transports lower to: the gather transports
 # (allgather/sequenced) ride ``jax.lax.all_gather``; the spectrum transport
 # rides ``jax.lax.psum``.  One α–β fit per family.
 COLLECTIVE_FAMILIES = ("gather", "psum")
 
+# The two-level transports (DESIGN.md §18) price per HOP: hierarchical's
+# bottleneck hop is the inter-node payload gather; reduce_scatter rides the
+# reduce-scatter/all-gather pair the psum family's ring model covers.
 _FAMILY_FOR_TRANSPORT = {
     "allgather": "gather",
     "sequenced": "gather",
     "psum": "psum",
+    "hierarchical": "gather",
+    "reduce_scatter": "psum",
 }
 
 # Fit floors: CPU-host timings are noisy enough that an unconstrained
@@ -113,15 +122,23 @@ class ProfileKeyMismatch(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class ProfileKey:
-    """What a calibration is valid FOR.  All four fields must match for a
-    persisted artifact to be loadable: α–β depend on platform + mesh, the
-    backprop rate on the model, and kernel/collective lowering on the jax
-    version."""
+    """What a calibration is valid FOR.  All fields must match for a
+    persisted artifact to be loadable: α–β depend on platform + mesh AND on
+    which axes the collectives were timed over, the backprop rate on the
+    model, and kernel/collective lowering on the jax version.
+
+    ``mesh`` records ((axis, size), ...) in mesh order — axis NAMES included,
+    so a profile measured on a (node=2, local=4) mesh is rejected on
+    (node=4, local=2) even though both flatten to 8 workers.  ``axes``
+    records the exchange axes the collective sweep ran over; a sweep over
+    the fast ``local`` link must never price the slow ``node`` fabric.
+    """
 
     platform: str  # jax.default_backend()
     mesh: Tuple[Tuple[str, int], ...]  # ((axis, size), ...) in mesh order
     model: str  # "<ClassName>/<param_count>" or "none"
     jax_version: str
+    axes: Tuple[str, ...] = ()  # exchange axes the collectives were timed over
 
     def to_dict(self) -> dict:
         return {
@@ -129,6 +146,7 @@ class ProfileKey:
             "mesh": [list(ax) for ax in self.mesh],
             "model": self.model,
             "jax_version": self.jax_version,
+            "axes": list(self.axes),
         }
 
     @classmethod
@@ -138,6 +156,7 @@ class ProfileKey:
             mesh=tuple((str(a), int(s)) for a, s in d["mesh"]),
             model=d["model"],
             jax_version=d["jax_version"],
+            axes=tuple(str(a) for a in d.get("axes", ())),
         )
 
 
@@ -148,12 +167,18 @@ class LinkFit:
     ``wire_bytes`` is the cost model's per-worker wire volume for that
     collective (P·payload for gather, 2·(P-1)/P·buffer for psum), so
     ``1/β`` plugs directly into the pricing functions as ``t_comm``.
+
+    ``axis=None`` is the base fit over the profile's full exchange-axis
+    spec; a named ``axis`` is a per-axis fit (one mesh axis of a two-level
+    topology — the intra-node link and the inter-node fabric have different
+    α–β, which is the whole point of DESIGN.md §18 pricing).
     """
 
     family: str  # "gather" | "psum"
     alpha_s: float
     beta_s_per_byte: float
     n_points: int = 0
+    axis: Optional[str] = None  # None: base fit over the full axis spec
 
     def __post_init__(self):
         if self.family not in COLLECTIVE_FAMILIES:
@@ -188,17 +213,22 @@ class CostProfile:
     """
 
     key: ProfileKey
-    fits: Tuple[LinkFit, ...]  # one per COLLECTIVE_FAMILIES entry
+    fits: Tuple[LinkFit, ...]  # one base (axis=None) fit per family,
+    # plus optional per-axis fits for two-level meshes
     throughputs: cost_model.Throughputs
     backprop_flops_per_s: float
     calibrated: bool = True  # False: the static-defaults profile
 
     def __post_init__(self):
-        families = tuple(f.family for f in self.fits)
-        if sorted(families) != sorted(COLLECTIVE_FAMILIES):
+        base = tuple(f.family for f in self.fits if f.axis is None)
+        if sorted(base) != sorted(COLLECTIVE_FAMILIES):
             raise ValueError(
-                f"profile needs exactly one fit per family "
-                f"{COLLECTIVE_FAMILIES}, got {families}")
+                f"profile needs exactly one base (axis=None) fit per family "
+                f"{COLLECTIVE_FAMILIES}, got {base}")
+        tagged = [(f.family, f.axis) for f in self.fits]
+        if len(tagged) != len(set(tagged)):
+            raise ValueError(
+                f"duplicate (family, axis) fits in profile: {tagged}")
         if self.backprop_flops_per_s <= 0.0:
             raise ValueError(
                 f"backprop_flops_per_s must be positive, got "
@@ -206,15 +236,25 @@ class CostProfile:
 
     # -- pricing accessors (what cost_model/scheduler consume) --------------
 
-    def fit_for(self, transport: str) -> LinkFit:
+    def fit_for(self, transport: str,
+                axis: Optional[str] = None) -> LinkFit:
+        """The fit pricing ``transport``.  With ``axis``, prefer the
+        per-axis fit for that mesh axis (two-level pricing charges each hop
+        at its own link's α–β) and fall back to the base fit when the
+        profile predates per-axis calibration."""
         family = collective_family(transport)
-        return next(f for f in self.fits if f.family == family)
+        if axis is not None:
+            for f in self.fits:
+                if f.family == family and f.axis == axis:
+                    return f
+        return next(f for f in self.fits
+                    if f.family == family and f.axis is None)
 
-    def alpha_s(self, transport: str) -> float:
-        return self.fit_for(transport).alpha_s
+    def alpha_s(self, transport: str, axis: Optional[str] = None) -> float:
+        return self.fit_for(transport, axis=axis).alpha_s
 
-    def t_comm(self, transport: str) -> float:
-        return self.fit_for(transport).t_comm
+    def t_comm(self, transport: str, axis: Optional[str] = None) -> float:
+        return self.fit_for(transport, axis=axis).t_comm
 
     def backprop_s(self, n_params: int, batch_tokens: int) -> float:
         """Backward-pass wall time at the measured rate (4 FLOPs/param/token
@@ -244,7 +284,8 @@ class CostProfile:
             fits=tuple(
                 LinkFit(family=f["family"], alpha_s=f["alpha_s"],
                         beta_s_per_byte=f["beta_s_per_byte"],
-                        n_points=int(f.get("n_points", 0)))
+                        n_points=int(f.get("n_points", 0)),
+                        axis=f.get("axis"))
                 for f in d["fits"]),
             throughputs=cost_model.Throughputs(
                 **{k: float(v) for k, v in d["throughputs"].items()}),
@@ -353,15 +394,28 @@ def _modeled_wire_bytes(family: str, per_worker_bytes: int, workers: int) -> flo
     return 2.0 * per_worker_bytes * (workers - 1) / workers  # ring allreduce
 
 
+def _axes_tuple(axis) -> Tuple[str, ...]:
+    """An axis spec (name or sequence of names) as a tuple of names."""
+    if isinstance(axis, str):
+        return (axis,)
+    axes = tuple(str(a) for a in axis)
+    if not axes:
+        raise ValueError("axis spec must name at least one mesh axis")
+    return axes
+
+
 def benchmark_collectives(
     mesh,
-    axis: str,
+    axis="data",
     sizes_bytes: Sequence[int] = DEFAULT_SIZES_BYTES,
     *,
     iters: int = 3,
 ) -> Dict[str, List[Tuple[float, float]]]:
     """Time real collectives on the live mesh at a geometric size sweep.
 
+    ``axis`` is one mesh axis name or a tuple of names — a tuple times the
+    collectives over the combined axes (workers = product of the named
+    sizes), which is what the two-level transports' flat baseline rides.
     Returns ``{family: [(modeled_wire_bytes, seconds), ...]}`` for each
     collective family — the direct input to :func:`fit_alpha_beta`.  Each
     point times a jitted ``shard_map`` whose body is ONLY the collective
@@ -374,18 +428,23 @@ def benchmark_collectives(
 
     from repro import jaxcompat as compat
 
-    workers = dict(mesh.shape)[axis]
+    axes = _axes_tuple(axis)
+    shape = dict(mesh.shape)
+    workers = 1
+    for a in axes:
+        workers *= shape[a]
+    spec = axes[0] if len(axes) == 1 else axes
     key = jax.random.PRNGKey(0)
     out: Dict[str, List[Tuple[float, float]]] = {f: [] for f in COLLECTIVE_FAMILIES}
     for size in sizes_bytes:
         n = max(1, int(size) // 4)
         x = jax.random.normal(key, (workers, n), jnp.float32)
         gather = compat.shard_map(
-            lambda v: jax.lax.all_gather(v[0], axis),
-            mesh, in_specs=P(axis), out_specs=P())
+            lambda v: jax.lax.all_gather(v[0], spec),
+            mesh, in_specs=P(spec), out_specs=P())
         psum = compat.shard_map(
-            lambda v: jax.lax.psum(v[0], axis),
-            mesh, in_specs=P(axis), out_specs=P())
+            lambda v: jax.lax.psum(v[0], spec),
+            mesh, in_specs=P(spec), out_specs=P())
         with compat.set_mesh(mesh):
             t_gather = _median_time_s(jax.jit(gather), x, iters=iters)
             t_psum = _median_time_s(jax.jit(psum), x, iters=iters)
@@ -476,8 +535,10 @@ def _batch_tokens(batch_tree) -> int:
 # ---------------------------------------------------------------------------
 
 
-def profile_key(mesh, model=None, model_name: Optional[str] = None) -> ProfileKey:
-    """The key a calibration of THIS system persists under."""
+def profile_key(mesh, model=None, model_name: Optional[str] = None,
+                axes=()) -> ProfileKey:
+    """The key a calibration of THIS system persists under.  ``axes`` is
+    the exchange-axis spec the collective sweep ran over (DESIGN.md §18)."""
     import jax
 
     if model_name is None:
@@ -492,12 +553,24 @@ def profile_key(mesh, model=None, model_name: Optional[str] = None) -> ProfileKe
         mesh=tuple((str(a), int(s)) for a, s in dict(mesh.shape).items()),
         model=model_name,
         jax_version=jax.__version__,
+        axes=tuple(str(a) for a in _axes_tuple(axes)) if axes else (),
     )
+
+
+def _fit_sweeps(sweeps, axis: Optional[str] = None) -> List[LinkFit]:
+    fits = []
+    for family in COLLECTIVE_FAMILIES:
+        points = sweeps[family]
+        alpha, beta = fit_alpha_beta([b for b, _ in points],
+                                     [t for _, t in points])
+        fits.append(LinkFit(family, alpha, beta, n_points=len(points),
+                            axis=axis))
+    return fits
 
 
 def calibrate(
     mesh,
-    axis: str = "data",
+    axis="data",
     *,
     model=None,
     params=None,
@@ -509,20 +582,25 @@ def calibrate(
 ) -> CostProfile:
     """The startup profiling pass: one measured :class:`CostProfile`.
 
-    Times collectives over ``axis`` of the live ``mesh``, fits α–β per
-    collective family, measures the compression-stage throughputs, and —
-    when ``(model, params, batch)`` are given — the model's real backward
-    pass.  Without a model the backprop rate keeps the static default (the
-    profile is still calibrated on the comms side; its key records
-    ``model="none"`` so it will not be accepted for a model-keyed load).
+    Times collectives over ``axis`` of the live ``mesh`` (a name or a tuple
+    of names), fits α–β per collective family, measures the compression-stage
+    throughputs, and — when ``(model, params, batch)`` are given — the
+    model's real backward pass.  A multi-axis spec additionally sweeps each
+    axis SEPARATELY and records per-axis :class:`LinkFit`\\ s, so two-level
+    pricing charges the intra-node hop at the measured ``local`` link rate
+    and the inter-node hop at the measured ``node`` fabric rate.  Without a
+    model the backprop rate keeps the static default (the profile is still
+    calibrated on the comms side; its key records ``model="none"`` so it
+    will not be accepted for a model-keyed load).
     """
-    sweeps = benchmark_collectives(mesh, axis, sizes_bytes, iters=iters)
-    fits = []
-    for family in COLLECTIVE_FAMILIES:
-        points = sweeps[family]
-        alpha, beta = fit_alpha_beta([b for b, _ in points],
-                                     [t for _, t in points])
-        fits.append(LinkFit(family, alpha, beta, n_points=len(points)))
+    axes = _axes_tuple(axis)
+    sweeps = benchmark_collectives(mesh, axes, sizes_bytes, iters=iters)
+    fits = _fit_sweeps(sweeps)
+    if len(axes) > 1:
+        for a in axes:
+            per_axis = benchmark_collectives(mesh, a, sizes_bytes,
+                                             iters=iters)
+            fits.extend(_fit_sweeps(per_axis, axis=a))
     thr = (measure_throughputs(throughput_elems) if measure_stages
            else cost_model.TPU_V5E)
     if model is not None and params is not None and batch is not None:
@@ -530,27 +608,32 @@ def calibrate(
     else:
         backprop = cost_model.BACKPROP_FLOPS_PER_S
     return CostProfile(
-        key=profile_key(mesh, model=model),
+        key=profile_key(mesh, model=model, axes=axes),
         fits=tuple(fits),
         throughputs=thr,
         backprop_flops_per_s=backprop,
     )
 
 
-def load_profile_for(path: str, mesh, model=None) -> CostProfile:
+def load_profile_for(path: str, mesh, model=None, axes=None) -> CostProfile:
     """Load an artifact for THIS mesh/model (what ``build_train_step`` uses).
 
-    Platform, mesh shape and jax version must match the live system exactly;
-    the model key must match the live model OR be ``"none"`` — a comms-only
-    calibration prices any model's collectives (its backprop rate is the
-    static default, so nothing model-specific is being trusted).  Any other
+    Platform, mesh shape (axis names AND sizes — a (node=2, local=4)
+    calibration must not price a (node=4, local=2) mesh) and jax version
+    must match the live system exactly; the model key must match the live
+    model OR be ``"none"`` — a comms-only calibration prices any model's
+    collectives (its backprop rate is the static default, so nothing
+    model-specific is being trusted).  With ``axes``, the artifact must
+    additionally have been calibrated over that exchange-axis spec.  Any
     mismatch raises :class:`ProfileKeyMismatch`.
     """
     profile = CostProfile.load(path)
-    live = profile_key(mesh, model=model)
+    live = profile_key(mesh, model=model,
+                       axes=axes if axes is not None else profile.key.axes)
     ok = (profile.key.platform == live.platform
           and profile.key.mesh == live.mesh
           and profile.key.jax_version == live.jax_version
+          and profile.key.axes == live.axes
           and profile.key.model in (live.model, "none"))
     if not ok:
         raise ProfileKeyMismatch(
@@ -614,7 +697,8 @@ def main(argv=None) -> int:
     mesh = make_local_mesh()
     if args.check is not None:
         profile = CostProfile.load(args.check, expect=None)
-        live = profile_key(mesh, model_name=profile.key.model)
+        live = profile_key(mesh, model_name=profile.key.model,
+                           axes=profile.key.axes)
         if profile.key != live:
             print(f"[calibrate] STALE artifact: measured for {profile.key}, "
                   f"live system is {live}")

@@ -11,16 +11,67 @@ in lowered HLO).
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["axis_size", "ring_all_gather", "ring_reduce_scatter", "ring_all_reduce"]
+__all__ = ["AxisSpec", "normalize_axes", "axis_size", "axis_sizes",
+           "axis_linear_index", "ring_all_gather", "ring_reduce_scatter",
+           "ring_all_reduce"]
+
+# A gradient-sync axis spec: one mesh axis name, or a tuple of names for the
+# multi-axis collectives the two-level transports ride (DESIGN.md §18).
+AxisSpec = Union[str, Sequence[str]]
 
 
-def axis_size(axis_name: str) -> int:
-    return jax.lax.psum(1, axis_name)
+def normalize_axes(axis: AxisSpec) -> Union[str, Tuple[str, ...]]:
+    """Canonicalize an axis spec: str passes through, any other sequence
+    becomes a tuple of names (lists from JSON-ish config land here).  A
+    single-name tuple stays a tuple — collectives treat both spellings
+    identically, so no silent unwrapping."""
+    if isinstance(axis, str):
+        return axis
+    axes = tuple(axis)
+    if not axes or not all(isinstance(a, str) for a in axes):
+        raise ValueError(
+            f"axis spec must be a name or a non-empty sequence of names, "
+            f"got {axis!r}")
+    return axes
+
+
+def axis_size(axis_name: AxisSpec) -> int:
+    """Worker count over one mesh axis OR a tuple of axes (their product).
+
+    ``jax.lax.psum`` accepts a tuple of axis names natively; this wrapper
+    only normalizes the spelling (lists become tuples) so callers holding a
+    config-provided axis spec never trip the silent single-axis assumption
+    the pre-topology code had.
+    """
+    return jax.lax.psum(1, normalize_axes(axis_name))
+
+
+def axis_sizes(axes: AxisSpec) -> Tuple[int, ...]:
+    """Per-axis worker counts, in spec order (shard_map context)."""
+    norm = normalize_axes(axes)
+    if isinstance(norm, str):
+        norm = (norm,)
+    return tuple(jax.lax.psum(1, a) for a in norm)
+
+
+def axis_linear_index(axes: AxisSpec):
+    """Row-major linear worker index over one axis or a tuple of axes.
+
+    Equivalent to ``jax.lax.axis_index(tuple)`` but spelled out so it works
+    on every jax generation the repo straddles (0.4.x included).
+    """
+    norm = normalize_axes(axes)
+    if isinstance(norm, str):
+        return jax.lax.axis_index(norm)
+    idx = jax.lax.axis_index(norm[0])
+    for a in norm[1:]:
+        idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+    return idx
 
 
 def ring_all_gather(x: jnp.ndarray, axis_name: str, *, reverse: bool = False):

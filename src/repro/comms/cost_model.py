@@ -38,8 +38,10 @@ __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "bucket_count", "transport_wire_bits", "overlap_fraction",
            "bucketed_payload_bits", "exchange_time_s", "ExchangePlan",
            "COLLECTIVE_ALPHA_S", "BACKPROP_FLOPS_PER_S",
-           "WIRE_MODES", "dense_spectrum_bits",
+           "WIRE_MODES", "dense_spectrum_bits", "dense_time_bits",
            "StreamedExchangePlan", "streamed_exchange_time_s",
+           "TwoLevelWire", "two_level_wire_bits",
+           "TwoLevelExchangePlan", "two_level_exchange_time_s",
            "dense_allreduce_bits", "RunWireAccount", "run_wire_account"]
 
 
@@ -150,10 +152,75 @@ def dense_spectrum_bits(n_elems: int, chunk: int = 4096) -> float:
     return 2.0 * 32.0 * bins
 
 
+def dense_time_bits(n_elems: int, chunk: int = 4096) -> float:
+    """Wire bits of the chunk-padded DENSE time-domain buffer (f32 rows).
+
+    The reduce_scatter transport's gather half moves the inverse-FFT'd
+    time-domain rows (``chunk`` floats per chunk) instead of the spectrum
+    (``2·(chunk/2+1)`` floats per chunk) — slightly fewer bytes.
+    """
+    if n_elems < 1:
+        raise ValueError(f"n_elems must be >= 1, got {n_elems}")
+    n_chunks = -(-int(n_elems) // int(chunk))
+    return 32.0 * n_chunks * int(chunk)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoLevelWire:
+    """Per-axis wire split of one hierarchical exchange (DESIGN.md §18)."""
+
+    nodes: int
+    local: int
+    intra_bits_per_worker: float  # fast-link hop (spectra psum on the island)
+    inter_bits_per_node: float  # fabric hop: nodes payloads land per island
+    inter_bits_per_worker: float  # island share / local workers
+
+
+def two_level_wire_bits(payload_bits: float, nodes: int, local: int,
+                        *, mode: str = "runtime",
+                        n_elems: Optional[int] = None,
+                        chunk: int = 4096) -> TwoLevelWire:
+    """Wire volumes of one hierarchical exchange, split by axis.
+
+    * intra-node — the dequantized-spectra ``psum`` over the ``local`` axis.
+      ``mode="runtime"`` (what the lowering moves, and what the ISSUE's
+      pricing contract requires here) bills the ring all-reduce of the dense
+      spectrum: ``2·(local-1)/local · dense_spectrum_bits``; ``"modeled"``
+      bills the sparse-allreduce endpoint (one compressed payload).
+    * inter-node — the all_gather of ONE re-compressed payload per island
+      over the ``node`` axis: ``nodes · payload_bits`` land on each island
+      (mode-independent — the fabric hop always moves compressed payloads).
+      Per WORKER that is ``nodes · payload_bits / local``: growing the
+      island shrinks every worker's share of the fabric, which is the whole
+      point of the topology-aware transport (check_bench guards this).
+    """
+    if nodes < 1 or local < 1:
+        raise ValueError(f"topology must be >= (1, 1), got ({nodes}, {local})")
+    if mode not in WIRE_MODES:
+        raise ValueError(f"unknown wire mode {mode!r}; expected {WIRE_MODES}")
+    if mode == "runtime":
+        if n_elems is None:
+            raise ValueError(
+                "runtime two-level pricing needs n_elems: the intra-node "
+                "psum moves the dense spectrum")
+        intra = 2.0 * dense_spectrum_bits(n_elems, chunk) * (local - 1) / local
+    else:
+        intra = float(payload_bits) if local > 1 else 0.0
+    inter_node = float(nodes) * float(payload_bits) if nodes > 1 else 0.0
+    return TwoLevelWire(
+        nodes=int(nodes),
+        local=int(local),
+        intra_bits_per_worker=intra,
+        inter_bits_per_node=inter_node,
+        inter_bits_per_worker=inter_node / float(local),
+    )
+
+
 def transport_wire_bits(transport: str, payload_bits: float, workers: int,
                         *, mode: str = "modeled",
                         n_elems: Optional[int] = None,
-                        chunk: int = 4096) -> float:
+                        chunk: int = 4096,
+                        topology: "Optional[tuple]" = None) -> float:
     """Per-worker wire bits to exchange one compressed payload among P workers.
 
     * ``allgather``/``sequenced`` — every worker materializes all P payloads:
@@ -181,6 +248,17 @@ def transport_wire_bits(transport: str, payload_bits: float, workers: int,
       uncompressed element count) is required for psum in this mode.
       ``choose_schedule`` prices decisions in this mode so ``schedule=auto``
       reflects the collective that will actually run.
+
+    The topology-aware transports (DESIGN.md §18):
+
+    * ``reduce_scatter`` — modeled: the same O(k) sparse endpoint as psum.
+      Runtime: the scatter half moves the dense spectra planes and the
+      gather half the time-domain rows, each (P-1)/P per worker —
+      ring-allreduce-shaped, so it stops growing with P.
+    * ``hierarchical`` — needs ``topology=(nodes, local)``; returns the
+      per-worker TOTAL (intra + inter share) so the single-link-rate
+      pricing functions stay usable.  ``two_level_exchange_time_s`` prices
+      the two hops at their own per-axis α–β instead.
     """
     if workers < 1:
         raise ValueError(f"workers must be >= 1, got {workers}")
@@ -197,6 +275,28 @@ def transport_wire_bits(transport: str, payload_bits: float, workers: int,
             spectrum = dense_spectrum_bits(n_elems, chunk)
             return 2.0 * spectrum * (workers - 1) / workers
         return float(payload_bits)
+    if transport == "reduce_scatter":
+        if mode == "runtime":
+            if n_elems is None:
+                raise ValueError(
+                    "runtime reduce_scatter pricing needs n_elems: the "
+                    "scatter moves the dense spectra planes")
+            dense = dense_spectrum_bits(n_elems, chunk) + dense_time_bits(
+                n_elems, chunk)
+            return dense * (workers - 1) / workers
+        return float(payload_bits)
+    if transport == "hierarchical":
+        if topology is None:
+            raise ValueError(
+                "hierarchical pricing needs topology=(nodes, local)")
+        nodes, local = int(topology[0]), int(topology[1])
+        if nodes * local != workers:
+            raise ValueError(
+                f"topology ({nodes}, {local}) does not multiply out to "
+                f"workers={workers}")
+        wire = two_level_wire_bits(payload_bits, nodes, local, mode=mode,
+                                   n_elems=n_elems, chunk=chunk)
+        return wire.intra_bits_per_worker + wire.inter_bits_per_worker
     raise ValueError(f"unknown transport {transport!r}")
 
 
@@ -229,7 +329,8 @@ def bucketed_payload_bits(wire_bits_fn, sizes, transport: str = "sequenced",
     sizes = list(sizes)
     if not sizes:
         raise ValueError("empty bucket layout")
-    if transport not in ("allgather", "sequenced", "psum"):
+    if transport not in ("allgather", "sequenced", "psum", "hierarchical",
+                         "reduce_scatter"):
         raise ValueError(f"unknown transport {transport!r}")
     if transport == "allgather" or len(sizes) == 1:
         return float(wire_bits_fn(sum(sizes)))
@@ -314,6 +415,7 @@ def exchange_time_s(
     profile=None,
     wire_mode: str = "modeled",
     chunk: int = 4096,
+    topology: "Optional[tuple]" = None,
 ) -> ExchangePlan:
     """Modeled wall time of one compressed gradient exchange.
 
@@ -339,7 +441,7 @@ def exchange_time_s(
     comp_s = 2.0 * compression_cost_s(message_bytes, thr)  # compress + decompress
     wire_per_worker = transport_wire_bits(
         transport, payload_bits, workers, mode=wire_mode,
-        n_elems=int(-(-message_bytes // 4)), chunk=chunk)
+        n_elems=int(-(-message_bytes // 4)), chunk=chunk, topology=topology)
     wire_s = wire_per_worker / 8.0 / t_comm
     if stacked or transport == "allgather" or n_buckets <= 1:
         n_coll = 1
@@ -411,6 +513,7 @@ def streamed_exchange_time_s(
     profile=None,
     wire_mode: str = "modeled",
     chunk: int = 4096,
+    topology: "Optional[tuple]" = None,
 ) -> StreamedExchangePlan:
     """Readiness-timeline model of one streamed exchange.
 
@@ -436,7 +539,7 @@ def streamed_exchange_time_s(
         transport, t_comm, thr, alpha_s, profile)
     wire_bits = transport_wire_bits(
         transport, payload_bits, workers, mode=wire_mode,
-        n_elems=int(-(-message_bytes // 4)), chunk=chunk)
+        n_elems=int(-(-message_bytes // 4)), chunk=chunk, topology=topology)
     comp_total = 2.0 * compression_cost_s(message_bytes, thr)
     wire_total = wire_bits / 8.0 / t_comm
     finish = 0.0
@@ -469,6 +572,122 @@ def streamed_exchange_time_s(
         step_s=max(backprop_s, finish),
         n_collectives=n_groups,
         launch_s=alpha_s * n_groups,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Two-level (hierarchical) exchange pricing (DESIGN.md §18)
+#
+# The flat pricing functions above bill every wire bit at ONE link rate.
+# The hierarchical transport's two hops ride different links — the
+# intra-node spectra psum on the fast island link, the re-compressed
+# payload gather on the slow fabric — so its plan prices each hop at its
+# own per-axis α–β (calibrate.py fits them per mesh axis when given a 2-D
+# mesh; the static defaults use the ICI vs DCN byte-rates).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoLevelExchangePlan:
+    """A priced hierarchical exchange: per-hop wire, per-hop time."""
+
+    transport: str
+    nodes: int
+    local: int
+    wire: TwoLevelWire
+    intra_s: float  # island hop at the intra-axis link rate
+    inter_s: float  # fabric hop at the inter-axis link rate
+    comp_s: float  # leaf dense-FFT pass + node compress + gather decompress
+    launch_s: float  # one collective launch per hop
+    exchange_s: float  # total
+
+
+def _axis_link_pricing(transport: str, t_comm, alpha_s, profile,
+                       axis: Optional[str], default_network: str):
+    """(t_comm, alpha_s) for ONE hop: explicit > per-axis profile fit >
+    profile base fit > static default for that link class."""
+    if t_comm is None:
+        if profile is not None:
+            try:
+                t_comm = profile.t_comm(transport, axis=axis)
+            except TypeError:  # profile predating per-axis fits
+                t_comm = profile.t_comm(transport)
+        else:
+            t_comm = NETWORKS[default_network]
+    if alpha_s is None:
+        if profile is not None:
+            try:
+                alpha_s = profile.alpha_s(transport, axis=axis)
+            except TypeError:
+                alpha_s = profile.alpha_s(transport)
+        else:
+            alpha_s = COLLECTIVE_ALPHA_S
+    return t_comm, alpha_s
+
+
+def two_level_exchange_time_s(
+    message_bytes: float,
+    payload_bits: float,
+    *,
+    nodes: int,
+    local: int,
+    thr: Optional[Throughputs] = None,
+    t_comm_intra: Optional[float] = None,
+    t_comm_inter: Optional[float] = None,
+    alpha_intra_s: Optional[float] = None,
+    alpha_inter_s: Optional[float] = None,
+    profile=None,
+    wire_mode: str = "runtime",
+    chunk: int = 4096,
+    intra_axis: str = "local",
+    inter_axis: str = "node",
+) -> TwoLevelExchangePlan:
+    """Modeled wall time of one hierarchical exchange (DESIGN.md §18).
+
+    Wire: ``two_level_wire_bits`` — the default ``wire_mode="runtime"``
+    bills the intra-node hop as the dense-spectrum psum the lowering
+    actually runs.  The island hop is priced per worker at the intra-axis
+    link rate; the fabric hop per NODE at the inter-axis rate (the island's
+    workers share one fabric endpoint — that collective's wall time is the
+    island's, not divided among its workers).
+
+    Compression: three passes of the §III-D pipeline — the leaf dense-FFT
+    pass feeding the intra psum (no leaf top-k: the dense psum makes it
+    free loss, transport.py), the per-node compress of the island mean,
+    and the gather-side decompress folded into the final mean.
+
+    Link rates/launch latencies left ``None`` resolve per hop: the intra
+    hop from the profile's ``psum`` fit on ``intra_axis``, the inter hop
+    from the ``gather`` fit on ``inter_axis`` (per-axis fits when the
+    profile was calibrated on a 2-D mesh, its base fits otherwise); with no
+    profile, the static ICI vs DCN byte-rates.
+    """
+    if thr is None:
+        thr = profile.throughputs if profile is not None else TPU_V5E
+    t_comm_intra, alpha_intra_s = _axis_link_pricing(
+        "psum", t_comm_intra, alpha_intra_s, profile, intra_axis,
+        "tpu-ici-link")
+    t_comm_inter, alpha_inter_s = _axis_link_pricing(
+        "allgather", t_comm_inter, alpha_inter_s, profile, inter_axis,
+        "tpu-dcn-host")
+    wire = two_level_wire_bits(
+        payload_bits, nodes, local, mode=wire_mode,
+        n_elems=int(-(-message_bytes // 4)), chunk=chunk)
+    comp_s = 3.0 * compression_cost_s(message_bytes, thr)
+    intra_s = wire.intra_bits_per_worker / 8.0 / t_comm_intra
+    inter_s = wire.inter_bits_per_node / 8.0 / t_comm_inter
+    launch_s = (alpha_intra_s if local > 1 else 0.0) + (
+        alpha_inter_s if nodes > 1 else 0.0)
+    return TwoLevelExchangePlan(
+        transport="hierarchical",
+        nodes=int(nodes),
+        local=int(local),
+        wire=wire,
+        intra_s=intra_s,
+        inter_s=inter_s,
+        comp_s=comp_s,
+        launch_s=launch_s,
+        exchange_s=comp_s + intra_s + inter_s + launch_s,
     )
 
 
@@ -516,12 +735,14 @@ def run_wire_account(
     transport: str,
     workers: int,
     dtype_bits: int = 32,
+    topology: "Optional[tuple]" = None,
 ) -> RunWireAccount:
     """Price a whole run: per-step compressed payloads vs the dense baseline.
 
     ``per_step_payload_bits[t]`` is the compressor's ``wire_bits`` at step t's
     (quantized) theta; a dense step is priced as the ring all-reduce instead
     of a payload exchange (pass the step's entry as ``None``).
+    ``topology=(nodes, local)`` is required for the hierarchical transport.
     """
     steps = len(per_step_payload_bits)
     dense_step = dense_allreduce_bits(n_elems, workers, dtype_bits)
@@ -531,7 +752,8 @@ def run_wire_account(
         if payload is None:
             compressed_total += dense_step
         else:
-            compressed_total += transport_wire_bits(transport, payload, workers)
+            compressed_total += transport_wire_bits(
+                transport, payload, workers, topology=topology)
     savings = dense_total / compressed_total if compressed_total > 0 else float("inf")
     return RunWireAccount(
         transport=transport,

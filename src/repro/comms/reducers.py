@@ -111,7 +111,10 @@ def unflatten_tree(flat: jnp.ndarray, shapes, treedef):
 @dataclasses.dataclass(frozen=True)
 class ReducerConfig:
     kind: str = "dense"  # dense|fft|timedomain|terngrad|qsgd|hierarchical
-    axis: Optional[str] = "data"  # gradient-sync mesh axis (None: auto-handled)
+    # gradient-sync mesh axis: one name, or a tuple of names for two-level
+    # topologies (("node", "local") — required by transport="hierarchical",
+    # accepted by every flat transport; None: auto-handled)
+    axis: Optional[object] = "data"
     pod_axis: Optional[str] = None  # set for hierarchical (compressed) axis
     theta: float = 0.7
     n_bits: int = 8
@@ -124,7 +127,10 @@ class ReducerConfig:
     # bucketed exchange (DESIGN.md §8-§9): target bucket size in bytes of the
     # f32 gradient (None = one monolithic bucket) and the collective strategy
     bucket_bytes: Optional[int] = None
-    transport: str = "allgather"  # allgather|sequenced|psum
+    # allgather|sequenced|psum|hierarchical|reduce_scatter, or "auto" (the
+    # cost-model transport policy: flat psum vs hierarchical, resolved per
+    # topology by scheduler.resolve_transport)
+    transport: str = "allgather"
     # compressor stage-execution engine (DESIGN.md §13): reference|pallas|auto
     backend: str = "reference"
     # batched bucket executor (DESIGN.md §14): compress every bucket in one
@@ -153,10 +159,14 @@ class ReducerConfig:
             raise ValueError(
                 f"unknown selector {self.selector!r}; expected one of "
                 f"{SELECTOR_NAMES}")
-        if self.transport not in TRANSPORT_NAMES:
+        if self.transport not in TRANSPORT_NAMES + ("auto",):
             raise ValueError(
-                f"unknown transport {self.transport!r}; expected {TRANSPORT_NAMES}"
+                f"unknown transport {self.transport!r}; expected one of "
+                f"{TRANSPORT_NAMES + ('auto',)}"
             )
+        if self.axis is not None and not isinstance(self.axis, str):
+            # normalize sequence specs to tuples so the config stays hashable
+            object.__setattr__(self, "axis", tuple(self.axis))
         if self.bucket_bytes is not None and self.bucket_bytes <= 0:
             raise ValueError(f"bucket_bytes must be positive, got {self.bucket_bytes}")
         if self.backend not in BACKEND_NAMES:
@@ -213,20 +223,22 @@ def _make_compressor(config: ReducerConfig):
 
 
 def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
-                 workers: Optional[int] = None, profile=None):
+                 workers: Optional[int] = None, profile=None,
+                 topology: Optional[Tuple[int, int]] = None):
     """Returns reduce_fn(grads[, residual]) for use INSIDE shard_map.
 
     Without error feedback: reduce_fn(grads) -> mean_grads.
     With error feedback:    reduce_fn(grads, residual) -> (mean_grads, residual').
 
-    ``batch_tokens``, ``workers`` and ``profile`` are the auto-schedule
-    policy's pricing inputs (DESIGN.md §15/§17): the train-step builder
-    passes the real per-step token count, the gradient axis's mesh size, and
-    (when ``StepConfig.calibration_path`` names one) the measured
-    ``calibrate.CostProfile``, so ``schedule='auto'`` prices the actual
-    backward pass on the actual topology with fitted constants.  Direct
-    callers may omit all three (documented defaults keep the decision
-    deterministic).
+    ``batch_tokens``, ``workers``, ``profile`` and ``topology`` are the
+    policy layers' pricing inputs (DESIGN.md §15/§17/§18): the train-step
+    builder passes the real per-step token count, the gradient axes' mesh
+    size, (when ``StepConfig.calibration_path`` names one) the measured
+    ``calibrate.CostProfile``, and — on a two-level mesh — the (nodes,
+    local) shape of the exchange axes, so ``schedule='auto'`` prices the
+    actual backward pass on the actual topology and ``transport='auto'``
+    can pick flat psum vs hierarchical.  Direct callers may omit all four
+    (documented defaults keep the decisions deterministic).
     """
     if config.kind == "dense":
         if config.error_feedback:
@@ -245,33 +257,49 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
         return dense_reduce
 
     comp = _make_compressor(config)
-    transport = get_transport(config.transport)
 
-    def _schedule_for(total: int) -> str:
+    def _concrete(total: int) -> ReducerConfig:
+        """The config with ``transport='auto'`` resolved for a flat buffer
+        of this size — a pure host-side computation per trace (the flat
+        length is static inside jit), like the schedule resolution below."""
+        name, _ = scheduler.resolve_transport(
+            config, total, topology=topology, profile=profile)
+        if name == config.transport:
+            return config
+        return dataclasses.replace(config, transport=name)
+
+    def _schedule_for(cfg: ReducerConfig, total: int) -> str:
         """Concrete dispatch schedule for a flat buffer of this size —
         resolved at trace time (the flat length is static inside jit), so
         an auto decision is one pure host-side computation per trace."""
         resolved, _ = scheduler.resolve_schedule(
-            config, total, batch_tokens, workers=workers, profile=profile)
+            cfg, total, batch_tokens, workers=workers, profile=profile,
+            topology=topology)
         return resolved
 
-    def _exchange_flat(flat: jnp.ndarray, axis: str) -> jnp.ndarray:
-        layout = config.layout_for(flat.shape[0])
-        if _schedule_for(flat.shape[0]) == "streamed" and layout.n_buckets > 1:
-            plan = scheduler.build_plan(layout, config.stream_groups)
+    def _exchange_flat(flat: jnp.ndarray, axis) -> jnp.ndarray:
+        cfg = _concrete(flat.shape[0])
+        transport = get_transport(cfg.transport)
+        layout = cfg.layout_for(flat.shape[0])
+        if (_schedule_for(cfg, flat.shape[0]) == "streamed"
+                and layout.n_buckets > 1):
+            plan = scheduler.build_plan(layout, cfg.stream_groups)
             return scheduler.exchange_streamed(
-                transport, flat, plan, comp, axis, stacked=config.stacked)
+                transport, flat, plan, comp, axis, stacked=cfg.stacked)
         return transport.exchange_flat(flat, layout, comp, axis,
-                                       stacked=config.stacked)
+                                       stacked=cfg.stacked)
 
     def _local_roundtrip_flat(flat: jnp.ndarray) -> jnp.ndarray:
-        layout = config.layout_for(flat.shape[0])
-        if _schedule_for(flat.shape[0]) == "streamed" and layout.n_buckets > 1:
-            plan = scheduler.build_plan(layout, config.stream_groups)
+        cfg = _concrete(flat.shape[0])
+        transport = get_transport(cfg.transport)
+        layout = cfg.layout_for(flat.shape[0])
+        if (_schedule_for(cfg, flat.shape[0]) == "streamed"
+                and layout.n_buckets > 1):
+            plan = scheduler.build_plan(layout, cfg.stream_groups)
             return scheduler.local_roundtrip_streamed(
-                transport, flat, plan, comp, stacked=config.stacked)
+                transport, flat, plan, comp, stacked=cfg.stacked)
         return transport.local_roundtrip_flat(
-            flat, layout, comp, stacked=config.stacked)
+            flat, layout, comp, stacked=cfg.stacked)
 
     def compressed_reduce(grads):
         flat, shapes, treedef = flatten_tree(grads)

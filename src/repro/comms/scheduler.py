@@ -55,9 +55,12 @@ __all__ = [
     "exchange_streamed",
     "local_roundtrip_streamed",
     "ScheduleDecision",
+    "TransportDecision",
     "choose_schedule",
+    "choose_transport",
     "modeled_backprop_s",
     "resolve_schedule",
+    "resolve_transport",
     "BACKPROP_FLOPS_PER_S",
     "DEFAULT_BATCH_TOKENS",
     "DEFAULT_WORKERS",
@@ -250,6 +253,7 @@ def choose_schedule(
     alpha_s: Optional[float] = None,
     profile=None,
     wire_mode: str = "runtime",
+    topology: Optional[Tuple[int, int]] = None,
 ) -> ScheduleDecision:
     """The auto decision rule (DESIGN.md §15/§17).
 
@@ -271,12 +275,12 @@ def choose_schedule(
         message_bytes, payload_bits, t_comm, thr, workers=workers,
         transport=transport, n_buckets=plan.layout.n_buckets, stacked=True,
         alpha_s=alpha_s, profile=profile, wire_mode=wire_mode,
-        chunk=plan.layout.chunk)
+        chunk=plan.layout.chunk, topology=topology)
     streamed_plan = cost_model.streamed_exchange_time_s(
         message_bytes, payload_bits, t_comm, thr, workers=workers,
         transport=transport, group_fractions=plan.group_fractions(),
         backprop_s=backprop_s, alpha_s=alpha_s, profile=profile,
-        wire_mode=wire_mode, chunk=plan.layout.chunk)
+        wire_mode=wire_mode, chunk=plan.layout.chunk, topology=topology)
     stacked_step = backprop_s + stacked_plan.exchange_s
     streamed_step = streamed_plan.step_s
     return ScheduleDecision(
@@ -296,6 +300,7 @@ def resolve_schedule(
     *,
     workers: Optional[int] = None,
     profile=None,
+    topology: Optional[Tuple[int, int]] = None,
 ) -> Tuple[str, Optional[ScheduleDecision]]:
     """Resolve a ``ReducerConfig.schedule`` to a concrete name.
 
@@ -334,8 +339,104 @@ def resolve_schedule(
     decision = choose_schedule(
         plan, 4.0 * n_elems, payload_bits,
         workers=p, transport=config.transport,
-        backprop_s=backprop_s, profile=profile)
+        backprop_s=backprop_s, profile=profile, topology=topology)
     return decision.schedule, decision
+
+
+# ---------------------------------------------------------------------------
+# policy layer: flat vs hierarchical transport, decided by the cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportDecision:
+    """The transport auto policy's verdict plus the numbers behind it."""
+
+    transport: str  # "psum" | "hierarchical"
+    flat_exchange_s: float  # flat psum over the combined axes
+    hier_exchange_s: float  # two-level island reduce + fabric gather
+    nodes: int
+    local: int
+    inter_bits_per_worker: float  # hierarchical's fabric share per worker
+    flat_wire_bits: float  # flat psum's per-worker runtime wire
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def choose_transport(
+    n_elems: int,
+    payload_bits: float,
+    *,
+    nodes: int,
+    local: int,
+    n_buckets: int = 1,
+    chunk: int = 4096,
+    profile=None,
+) -> TransportDecision:
+    """Flat ``psum`` vs ``hierarchical`` on a (nodes, local) topology.
+
+    Both candidates are priced in ``wire_mode="runtime"`` (decisions price
+    today's lowering, DESIGN.md §17): flat psum ring-reduces the dense
+    spectrum over all ``nodes·local`` workers at one link rate;
+    hierarchical pays the same dense psum only inside the island plus
+    ``nodes`` compressed payloads per island on the fabric, each hop at its
+    own (per-axis, when calibrated) α–β.  Hierarchical wins exactly when
+    the fabric is slow enough that shrinking its traffic to one payload per
+    island beats the second compression pass it costs.
+    """
+    workers = int(nodes) * int(local)
+    flat = cost_model.exchange_time_s(
+        4.0 * n_elems, payload_bits, workers=workers, transport="psum",
+        n_buckets=n_buckets, stacked=True, profile=profile,
+        wire_mode="runtime", chunk=chunk)
+    hier = cost_model.two_level_exchange_time_s(
+        4.0 * n_elems, payload_bits, nodes=nodes, local=local,
+        profile=profile, wire_mode="runtime", chunk=chunk)
+    return TransportDecision(
+        transport=("hierarchical"
+                   if hier.exchange_s < flat.exchange_s else "psum"),
+        flat_exchange_s=flat.exchange_s,
+        hier_exchange_s=hier.exchange_s,
+        nodes=int(nodes),
+        local=int(local),
+        inter_bits_per_worker=hier.wire.inter_bits_per_worker,
+        flat_wire_bits=flat.wire_bits_per_worker,
+    )
+
+
+def resolve_transport(
+    config,
+    n_elems: int,
+    *,
+    topology: Optional[Tuple[int, int]] = None,
+    profile=None,
+) -> Tuple[str, Optional[TransportDecision]]:
+    """Resolve ``ReducerConfig.transport`` to a concrete name.
+
+    Non-``auto`` transports pass through untouched.  ``auto`` needs a
+    ``topology`` (the live mesh's (nodes, local) over the reducer's
+    exchange axes — ``build_train_step`` derives it); a degenerate topology
+    (one node, or one worker per node — no island to exploit) resolves to
+    flat ``psum`` without pricing, as does a config with no wire model
+    (dense) whose payload the candidates cannot price.  Pure function of
+    its inputs, like :func:`resolve_schedule`.
+    """
+    if config.transport != "auto":
+        return config.transport, None
+    if topology is None or topology[0] <= 1 or topology[1] <= 1:
+        return "psum", None
+    comp = _wire_model_compressor(config)
+    if comp is None:
+        return "psum", None
+    layout = config.layout_for(n_elems)
+    payload_bits = cost_model.bucketed_payload_bits(
+        comp.wire_bits, layout.sizes(), "psum",
+        stacked=True, chunk=layout.chunk)
+    decision = choose_transport(
+        n_elems, payload_bits, nodes=topology[0], local=topology[1],
+        n_buckets=layout.n_buckets, chunk=layout.chunk, profile=profile)
+    return decision.transport, decision
 
 
 def _wire_model_compressor(config):

@@ -6,17 +6,27 @@ one compressor.  All transports compute the SAME mean — mean over the axis of
 the per-worker dequantized reconstructions — they differ in which collective
 carries the bytes and at what granularity:
 
-========== =========================== ============================== =========
-name       collective                  per-worker wire (cost model)   overlap
-========== =========================== ============================== =========
-allgather  one all_gather of the       P · B  (P payloads land on     none
-           monolithic payload          every worker)
-sequenced  one all_gather PER BUCKET   P · B  total, issued as        buckets
-           (independent collectives)   n_buckets independent ops      pipeline
-psum       per-bucket psum of the      B      (in-network reduction:  buckets
-           locally dequantized         each worker injects its kept
-           spectrum                    coefficients once; P-free)
-========== =========================== ============================== =========
+============== =========================== ============================== =========
+name           collective                  per-worker wire (cost model)   overlap
+============== =========================== ============================== =========
+allgather      one all_gather of the       P · B  (P payloads land on     none
+               monolithic payload          every worker)
+sequenced      one all_gather PER BUCKET   P · B  total, issued as        buckets
+               (independent collectives)   n_buckets independent ops      pipeline
+psum           per-bucket psum of the      B      (in-network reduction:  buckets
+               locally dequantized         each worker injects its kept
+               spectrum                    coefficients once; P-free)
+hierarchical   intra-node spectra psum     inter-node: nodes·B per NODE   buckets
+               ('local' axis) -> ONE       (one compressed payload per
+               re-compressed payload per   island crosses the fabric);
+               island -> inter-node        intra-node: dense-spectrum
+               all_gather ('node' axis)    psum on the fast link
+reduce_scatter psum_scatter of spectra     2·(P-1)/P of the dense         buckets
+               over the BUCKET axis; each  planes (ring-allreduce-
+               worker iFFTs its own        shaped: gather-path wire
+               contiguous sub_layout       stops growing with P)
+               range, then all_gather
+============== =========================== ============================== =========
 
 ``B = comp.wire_bits(n)`` at equal theta; see ``cost_model.transport_wire_bits``
 for the model the acceptance tests assert against (the psum column prices the
@@ -34,6 +44,22 @@ Quantizer granularity: the monolithic ``allgather`` transport fits ONE
 quantizer over the whole buffer (seed behavior); ``sequenced`` and ``psum``
 compress per bucket, so each bucket fits its own range (small buckets stop
 inheriting a global range — see ``FFTCompressor.compress_buckets``).
+
+Two-level topology (DESIGN.md §18): the ``hierarchical`` transport takes a
+TUPLE axis spec ``(node_axis, local_axis)`` over a 2-D mesh
+(``launch.mesh.make_two_level_mesh``).  FFT linearity makes the intra-node
+hop a plain ``psum`` of dequantized spectra over the fast link; the node
+mean is re-compressed ONCE so the slow fabric moves exactly one compressed
+``StackedPayload`` per island; the inter-node all_gather's result is
+replicated over the local axis by construction (the psum already
+broadcast), so the intra-node broadcast costs nothing extra.  The
+``reduce_scatter`` transport is flat (one axis or a tuple treated as one
+flattened axis) but partitions the BUCKET axis: ``psum_scatter`` hands each
+worker the reduced spectra of its own contiguous ``sub_layout`` range, the
+worker runs the inverse FFT only on its shard, and a tiled all_gather
+rebuilds the flat buffer — per-worker wire is ring-allreduce-shaped
+(2·(P-1)/P of the dense planes) instead of growing with P like the gather
+transports.
 
 Batched bucket executor (DESIGN.md §14): the hot entry point is now
 ``exchange_flat`` — the whole flat gradient goes in, the whole mean comes
@@ -56,9 +82,26 @@ from repro.comms import bucketing
 from repro.comms.collectives import axis_size
 from repro.core import fft as cfft
 
-__all__ = ["Transport", "get_transport", "TRANSPORT_NAMES"]
+__all__ = ["Transport", "get_transport", "TRANSPORT_NAMES", "two_level_axes"]
 
-TRANSPORT_NAMES = ("allgather", "sequenced", "psum")
+TRANSPORT_NAMES = ("allgather", "sequenced", "psum", "hierarchical",
+                   "reduce_scatter")
+
+
+def two_level_axes(axis) -> tuple:
+    """Validate a hierarchical transport's axis spec -> (node_axis, local_axis).
+
+    The hierarchical transport is the only one whose two hops ride DIFFERENT
+    links, so it refuses a flat axis instead of silently degenerating: the
+    caller must say which axis is the slow fabric and which the fast
+    intra-node link.
+    """
+    if (isinstance(axis, (tuple, list)) and len(axis) == 2
+            and all(isinstance(a, str) for a in axis)):
+        return tuple(axis)
+    raise ValueError(
+        f"hierarchical transport needs axis=(node_axis, local_axis) over a "
+        f"2-D mesh (launch.mesh.make_two_level_mesh), got {axis!r}")
 
 
 def _compress_all(buckets: Sequence[jnp.ndarray], comp) -> List:
@@ -284,6 +327,151 @@ class SpectrumPsumTransport(Transport):
             comp.decompress_stacked(payload), layout)
 
 
+class HierarchicalTransport(Transport):
+    """Two-level exchange over a (node, local) mesh (DESIGN.md §18).
+
+    Dataflow per exchange (stacked path, spectral compressor):
+
+    1. every worker runs the chunked rfft of its buckets — the DENSE
+       spectrum, no thresholding: the intra-node psum moves dense spectra
+       planes either way (the psum semantics, ``_psum_mean_payload``), so a
+       leaf-level top-k would add loss without saving a single intra byte;
+    2. intra-node: ONE ``psum`` of the dense spectra planes over the fast
+       ``local`` axis — FFT linearity accumulates the deltas in the
+       spectrum, and the psum's result is already replicated across the
+       island (the "broadcast" of step 4 is free);
+    3. compress the node-mean signal ONCE per island — the ONLY lossy step
+       — so the slow inter-node fabric moves exactly one compressed
+       ``StackedPayload`` per node instead of one per worker;
+    4. inter-node: all_gather of the per-node payloads over ``node``, folded
+       left-to-right (``_ordered_worker_mean``) so every worker — and every
+       run — produces bit-identical means.
+
+    The node-level compression keeps top-k of the ISLAND MEAN's spectrum
+    rather than per-worker top-k of each leaf spectrum, so the hierarchical
+    mean tracks the flat psum mean within the lab's tolerance envelope
+    rather than bitwise — the accuracy claim ``hierarchical_matches_flat``
+    (lab/evaluate.py) guards the gap.  Determinism is still exact: fixed
+    psum order on an island, fixed fold order across islands.
+
+    Degrades gracefully for non-spectral compressors: the intra-node psum
+    runs on the raw time-domain bucket rows (equal by linearity, same wire).
+    """
+
+    name = "hierarchical"
+
+    def exchange(self, buckets, comp, axis):
+        node_ax, local_ax = two_level_axes(axis)
+        inv_l = 1.0 / axis_size(local_ax)
+        # loop fallback psums the raw time-domain buckets (== the spectra
+        # psum by FFT linearity, same dense wire), then compresses the node
+        # mean once per island
+        node_means = [jax.lax.psum(b, local_ax) * inv_l for b in buckets]
+        node_payloads = _compress_all(node_means, comp)
+        return [_gather_mean_payload(p, comp, node_ax) for p in node_payloads]
+
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+        node_ax, local_ax = two_level_axes(axis)
+        if not (stacked and _can_stack(comp)):
+            return super().exchange_flat(flat, layout, comp, axis, stacked)
+        inv_l = 1.0 / axis_size(local_ax)
+        rows = bucketing.stack_buckets(flat, layout)  # (B, padded)
+        if hasattr(comp, "decompress_spectrum"):
+            x3 = rows.reshape(layout.n_buckets, -1, layout.chunk)
+            spec = jnp.fft.rfft(x3, axis=-1)  # DENSE spectra — no top-k
+            summed = jax.lax.psum(jnp.stack([spec.real, spec.imag]), local_ax)
+            node_mean = bucketing.unstack_buckets(
+                _irfft_rows((summed[0] + 1j * summed[1]) * inv_l, layout.chunk),
+                layout)
+        else:
+            node_mean = bucketing.unstack_buckets(
+                jax.lax.psum(rows, local_ax) * inv_l, layout)
+        # compress ONCE per island: this payload is the only thing the
+        # inter-node fabric carries (every island worker holds the same
+        # node_mean after the psum, so the fabric sees one copy per node)
+        node_payload = _compress_stacked(node_mean, layout, comp)
+        gathered = jax.lax.all_gather(node_payload, node_ax)
+        if hasattr(comp, "decompress_spectrum"):
+            spectra = jax.vmap(comp.decompress_spectrum)(gathered)
+            mean = _ordered_worker_mean(spectra)
+            return bucketing.unstack_buckets(
+                _irfft_rows(mean, layout.chunk), layout)
+        recon = jax.vmap(comp.decompress_stacked)(gathered)
+        return bucketing.unstack_buckets(_ordered_worker_mean(recon), layout)
+
+    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+        # EF residual: the exchange's only loss is the island-level compress
+        # of the node MEAN — per-worker state can't hold island-shared loss,
+        # so the residual accumulates this worker's own compress roundtrip
+        # as the local estimate of what the island compress drops (same
+        # compressor, same theta, same bucket granularity as the flat
+        # transports); see DESIGN.md §18
+        if not (stacked and _can_stack(comp)):
+            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+        payload = _compress_stacked(flat, layout, comp)
+        return bucketing.unstack_buckets(
+            comp.decompress_stacked(payload), layout)
+
+
+class ReduceScatterTransport(Transport):
+    """Bucket-partitioned reduce: psum_scatter over the bucket axis.
+
+    Stacked path: the dequantized spectra planes (leading axis = buckets,
+    padded to a multiple of P with zero rows) ride ONE ``psum_scatter``;
+    worker i receives the reduced planes of the contiguous bucket range
+    ``[i·B/P, (i+1)·B/P)`` — exactly a ``bucketing.sub_layout`` ownership
+    range — runs the inverse FFT only on its own rows, and a tiled
+    ``all_gather`` of the TIME-DOMAIN rows rebuilds the flat buffer.
+    Per-worker wire is ring-allreduce-shaped (2·(P-1)/P of the dense
+    planes): unlike the gather transports it stops growing with P.
+
+    ``axis`` may be one name or a tuple (the tuple is treated as one
+    flattened worker axis — ``psum_scatter``/``all_gather`` accept both).
+    Per-bucket loop fallback degrades to the psum transport's per-bucket
+    exchange (same mean; a single bucket has nothing to scatter).
+    """
+
+    name = "reduce_scatter"
+
+    def exchange(self, buckets, comp, axis):
+        payloads = _compress_all(buckets, comp)
+        return [_psum_mean_payload(p, comp, axis) for p in payloads]
+
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+        if not (stacked and _can_stack(comp)):
+            return super().exchange_flat(flat, layout, comp, axis, stacked)
+        p = axis_size(axis)
+        inv_p = 1.0 / p
+        payload = _compress_stacked(flat, layout, comp)
+        if hasattr(comp, "decompress_spectrum"):
+            spec = comp.decompress_spectrum(payload)  # (B, max_chunks, f)
+            planes = jnp.stack([spec.real, spec.imag], axis=1)  # (B, 2, c, f)
+        else:
+            planes = comp.decompress_stacked(payload)[:, None, :]  # (B, 1, n)
+        b = planes.shape[0]
+        pad_rows = (-b) % p
+        if pad_rows:
+            planes = jnp.concatenate(
+                [planes, jnp.zeros((pad_rows,) + planes.shape[1:],
+                                   planes.dtype)])
+        shard = jax.lax.psum_scatter(
+            planes, axis, scatter_dimension=0, tiled=True)  # (B'/P, 2, c, f)
+        if hasattr(comp, "decompress_spectrum"):
+            mean_spec = (shard[:, 0] + 1j * shard[:, 1]) * inv_p
+            rows = _irfft_rows(mean_spec, layout.chunk)  # (B'/P, padded)
+        else:
+            rows = shard[:, 0] * inv_p
+        full = jax.lax.all_gather(rows, axis, tiled=True)  # (B', padded)
+        return bucketing.unstack_buckets(full[:b], layout)
+
+    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+        if not (stacked and _can_stack(comp)):
+            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+        payload = _compress_stacked(flat, layout, comp)
+        return bucketing.unstack_buckets(
+            comp.decompress_stacked(payload), layout)
+
+
 def _resplit(flat: jnp.ndarray, sizes: List[int]) -> List[jnp.ndarray]:
     out, off = [], 0
     for s in sizes:
@@ -293,7 +481,9 @@ def _resplit(flat: jnp.ndarray, sizes: List[int]) -> List[jnp.ndarray]:
 
 
 _TRANSPORTS = {
-    t.name: t for t in (AllGatherTransport(), SequencedTransport(), SpectrumPsumTransport())
+    t.name: t for t in (AllGatherTransport(), SequencedTransport(),
+                        SpectrumPsumTransport(), HierarchicalTransport(),
+                        ReduceScatterTransport())
 }
 
 

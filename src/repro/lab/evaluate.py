@@ -21,6 +21,12 @@ model family (paper sections in brackets):
   (stacked single collective vs backprop-interleaved readiness streaming,
   DESIGN.md §15) trace BITWISE-identical loss curves (atol 0 on CPU: the
   schedule reorders dispatch, never arithmetic).
+* ``hierarchical_matches_flat`` — the two-level-topology rows (DESIGN.md
+  §18: hierarchical re-compresses once per island — a second, island-shared
+  lossy step — and reduce_scatter shards the psum over the bucket axis)
+  reach final losses within ``loss_tol`` of the flat psum row.  Convergence
+  equivalence, not bitwise: the node-level re-compression is lossy by
+  design.
 * ``sampled_selector_matches_sort`` — runs differing ONLY in top-k selector
   (exact sort vs O(n) sampled threshold, DESIGN.md §16) reach final losses
   within ``loss_tol`` of each other: the selector perturbs the kept set by a
@@ -156,6 +162,25 @@ def evaluate_results(
                   f"allgather/sequenced/psum: {worst:.2e} (atol {tol.transport_atol})")
         else:
             claim(f"{m}:transports_identical", False, "missing transport trio")
+
+        # topology axis (DESIGN.md §18): two-level transports vs flat psum.
+        # One-sided like the dense claim — landing BELOW the flat row is fine.
+        psum_run = _named(runs, f"{m}_fft_theta0.7_psum")
+        hier = _named(runs, f"{m}_fft_theta0.7_hier")
+        rs = _named(runs, f"{m}_fft_theta0.7_rs")
+        if psum_run and hier and rs:
+            fp = _final(psum_run, tol.final_tail)
+            fh = _final(hier, tol.final_tail)
+            fr = _final(rs, tol.final_tail)
+            gap_h, gap_r = _rel_gap(fh, fp), _rel_gap(fr, fp)
+            claim(f"{m}:hierarchical_matches_flat",
+                  gap_h <= tol.loss_tol and gap_r <= tol.loss_tol,
+                  f"final flat psum {fp:.4f} vs hierarchical {fh:.4f} "
+                  f"(gap {gap_h:+.2%}) / reduce_scatter {fr:.4f} "
+                  f"(gap {gap_r:+.2%}); tol {tol.loss_tol:.0%}")
+        else:
+            claim(f"{m}:hierarchical_matches_flat", False,
+                  "missing psum/hier/rs topology rows")
 
         pallas = _named(runs, f"{m}_fft_theta0.7_pallas")
         if t07 and pallas:

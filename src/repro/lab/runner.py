@@ -42,7 +42,7 @@ from repro.core.compressor import (
 from repro.core.theory import assumption31_stats
 from repro.data import ImageConfig, ImageStream, SyntheticConfig, SyntheticStream
 from repro.lab.spec import ExperimentSpec
-from repro.launch.mesh import make_local_mesh
+from repro.launch.mesh import TWO_LEVEL_AXES, make_local_mesh
 from repro.models.convnet import ConvConfig, ConvNet
 from repro.models.transformer import LM
 from repro.optim import OptConfig
@@ -109,11 +109,17 @@ def _build_model_and_stream(spec: ExperimentSpec):
     return model, stream
 
 
+def _data_axes(spec: ExperimentSpec):
+    """The run's data-parallel axes: flat ("data",) or the two-level pair."""
+    return TWO_LEVEL_AXES if spec.nodes is not None else ("data",)
+
+
 def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
     if spec.reducer is None:
         return None
+    axis = TWO_LEVEL_AXES if spec.nodes is not None else "data"
     return ReducerConfig(
-        kind=spec.reducer, axis="data", theta=spec.theta,
+        kind=spec.reducer, axis=axis, theta=spec.theta,
         quantize=spec.quantize, bucket_bytes=spec.bucket_bytes,
         transport=spec.transport, error_feedback=spec.error_feedback,
         backend=spec.backend, stacked=spec.stacked,
@@ -172,8 +178,14 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
            if spec.opt == "sgd" else OptConfig(kind="adamw", lr=spec.lr))
     reducer = _reducer_config(spec)
     mode = "pjit" if reducer is None else "compressed_dp"
-    step_cfg = StepConfig(mode=mode, reducer=reducer)
-    mesh = make_local_mesh((spec.workers,), ("data",))
+    if spec.nodes is not None:
+        step_cfg = StepConfig(mode=mode, reducer=reducer,
+                              data_axes=_data_axes(spec))
+        mesh = make_local_mesh(
+            (spec.nodes, spec.workers // spec.nodes), TWO_LEVEL_AXES)
+    else:
+        step_cfg = StepConfig(mode=mode, reducer=reducer)
+        mesh = make_local_mesh((spec.workers,), ("data",))
     state = init_state(jax.random.PRNGKey(spec.seed), model, opt,
                        error_feedback=spec.error_feedback)
     n_elems = sum(int(l.size) for l in jax.tree_util.tree_leaves(state["params"]))
@@ -257,9 +269,11 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
 
     wire = None
     if spec.reducer is not None:
+        topology = ((spec.nodes, spec.workers // spec.nodes)
+                    if spec.nodes is not None else None)
         wire = cost_model.run_wire_account(
             n_elems, [r["payload_bits"] for r in records],
-            spec.transport, spec.workers,
+            spec.transport, spec.workers, topology=topology,
         ).to_dict()
 
     return RunResult(

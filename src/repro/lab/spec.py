@@ -33,7 +33,8 @@ class ExperimentSpec:
     name: str
     model: str = "lm"  # lm | convnet
     reducer: Optional[str] = "fft"  # None | fft | timedomain | terngrad | qsgd
-    transport: str = "allgather"  # allgather | sequenced | psum
+    # allgather | sequenced | psum | hierarchical | reduce_scatter
+    transport: str = "allgather"
     backend: str = "reference"  # reference | pallas | auto (kernels/engine.py)
     bucket_bytes: Optional[int] = None
     theta: float = 0.7
@@ -58,6 +59,11 @@ class ExperimentSpec:
     selector: str = "sort"
     # Assumption 3.1 probe cadence: 1 = every step (smoke default); 0 = off
     probe_every: int = 1
+    # two-level topology (DESIGN.md §18): split the workers into this many
+    # NVLink-island nodes ((nodes, workers/nodes) x ("node", "local")); the
+    # exchange then rides both axes and the hierarchical transports apply.
+    # None keeps the flat (workers,) x ("data",) mesh.
+    nodes: Optional[int] = None
 
     def __post_init__(self):
         if self.model not in ("lm", "convnet"):
@@ -80,6 +86,14 @@ class ExperimentSpec:
             raise ValueError(
                 "exchange_schedule='streamed' needs a bucketed transport "
                 "(sequenced|psum)")
+        if self.nodes is not None and (
+                self.nodes < 1 or self.workers % self.nodes):
+            raise ValueError(
+                f"workers {self.workers} must split evenly into nodes "
+                f"{self.nodes}")
+        if self.transport == "hierarchical" and self.nodes is None:
+            raise ValueError(
+                "transport='hierarchical' needs a two-level mesh: set nodes")
         if self.reducer is None and self.schedule is not None:
             raise ValueError("dense baseline cannot take a theta schedule")
         if self.workers < 1 or self.global_batch % self.workers:
@@ -146,6 +160,19 @@ def _matrix(model: str, *, workers: int, steps: int, seed: int = 0) -> List[Expe
     for transport in ("sequenced", "psum"):
         specs.append(ExperimentSpec(
             name=f"{model}_fft_theta0.7_{transport}", theta=0.7, transport=transport,
+            schedule={"kind": "constant", "theta": 0.7}, **base))
+    # topology sweep axis (DESIGN.md §18): the theta0.7 config on a
+    # (nodes, local) two-level mesh.  hierarchical re-compresses once per
+    # island (a SECOND lossy step — island-shared, so still deterministic);
+    # reduce_scatter shards the psum over the bucket axis.  The evaluator's
+    # hierarchical_matches_flat claim requires both final losses within the
+    # flat-psum row's 5% envelope.
+    two_level_nodes = max(workers // 2, 1)
+    for transport in ("hierarchical", "reduce_scatter"):
+        suffix = "hier" if transport == "hierarchical" else "rs"
+        specs.append(ExperimentSpec(
+            name=f"{model}_fft_theta0.7_{suffix}", theta=0.7,
+            transport=transport, nodes=two_level_nodes,
             schedule={"kind": "constant", "theta": 0.7}, **base))
     # backend sweep axis (engine backends, DESIGN.md §13): same config as the
     # theta0.7 row but stages executed by the fused Pallas kernels.  The

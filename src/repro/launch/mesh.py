@@ -8,11 +8,19 @@ import, and nothing here may run earlier.
 
 from __future__ import annotations
 
+import math
+
 import jax
 
 from repro.jaxcompat import make_auto_mesh
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_two_level_mesh",
+           "TWO_LEVEL_AXES"]
+
+# Canonical axis names of the two-level (NVLink-islands-over-fabric) data
+# topology: ``node`` is the slow inter-node fabric, ``local`` the fast
+# intra-node link (DESIGN.md §18).
+TWO_LEVEL_AXES = ("node", "local")
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,8 +32,57 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(shape=None, axes=None):
-    """Mesh over whatever devices exist (tests / CPU examples)."""
+    """Mesh over whatever devices exist (tests / CPU examples).
+
+    The 2-D spelling ``make_local_mesh(shape=(nodes, local),
+    axes=("node", "local"))`` builds the two-level data topology the
+    hierarchical transports exchange over (DESIGN.md §18).  Validation names
+    the device-count mismatch instead of surfacing as a bare reshape failure
+    deep inside mesh construction.
+    """
     n = len(jax.devices())
     if shape is None:
         shape, axes = (n,), ("data",)
+    shape = tuple(int(s) for s in shape)
+    if axes is None:
+        if len(shape) == 1:
+            axes = ("data",)
+        elif len(shape) == 2:
+            axes = TWO_LEVEL_AXES
+        else:
+            raise ValueError(
+                f"shape {shape} needs explicit axes= (only 1-D and 2-D "
+                f"shapes have default axis names)")
+    axes = tuple(axes)
+    if len(axes) != len(shape):
+        raise ValueError(
+            f"mesh shape {shape} has {len(shape)} dims but axes {axes} "
+            f"names {len(axes)}")
+    if any(s < 1 for s in shape):
+        raise ValueError(f"mesh shape {shape} has a non-positive axis size")
+    need = math.prod(shape)
+    if need > n:
+        raise ValueError(
+            f"mesh shape {shape} over axes {axes} needs {need} devices, "
+            f"but only {n} host device{'s' if n != 1 else ''} exist "
+            f"(set --xla_force_host_platform_device_count)")
     return make_auto_mesh(shape, axes)
+
+
+def make_two_level_mesh(nodes: int, local=None, axes=TWO_LEVEL_AXES):
+    """(nodes, local) x ("node", "local") mesh over the host devices.
+
+    ``local=None`` divides whatever devices exist evenly across the nodes;
+    an uneven split is a named error, not a bare reshape failure.
+    """
+    n = len(jax.devices())
+    nodes = int(nodes)
+    if nodes < 1:
+        raise ValueError(f"nodes must be >= 1, got {nodes}")
+    if local is None:
+        if n % nodes:
+            raise ValueError(
+                f"{n} devices do not split evenly across {nodes} nodes; "
+                f"pass local= explicitly or pick a divisor of {n}")
+        local = n // nodes
+    return make_local_mesh((nodes, int(local)), axes)

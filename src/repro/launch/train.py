@@ -22,7 +22,12 @@ from repro import jaxcompat as compat
 from repro.comms.reducers import ReducerConfig
 from repro.core import schedules as theta_schedules
 from repro.data import SyntheticConfig, SyntheticStream
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (
+    TWO_LEVEL_AXES,
+    make_local_mesh,
+    make_production_mesh,
+    make_two_level_mesh,
+)
 from repro.models import registry
 from repro.optim import OptConfig, lr_schedules
 from repro.train import TrainLoopConfig, init_state, train_loop
@@ -49,8 +54,12 @@ def main(argv=None):
                     help="bucketed exchange: target bucket size in MB "
                          "(default: one monolithic bucket)")
     ap.add_argument("--transport", default="allgather",
-                    choices=["allgather", "sequenced", "psum"],
-                    help="collective strategy for the compressed exchange")
+                    choices=["allgather", "sequenced", "psum",
+                             "hierarchical", "reduce_scatter", "auto"],
+                    help="collective strategy for the compressed exchange; "
+                         "hierarchical/reduce_scatter need a two-level mesh "
+                         "(--nodes), auto picks flat psum vs hierarchical "
+                         "from the (calibrated) cost model")
     ap.add_argument("--backend", default="auto",
                     choices=["reference", "pallas", "auto"],
                     help="compressor stage-execution engine: fused Pallas "
@@ -92,6 +101,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="two-level local mesh (DESIGN.md §18): split the "
+                         "host devices into this many NVLink-island nodes "
+                         "((nodes, local) x ('node', 'local')); the reducer "
+                         "exchanges over both axes and the hierarchical "
+                         "transports become available")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -100,16 +115,23 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = registry.build(cfg)
 
-    if args.mesh == "local":
+    if args.nodes is not None:
+        if args.mesh != "local":
+            ap.error("--nodes builds a two-level LOCAL mesh; drop --mesh")
+        mesh = make_two_level_mesh(args.nodes)
+    elif args.mesh == "local":
         mesh = make_local_mesh()
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multi_pod")
 
+    # the gradient-sync axes: both two-level axes on a --nodes mesh
+    data_axes = TWO_LEVEL_AXES if args.nodes is not None else None
+    exchange_axis = TWO_LEVEL_AXES if args.nodes is not None else "data"
     reducer = None
     if args.mode != "pjit":
         reducer = ReducerConfig(
             kind=args.reducer if args.mode == "compressed_dp" else "hierarchical",
-            axis="data",
+            axis=exchange_axis,
             pod_axis="pod" if "pod" in mesh.axis_names else None,
             theta=args.theta,
             error_feedback=args.error_feedback,
@@ -127,6 +149,7 @@ def main(argv=None):
         multi_pod="pod" in mesh.axis_names,
         reducer=reducer,
         calibration_path=args.calibration_path,
+        data_axes=data_axes,
     )
     opt_cfg = OptConfig(kind="adamw", lr=args.lr)
 
@@ -167,8 +190,10 @@ def main(argv=None):
         from repro.comms import calibrate as cal
 
         with compat.set_mesh(mesh):
+            # calibrate over the axes the exchange actually rides: on a
+            # two-level mesh that also records per-axis (node/local) fits
             profile = cal.calibrate(
-                mesh, "data", model=model, params=state["params"],
+                mesh, exchange_axis, model=model, params=state["params"],
                 batch=stream.batch_at(0))
         path = args.calibration_path
         if path is None:  # the step loads the profile by path

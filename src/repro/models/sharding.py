@@ -28,11 +28,33 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "ParamSpec",
     "DEFAULT_RULES",
+    "TWO_LEVEL_DATA_AXES",
+    "data_axes_for",
     "resolve_pspec",
     "spec_tree_to_pspecs",
     "init_params",
     "count_params",
 ]
+
+# The two-level data topology's axis pair (DESIGN.md §18).  Parameters are
+# NEVER sharded over these (like ``pod``): they are pure data-parallel axes,
+# and the hierarchical transports own the gradient traffic across them.
+TWO_LEVEL_DATA_AXES = ("node", "local")
+
+
+def data_axes_for(mesh_axis_sizes: Dict[str, int]) -> Tuple[str, ...]:
+    """The mesh's data-parallel (batch) axes, in mesh order.
+
+    A two-level mesh carries ("node", "local"); a flat mesh carries
+    ("data",) (plus a leading "pod" on multi-pod meshes).  This is the one
+    place the batch-axes spelling is derived from a mesh, so the lab runner
+    and the CLI agree with ``StepConfig.batch_axes``.
+    """
+    if all(a in mesh_axis_sizes for a in TWO_LEVEL_DATA_AXES):
+        return tuple(a for a in mesh_axis_sizes
+                     if a in TWO_LEVEL_DATA_AXES)
+    axes = tuple(a for a in mesh_axis_sizes if a in ("pod", "data"))
+    return axes if axes else ("data",)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -74,6 +74,12 @@ class StepConfig:
     multi_pod: bool = False
     clip_norm: float = 1.0
     reducer: Optional[ReducerConfig] = None  # compressed modes
+    # batch/data axes override (DESIGN.md §18): on a two-level mesh the
+    # batch shards over ("node", "local") instead of ("data",) — set this to
+    # the mesh's data axes and give the reducer the same tuple as its
+    # exchange axis.  None keeps the 1-D default (("data",), or
+    # ("pod", "data") with multi_pod).
+    data_axes: Optional[Tuple[str, ...]] = None
     # calibration artifact (DESIGN.md §17): path to a persisted CostProfile
     # measured on this (platform, mesh, model, jax) — the auto-schedule
     # policy then prices with fitted α–β, measured stage throughputs and the
@@ -83,6 +89,8 @@ class StepConfig:
 
     @property
     def batch_axes(self) -> Tuple[str, ...]:
+        if self.data_axes is not None:
+            return tuple(self.data_axes)
         return ("pod", "data") if self.multi_pod else ("data",)
 
     @property
@@ -202,26 +210,46 @@ def build_train_step(
     # count are known — the reducer then traces a concrete schedule
     reducer_cfg = step_cfg.reducer
     batch_tokens = _batch_tokens(batch_tree)
-    # the compressed exchange's collective runs over ONE axis (pod for
-    # hierarchical, the data axis otherwise); its mesh size is the worker
+    # the compressed exchange's collective runs over one axis (pod for
+    # hierarchical, the data axis otherwise) OR a tuple of axes (the
+    # two-level ("node", "local") topology); its mesh size is the worker
     # count the wire model must price — NOT a hardcoded 2
     exchange_axis = (reducer_cfg.pod_axis if reducer_cfg.kind == "hierarchical"
                      else reducer_cfg.axis)
-    exchange_workers = axes.get(exchange_axis, 1) if exchange_axis else 1
+    if exchange_axis is None:
+        exchange_axes: Tuple[str, ...] = ()
+    elif isinstance(exchange_axis, str):
+        exchange_axes = (exchange_axis,)
+    else:
+        exchange_axes = tuple(exchange_axis)
+    exchange_workers = 1
+    for a in exchange_axes:
+        exchange_workers *= axes.get(a, 1)
+    # the (nodes, local) shape the transport policy prices — only a 2-axis
+    # exchange spec has a two-level topology to exploit
+    topology = (tuple(axes.get(a, 1) for a in exchange_axes)
+                if len(exchange_axes) == 2 else None)
     profile = None
     if step_cfg.calibration_path is not None:
         from repro.comms import calibrate
 
         profile = calibrate.load_profile_for(
             step_cfg.calibration_path, mesh, model=model)
+    transport_decision = None
+    if reducer_cfg.transport == "auto":
+        resolved_t, transport_decision = scheduler.resolve_transport(
+            reducer_cfg, count_params(model.spec()),
+            topology=topology, profile=profile)
+        reducer_cfg = dataclasses.replace(reducer_cfg, transport=resolved_t)
     schedule_decision = None
     if reducer_cfg.schedule == "auto":
         resolved, schedule_decision = scheduler.resolve_schedule(
             reducer_cfg, count_params(model.spec()), batch_tokens,
-            workers=exchange_workers, profile=profile)
+            workers=exchange_workers, profile=profile, topology=topology)
         reducer_cfg = dataclasses.replace(reducer_cfg, schedule=resolved)
     reducer = make_reducer(reducer_cfg, batch_tokens=batch_tokens,
-                           workers=exchange_workers, profile=profile)
+                           workers=exchange_workers, profile=profile,
+                           topology=topology)
     manual = step_cfg.manual_axes
     ef = step_cfg.reducer.error_feedback
 
@@ -281,14 +309,16 @@ def build_train_step(
     jitted = jax.jit(step, donate_argnums=(0,) if donate else ())
     batch_sh_manual = NamedSharding(mesh, P(manual))
 
-    _resolved_cfg, _decision = reducer_cfg, schedule_decision
+    _resolved_cfg, _decision, _t_decision = (
+        reducer_cfg, schedule_decision, transport_decision)
 
     class _Step:
         batch_sharding = batch_sh_manual
         # the concrete config the step traced (auto resolved) and, when the
-        # auto policy ran, the cost-model numbers behind its verdict
+        # auto policies ran, the cost-model numbers behind their verdicts
         reducer_config = _resolved_cfg
         schedule_decision = _decision
+        transport_decision = _t_decision
 
         def __call__(self, state, batch):
             with compat.set_mesh(mesh):

@@ -356,3 +356,127 @@ print(json.dumps({
     assert got["calibrated"] is True
     assert all(a > 0 for a in got["alphas"])
     assert all(b > 0 for b in got["betas"])
+
+
+# ---------------------------------------------------------------------------
+# topology-keyed artifacts + per-axis fits (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+
+def _two_level_profile():
+    """Base fits plus per-axis (node/local) extras, as a 2-D calibration
+    records them."""
+    return CostProfile(
+        key=ProfileKey(platform="cpu", mesh=(("node", 2), ("local", 4)),
+                       model="none", jax_version="0.0.0",
+                       axes=("node", "local")),
+        fits=(LinkFit("gather", 25e-6, 1e-10, n_points=5),
+              LinkFit("psum", 12e-6, 2e-10, n_points=5),
+              LinkFit("gather", 80e-6, 9e-10, n_points=5, axis="node"),
+              LinkFit("psum", 60e-6, 8e-10, n_points=5, axis="node"),
+              LinkFit("gather", 5e-6, 3e-11, n_points=5, axis="local"),
+              LinkFit("psum", 4e-6, 2e-11, n_points=5, axis="local")),
+        throughputs=cm.TPU_V5E,
+        backprop_flops_per_s=3.2e12,
+    )
+
+
+def test_per_axis_fit_accessors():
+    prof = _two_level_profile()
+    # named axis -> the per-axis fit; unknown or omitted axis -> base fit
+    assert prof.fit_for("psum", axis="node").alpha_s == 60e-6
+    assert prof.fit_for("psum", axis="local").alpha_s == 4e-6
+    assert prof.fit_for("psum").alpha_s == 12e-6
+    assert prof.fit_for("psum", axis="dcn9000").alpha_s == 12e-6
+    assert prof.t_comm("allgather", axis="node") == pytest.approx(1.0 / 9e-10)
+    assert prof.alpha_s("hierarchical", axis="local") == 5e-6  # gather family
+    # round-trips with the axis field intact
+    assert CostProfile.from_dict(prof.to_dict()) == prof
+
+
+def test_per_axis_profile_validation():
+    prof = _two_level_profile()
+    with pytest.raises(ValueError):  # duplicate (family, axis)
+        dataclasses.replace(prof, fits=prof.fits + (
+            LinkFit("psum", 1e-6, 1e-10, axis="node"),))
+    with pytest.raises(ValueError):  # per-axis fits alone: no base psum fit
+        dataclasses.replace(prof, fits=(
+            LinkFit("gather", 25e-6, 1e-10),
+            LinkFit("psum", 1e-6, 1e-10, axis="node")))
+
+
+def test_per_axis_fits_price_two_level_exchange():
+    """two_level_exchange_time_s resolves the intra hop from the psum fit on
+    'local' and the inter hop from the gather fit on 'node' — asymmetric
+    per-axis rates must surface as intra/inter time asymmetry."""
+    prof = _two_level_profile()
+    plan = cm.two_level_exchange_time_s(
+        4e6, 1e6, nodes=2, local=4, profile=prof)
+    # same wire volumes priced at a flat profile (base fits only) for contrast
+    flat_prof = dataclasses.replace(
+        _two_level_profile(), fits=_two_level_profile().fits[:2])
+    flat_plan = cm.two_level_exchange_time_s(
+        4e6, 1e6, nodes=2, local=4, profile=flat_prof)
+    assert plan.wire == flat_plan.wire
+    # the fabric ('node') gather fit is ~9x slower than the base gather fit
+    assert plan.inter_s > flat_plan.inter_s
+    # the island ('local') psum fit is ~7x faster than the base psum fit
+    assert plan.intra_s < flat_plan.intra_s
+
+
+def test_transposed_topology_profile_rejected(tmp_path):
+    """Bugfix (ISSUE 8 ride-along): the artifact key carries axis NAMES and
+    sizes plus the calibrated exchange axes, so a (node=2, local=4)
+    calibration is rejected on a (node=4, local=2) mesh instead of silently
+    mispricing both hops."""
+    out = run_with_devices("""
+import dataclasses
+from repro.comms import calibrate
+from repro.comms.calibrate import ProfileKeyMismatch
+from repro.launch.mesh import make_local_mesh
+
+mesh_24 = make_local_mesh((2, 4))
+mesh_42 = make_local_mesh((4, 2))
+profile = calibrate.calibrate(
+    mesh_24, ("node", "local"), sizes_bytes=(1 << 12, 1 << 14), iters=1,
+    measure_stages=False)
+assert profile.key.mesh == (("node", 2), ("local", 4))
+assert profile.key.axes == ("node", "local")
+# per-axis fits recorded for both exchange axes, plus the combined base fits
+axes_seen = {f.axis for f in profile.fits}
+assert axes_seen == {None, "node", "local"}, axes_seen
+
+path = "/tmp/test_topo_profile.json"
+profile.save(path)
+assert calibrate.load_profile_for(path, mesh_24) == profile
+try:
+    calibrate.load_profile_for(path, mesh_42)
+except ProfileKeyMismatch:
+    pass
+else:
+    raise AssertionError("(2,4) artifact must be rejected on a (4,2) mesh")
+# an axes-spec mismatch is also a rejection: the artifact calibrated the
+# two-level pair, not a flat 'data' exchange
+try:
+    calibrate.load_profile_for(path, mesh_24, axes=("data",))
+except ProfileKeyMismatch:
+    pass
+else:
+    raise AssertionError("axes mismatch must be rejected")
+print("TOPO_KEY_OK")
+""")
+    assert "TOPO_KEY_OK" in out
+
+
+def test_v1_artifact_version_rejected(tmp_path):
+    """Per-axis fits + topology-keyed meshes bumped ARTIFACT_VERSION to 2;
+    v1 artifacts predate both and must be re-calibrated, not reinterpreted."""
+    import json as _json
+
+    path = str(tmp_path / "cal.json")
+    d = _profile().to_dict()
+    d["version"] = 1
+    with open(path, "w") as f:
+        _json.dump(d, f)
+    with pytest.raises(ProfileKeyMismatch):
+        CostProfile.load(path)

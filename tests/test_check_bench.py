@@ -172,3 +172,44 @@ def test_main_cli(tmp_path, committed, capsys):
     assert check_bench.main([str(bad_path)]) == 1
     assert "BENCH SCHEMA FAIL" in capsys.readouterr().out
     assert check_bench.main([str(tmp_path / "missing.json")]) == 1
+
+
+def test_topology_section_guarded(committed):
+    # the section itself and every column are individually guarded
+    data = copy.deepcopy(committed)
+    del data["topology"]
+    assert any("topology" in e for e in check_bench.check(data))
+    for key in check_bench.TOPOLOGY_KEYS:
+        data = copy.deepcopy(committed)
+        del data["topology"][0][key]
+        assert any(key in e for e in check_bench.check(data)), key
+    # the auto transport verdict must be RESOLVED
+    data = copy.deepcopy(committed)
+    data["topology"][0]["auto_transport"] = "auto"
+    assert any("auto_transport" in e for e in check_bench.check(data))
+
+
+def test_topology_inter_wire_must_beat_flat_psum(committed):
+    """ISSUE 8 acceptance gate: a record whose hierarchical per-worker
+    inter-node wire reaches (or exceeds) the flat psum runtime wire is a
+    schema failure — the topology-aware transport lost its point."""
+    data = copy.deepcopy(committed)
+    r = data["topology"][0]
+    r["inter_bits_per_worker"] = r["flat_wire_bits_per_worker"]
+    assert any("strictly below" in e for e in check_bench.check(data))
+
+
+def test_topology_inter_wire_must_shrink_with_island_size(committed):
+    """For a fixed node count, growing `local` must strictly shrink each
+    worker's share of the fabric hop (nodes*B/local)."""
+    data = copy.deepcopy(committed)
+    by_nodes = {}
+    for r in data["topology"]:
+        by_nodes.setdefault(r["nodes"], []).append(r)
+    grown = next(rs for rs in by_nodes.values() if len(rs) > 1)
+    grown.sort(key=lambda r: r["local"])
+    # flatten the curve: the bigger island reports the smaller island's wire
+    grown[-1]["inter_bits_per_worker"] = grown[0]["inter_bits_per_worker"]
+    assert any("shrink" in e for e in check_bench.check(data))
+    # and the committed sweep actually exercises a multi-island node count
+    assert len(grown) >= 2

@@ -43,6 +43,9 @@ def test_smoke_matrix_covers_the_claims():
         assert f"{model}_fft_theta0.7_bucketed_streamed" in names
         # selection-engine sweep axis (DESIGN.md §16)
         assert f"{model}_fft_theta0.7_sampled" in names
+        # two-level topology sweep axis (DESIGN.md §18)
+        assert f"{model}_fft_theta0.7_hier" in names
+        assert f"{model}_fft_theta0.7_rs" in names
 
 
 def test_spec_rejects_bad_configs():
@@ -63,7 +66,7 @@ def test_spec_rejects_bad_configs():
 def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
               err_ratio=0.5, lr=3e-3, backend="reference",
               transport="allgather", bucket_bytes=None,
-              exchange_schedule="stacked", selector="sort"):
+              exchange_schedule="stacked", selector="sort", nodes=None):
     records = []
     for i, loss in enumerate(losses):
         rec = {"step": i, "loss": loss, "grad_sq": max(loss - 1.0, 0.05),
@@ -78,7 +81,7 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
         "spec": ExperimentSpec(
             name=name, model=model, reducer=reducer, theta=theta,
             schedule=schedule, lr=lr, backend=backend, transport=transport,
-            bucket_bytes=bucket_bytes,
+            bucket_bytes=bucket_bytes, nodes=nodes,
             exchange_schedule=exchange_schedule, selector=selector).to_dict(),
         "records": records,
         "n_elems": 10000,
@@ -90,13 +93,15 @@ def _fake_run(name, reducer, losses, theta=0.7, schedule=None, model="lm",
 
 def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
                  pallas_losses=None, streamed_losses=None,
-                 sampled_losses=None):
+                 sampled_losses=None, hier_losses=None, rs_losses=None):
     dense = [4.0, 3.0, 2.5, 2.2, 2.0, 2.0]
     t07 = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02]
     trio = trio_losses if trio_losses is not None else t07
     pallas = pallas_losses if pallas_losses is not None else t07
     streamed = streamed_losses if streamed_losses is not None else t07
     sampled = sampled_losses if sampled_losses is not None else t07
+    hier = hier_losses if hier_losses is not None else t07
+    rs = rs_losses if rs_losses is not None else t07
     sched = {"kind": "constant", "theta": 0.7}
     return {
         "lm_dense": _fake_run("lm_dense", None, dense),
@@ -111,6 +116,12 @@ def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
             "lm_fft_theta0.7_sequenced", "fft", trio, schedule=sched),
         "lm_fft_theta0.7_psum": _fake_run(
             "lm_fft_theta0.7_psum", "fft", trio, schedule=sched),
+        "lm_fft_theta0.7_hier": _fake_run(
+            "lm_fft_theta0.7_hier", "fft", hier, schedule=sched,
+            transport="hierarchical", nodes=4),
+        "lm_fft_theta0.7_rs": _fake_run(
+            "lm_fft_theta0.7_rs", "fft", rs, schedule=sched,
+            transport="reduce_scatter", nodes=4),
         "lm_fft_theta0.7_pallas": _fake_run(
             "lm_fft_theta0.7_pallas", "fft", pallas, schedule=sched,
             backend="pallas"),
@@ -130,7 +141,7 @@ def _matrix_runs(t09_final=2.6, mixed_final=2.05, trio_losses=None,
 def test_evaluator_passes_a_good_matrix():
     claims, ok = evaluate_results(_matrix_runs(), Tolerances(final_tail=2))
     assert ok, [c.to_dict() for c in claims if not c.passed]
-    assert len(claims) == 9  # one model family x nine claims
+    assert len(claims) == 10  # one model family x ten claims
 
 
 def test_evaluator_catches_theta09_not_degrading():
@@ -152,6 +163,29 @@ def test_evaluator_catches_transport_divergence():
     claims, ok = evaluate_results(
         _matrix_runs(trio_losses=trio), Tolerances(final_tail=2))
     assert "lm:transports_identical" in {c.name for c in claims if not c.passed}
+
+
+def test_evaluator_catches_hierarchical_divergence():
+    """hierarchical_matches_flat is a loss-TOLERANCE claim (the island
+    re-compression is lossy by design): only a final-loss gap beyond
+    loss_tol vs the flat psum row fails it, and a missing topology row is a
+    failure, not a silent skip."""
+    hier = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 * 1.2]  # 20% >> 5% tol
+    claims, ok = evaluate_results(
+        _matrix_runs(hier_losses=hier), Tolerances(final_tail=1))
+    assert "lm:hierarchical_matches_flat" in {
+        c.name for c in claims if not c.passed}
+    # inside the tolerance: small drift must PASS (convergence, not bitwise)
+    hier = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02 * 1.01]
+    claims, ok = evaluate_results(
+        _matrix_runs(hier_losses=hier), Tolerances(final_tail=1))
+    assert "lm:hierarchical_matches_flat" not in {
+        c.name for c in claims if not c.passed}
+    runs = _matrix_runs()
+    del runs["lm_fft_theta0.7_rs"]
+    claims, ok = evaluate_results(runs, Tolerances(final_tail=2))
+    assert "lm:hierarchical_matches_flat" in {
+        c.name for c in claims if not c.passed}
 
 
 def test_evaluator_catches_backend_divergence():

@@ -29,6 +29,12 @@ efficiency numbers) hides a regression from every later PR.  Checks:
   throughputs and backprop rate, and per-profile calibrated-vs-static auto
   verdicts — the acceptance evidence that ``schedule=auto`` decisions are
   driven by measurements, not the static napkin constants.
+* ``topology`` — the two-level (nodes × local) sweep (DESIGN.md §18):
+  per-axis wire bits and hierarchical-vs-flat exchange times per shape;
+  the hierarchical per-worker inter-node wire must sit STRICTLY below the
+  flat psum runtime wire on every record, and for a fixed node count it
+  must strictly shrink as ``local`` grows — the ISSUE 8 acceptance
+  evidence that growing an island shrinks each worker's fabric share.
 
 Usage: ``python tools/check_bench.py [path-to-BENCH_throughput.json]``;
 exits nonzero listing every violation (not just the first).
@@ -264,11 +270,68 @@ def check_calibration(data: dict) -> List[str]:
     return errors
 
 
+TOPOLOGY_KEYS = (
+    "nodes",
+    "local",
+    "workers",
+    "payload_bits",
+    "intra_bits_per_worker",
+    "inter_bits_per_node",
+    "inter_bits_per_worker",
+    "flat_wire_bits_per_worker",
+    "model_exchange_ms_hierarchical",
+    "model_exchange_ms_flat_psum",
+    "auto_transport",
+)
+
+TRANSPORT_DECISIONS = ("psum", "hierarchical")
+
+
+def check_topology(data: dict) -> List[str]:
+    errors = []
+    topo = data.get("topology")
+    if not topo:
+        return ["missing 'topology' field (two-level wire sweep, "
+                "DESIGN.md §18)"]
+    by_nodes: dict = {}
+    for r in topo:
+        tag = f"{r.get('nodes')}x{r.get('local')}"
+        for key in TOPOLOGY_KEYS:
+            if key not in r:
+                errors.append(f"topology record {tag} lacks {key!r}")
+        if r.get("auto_transport") not in TRANSPORT_DECISIONS:
+            errors.append(
+                f"topology record {tag}: auto_transport must be one of "
+                f"{TRANSPORT_DECISIONS}, got {r.get('auto_transport')!r}")
+        inter = r.get("inter_bits_per_worker")
+        flat = r.get("flat_wire_bits_per_worker")
+        if isinstance(inter, (int, float)) and isinstance(flat, (int, float)):
+            if not inter < flat:
+                errors.append(
+                    f"topology record {tag}: hierarchical per-worker "
+                    f"inter-node wire ({inter:.3e} bits) must be strictly "
+                    f"below the flat psum runtime wire ({flat:.3e} bits)")
+            if isinstance(r.get("nodes"), int) and isinstance(
+                    r.get("local"), int):
+                by_nodes.setdefault(r["nodes"], []).append(
+                    (r["local"], inter))
+    for nodes, shapes in sorted(by_nodes.items()):
+        shapes.sort()
+        for (l_prev, w_prev), (l_next, w_next) in zip(shapes, shapes[1:]):
+            if not w_next < w_prev:
+                errors.append(
+                    f"topology nodes={nodes}: per-worker inter-node wire "
+                    f"must strictly shrink as the island grows, but "
+                    f"local={l_next} records {w_next:.3e} >= {w_prev:.3e} "
+                    f"at local={l_prev}")
+    return errors
+
+
 def check(data: dict) -> List[str]:
     """All violations in one pass (empty list == schema ok)."""
     return (check_backends(data) + check_records(data)
             + check_schedules(data) + check_selectors(data)
-            + check_calibration(data))
+            + check_calibration(data) + check_topology(data))
 
 
 def main(argv=None) -> int:
@@ -290,9 +353,10 @@ def main(argv=None) -> int:
     n_sched = len(data.get("schedules", []))
     n_sel = len(data.get("selectors", []))
     n_cal = len(data.get("calibration", {}).get("decisions", []))
+    n_topo = len(data.get("topology", []))
     print(f"schema ok: {n_back} backend records, {n_rec} sweep records, "
           f"{n_sched} schedule-policy records, {n_sel} selector records, "
-          f"{n_cal} calibration decisions")
+          f"{n_cal} calibration decisions, {n_topo} topology records")
     return 0
 
 
