@@ -15,7 +15,15 @@ the regressions that would quietly undo each subsystem's point:
 3. **selection** — the sampled selector's steady-state compress must beat
    the sort selector's (the O(n) threshold's entire point), with a
    deterministic structural fallback: the sampled compress jaxpr must
-   contain NO sort-family primitive while the sort compress still does.
+   contain NO sort-family primitive while the sort compress still does;
+4. **guard overhead** (DESIGN.md §19) — stacked compress with ``cheap``
+   payload validation must cost <= GUARD_SLACK x the unvalidated compress
+   (validation is O(payload) elementwise work riding an O(n log n) kernel),
+   with a deterministic structural fallback: validation must add NO
+   sort/FFT/collective primitive, and ``validate('off')`` must add zero
+   equations (resilience off = bit-for-bit the historical program).  The
+   measured ratio is persisted as the ``resilience`` section of
+   ``BENCH_throughput.json`` (guarded by ``tools/check_bench.py``).
 
 Flake policy: both gates compare WALL-CLOCK ratios, which a loaded CI runner
 can violate without any code regression (a noisy neighbor during exactly one
@@ -36,6 +44,8 @@ form, so the ``benchmarks`` package resolves):
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 
 import jax
@@ -43,6 +53,9 @@ import jax
 from benchmarks.common import time_compiled
 from repro.comms import bucketing, cost_model as cm, executor
 from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_throughput.json")
 
 N = 1 << 21  # 2M floats = 8 MB
 BUCKET_BYTES = 1 << 20  # 1 MB buckets -> 8 buckets
@@ -52,6 +65,9 @@ COMPILE_RATIO = 2.0  # looped compile must exceed stacked compile by this
 # compress must beat the sort selector's (its entire point); the slack only
 # absorbs timer noise, not a real loss
 SELECTOR_SLACK = 1.0
+# resilience (DESIGN.md §19): cheap payload validation on the stacked
+# compress must stay within 5% of the unvalidated path
+GUARD_SLACK = 1.05
 
 
 def _measure(comp, layout, g):
@@ -217,6 +233,103 @@ def _deterministic_selector_fallback() -> list:
     return failures
 
 
+def _guard_fns(comp, layout):
+    """(unguarded, guarded) stacked-compress callables (DESIGN.md §19)."""
+
+    def unguarded(flat):
+        return comp.compress_stacked(
+            bucketing.stack_buckets(flat, layout), layout.sizes())
+
+    def guarded(flat):
+        payload = comp.compress_stacked(
+            bucketing.stack_buckets(flat, layout), layout.sizes())
+        return payload, payload.validate("cheap")
+
+    return unguarded, guarded
+
+
+def _measure_guard(comp, layout, g):
+    """Fresh wall-clock steady-state compress with/without validation."""
+    unguarded, guarded = _guard_fns(comp, layout)
+    _, t_un = time_compiled(jax.jit(unguarded), g)
+    _, t_gu = time_compiled(jax.jit(guarded), g)
+    return {"unguarded": t_un, "guarded": t_gu}
+
+
+def _gate_guard(t: dict) -> list:
+    if t["guarded"] > t["unguarded"] * GUARD_SLACK:
+        return [
+            f"guarded stacked compress ({t['guarded'] / 1e3:.1f} ms) exceeds "
+            f"{GUARD_SLACK}x the unguarded path ({t['unguarded'] / 1e3:.1f} "
+            f"ms) — cheap validation stopped being O(payload) elementwise "
+            f"work (or the runner is loaded; deterministic fallback decides)"]
+    return []
+
+
+def _deterministic_guard_fallback(comp, layout) -> list:
+    """Structural guard assertions that cannot flake (DESIGN.md §19).
+
+    * ``validate('cheap')`` must add only elementwise/reduction work — no
+      sort-family, FFT, or collective primitive may appear in the guarded
+      program that the unguarded one lacks;
+    * ``validate('off')`` must be FREE: identical equation count to the
+      unvalidated program (resilience off keeps the historical program).
+    """
+    failures = []
+    g = jax.ShapeDtypeStruct((N,), jax.numpy.float32)
+    unguarded, guarded = _guard_fns(comp, layout)
+
+    expensive = {"sort", "top_k", "approx_top_k", "fft",
+                 "all_reduce", "all_gather", "reduce_scatter", "psum",
+                 "all_to_all", "ppermute"}
+    extra = (_jaxpr_primitives(guarded, g)
+             - _jaxpr_primitives(unguarded, g)) & expensive
+    if extra:
+        failures.append(
+            f"cheap validation adds expensive primitives {sorted(extra)} to "
+            f"the stacked compress — the O(payload) guard property regressed "
+            f"structurally")
+
+    def guarded_off(flat):
+        payload = comp.compress_stacked(
+            bucketing.stack_buckets(flat, layout), layout.sizes())
+        return payload, payload.validate("off")
+
+    n_off = len(jax.make_jaxpr(guarded_off)(g).eqns)
+    n_un = len(jax.make_jaxpr(unguarded)(g).eqns)
+    if n_off != n_un:
+        failures.append(
+            f"validate('off') is no longer free: {n_off} eqns vs the "
+            f"unvalidated program's {n_un} — resilience off must keep the "
+            f"historical program")
+    return failures
+
+
+def _write_resilience(t: dict, deterministic_ok: bool, n_buckets: int) -> None:
+    """Persist the guard-overhead evidence into BENCH_throughput.json."""
+    try:
+        with open(BENCH_JSON) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        print(f"PERF SMOKE: {BENCH_JSON} unreadable; resilience section "
+              f"not persisted")
+        return
+    data["resilience"] = {
+        "n_elems": N,
+        "n_buckets": n_buckets,
+        "validate_level": "cheap",
+        "unguarded_compress_steady_us": round(t["unguarded"], 1),
+        "guarded_compress_steady_us": round(t["guarded"], 1),
+        "guard_overhead_ratio": round(
+            t["guarded"] / max(t["unguarded"], 1e-9), 4),
+        "guard_slack": GUARD_SLACK,
+        "deterministic_ok": bool(deterministic_ok),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"PERF SMOKE: resilience section written to {BENCH_JSON}")
+
+
 def main() -> int:
     g = jax.random.normal(jax.random.PRNGKey(0), (N,)) * 0.05
     comp = FFTCompressor(FFTCompressorConfig(theta=0.7))
@@ -227,11 +340,13 @@ def main() -> int:
     failures = _gate(t, layout.n_buckets)
     ts = _measure_selectors(g)
     sel_failures = _gate_selectors(ts)
+    tg = _measure_guard(comp, layout, g)
+    guard_failures = _gate_guard(tg)
     attempt = 1
-    if failures or sel_failures:
+    if failures or sel_failures or guard_failures:
         print("PERF SMOKE: wall-clock gate missed; rerunning once "
               "(loaded-runner tolerance):")
-        for f in failures + sel_failures:
+        for f in failures + sel_failures + guard_failures:
             print("  -", f)
         if failures:
             t = _measure(comp, layout, g)
@@ -239,6 +354,9 @@ def main() -> int:
         if sel_failures:
             ts = _measure_selectors(g)
             sel_failures = _gate_selectors(ts)
+        if guard_failures:
+            tg = _measure_guard(comp, layout, g)
+            guard_failures = _gate_guard(tg)
         attempt = 2
 
     print(f"looped : compile {t['looped_compile'] / 1e3:9.1f} ms   "
@@ -249,25 +367,35 @@ def main() -> int:
     print(f"selector: sort steady {ts['sort'] / 1e3:8.1f} ms   "
           f"sampled steady {ts['sampled'] / 1e3:8.1f} ms   "
           f"({ts['sort'] / max(ts['sampled'], 1e-9):.2f}x)")
+    print(f"guard   : unguarded {tg['unguarded'] / 1e3:8.1f} ms   "
+          f"guarded {tg['guarded'] / 1e3:8.1f} ms   "
+          f"({tg['guarded'] / max(tg['unguarded'], 1e-9):.3f}x, "
+          f"slack {GUARD_SLACK}x)")
 
-    if not failures and not sel_failures:
-        print(f"PERF SMOKE OK: stacked executor and sampled selector hold "
-              f"their bounds (attempt {attempt})")
+    if not failures and not sel_failures and not guard_failures:
+        _write_resilience(tg, deterministic_ok=True,
+                          n_buckets=layout.n_buckets)
+        print(f"PERF SMOKE OK: stacked executor, sampled selector and "
+              f"exchange guard hold their bounds (attempt {attempt})")
         return 0
 
     print("PERF SMOKE: wall-clock gates failed twice; falling back to "
           "deterministic modeled/structural assertions:")
-    for f in failures + sel_failures:
+    for f in failures + sel_failures + guard_failures:
         print("  - (timing)", f)
     det = []
     if failures:
         det += _deterministic_fallback(comp)
     if sel_failures:
         det += _deterministic_selector_fallback()
+    guard_det = _deterministic_guard_fallback(comp, layout) if guard_failures else []
+    det += guard_det
     for f in det:
         print("PERF SMOKE FAIL:", f)
     if det:
         return 1
+    _write_resilience(tg, deterministic_ok=not guard_det,
+                      n_buckets=layout.n_buckets)
     print("PERF SMOKE OK (deterministic): structural and modeled invariants "
           "hold; wall-clock miss attributed to runner load")
     return 0

@@ -1,0 +1,409 @@
+"""Deterministic fault injection + resilience primitives (DESIGN.md §19).
+
+The resilience layer has three cooperating pieces:
+
+* **FaultPlan** — a frozen, hashable plan of typed fault events, threaded
+  through ``ReducerConfig.faults`` (in-step events: poisoned gradients,
+  corrupted payloads) and ``TrainLoopConfig.faults`` (host-side events:
+  step crashes, straggler delays).  Every event is pinned to a (step,
+  worker) coordinate, so a chaos run is exactly reproducible on fake
+  devices — the harness replaces the old untyped ``failure_injector``
+  callable.
+
+* **ExchangeMonitor** — rides along one compressed exchange inside the
+  jitted step.  At each payload-creation site the transport hands the
+  payload over; the monitor (a) injects any planned wire corruption for
+  this (step, worker) and (b) folds the payload's validation verdict into
+  one boolean.  Validation levels (``ReducerConfig.validate``):
+
+  - ``off``   — no checks, no overhead (the default; payload creation is
+                untouched and the reducer keeps its historical signature);
+  - ``cheap`` — structural sanity per payload: index bounds vs the chunk
+                width, quantizer-param sanity (finite, eps > 0,
+                ``vmin <= vmax``, P in range), finiteness of any float
+                plane.  O(payload) elementwise work, no extra collectives;
+  - ``full``  — ``cheap`` plus per-plane checksums: planes are checksummed
+                at compress time (before the simulated wire) and re-summed
+                after, so silent bit corruption in the value planes — which
+                decodes to plausible floats — is still caught.
+
+* **ReducerHealth** — the host-side health record the train loop keeps:
+  skipped-step counts, straggler delays, and every degradation-ladder
+  transition (``reducers.degrade_config``), serialized into run results
+  and BENCH artifacts.
+
+The guard decision itself (skip the optimizer update, quarantine the EF
+residual) lives in ``train/step.py``; this module only provides the
+deterministic ingredients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "NanGrad",
+    "PayloadCorrupt",
+    "StepCrash",
+    "SlowWorker",
+    "FaultPlan",
+    "InjectedCrash",
+    "FatalInjectedCrash",
+    "VALIDATE_LEVELS",
+    "ExchangeMonitor",
+    "payload_checksums",
+    "tree_finite",
+    "validate_payload",
+    "corrupt_payload",
+    "match_events",
+    "ReducerHealth",
+]
+
+VALIDATE_LEVELS = ("off", "cheap", "full")
+
+CORRUPT_PLANES = ("values", "idx", "quant")
+
+
+class InjectedCrash(RuntimeError):
+    """A planned, recoverable step failure (exercises rollback/retry)."""
+
+
+class FatalInjectedCrash(Exception):
+    """A planned process death.  Deliberately NOT a RuntimeError: the train
+    loop's recovery path must never catch it — it propagates out of
+    ``train_loop`` like a SIGKILL would, and the harness simulates the
+    restart by calling ``train_loop`` again (auto-resume picks up the last
+    checkpoint)."""
+
+
+# ---------------------------------------------------------------------------
+# typed events
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class NanGrad:
+    """Worker ``worker``'s local gradient becomes all-NaN at ``step``."""
+
+    step: int
+    worker: int
+    kind: ClassVar[str] = "nan_grad"
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadCorrupt:
+    """Worker ``worker``'s outgoing payload is corrupted at ``step``.
+
+    ``plane`` picks the corruption site: ``idx`` (out-of-bounds index,
+    caught at validate>=cheap), ``quant`` (NaN quantizer eps, caught at
+    cheap), or ``values`` (silent mantissa bit-flips in the value plane —
+    decodes to finite floats, only the ``full`` checksums catch it).
+    """
+
+    step: int
+    worker: int
+    plane: str = "idx"
+    kind: ClassVar[str] = "payload_corrupt"
+
+    def __post_init__(self):
+        if self.plane not in CORRUPT_PLANES:
+            raise ValueError(
+                f"unknown corrupt plane {self.plane!r}; expected one of "
+                f"{CORRUPT_PLANES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCrash:
+    """The host step raises at ``step`` (before the step function runs).
+
+    ``fatal=False`` raises :class:`InjectedCrash` (a recoverable
+    RuntimeError — exercises rollback and the degradation ladder);
+    ``fatal=True`` raises :class:`FatalInjectedCrash` (simulated process
+    death — exercises checkpoint auto-resume).  Each event fires at most
+    once per :class:`TrainLoopConfig` (a restarted process does not re-hit
+    a transient crash), so resume-after-crash runs to completion.
+    """
+
+    step: int
+    fatal: bool = False
+    kind: ClassVar[str] = "step_crash"
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowWorker:
+    """Worker ``worker`` stalls ``delay_s`` seconds at ``step`` (host-side
+    sleep; in the single-process harness every worker shares the host, so
+    the whole step is delayed — the observable is the ``dt`` metric)."""
+
+    step: int
+    worker: int
+    delay_s: float = 0.05
+    kind: ClassVar[str] = "slow_worker"
+
+
+_EVENT_TYPES = (NanGrad, PayloadCorrupt, StepCrash, SlowWorker)
+EVENT_KINDS = {cls.kind: cls for cls in _EVENT_TYPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A frozen, hashable schedule of fault events.
+
+    Hashable and comparable so it can live on the frozen ``ReducerConfig``
+    (jit caches keyed on the config keep working); JSON round-trippable
+    (``to_dicts``/``from_dicts``) so the lab's jax-free ``ExperimentSpec``
+    can carry fault rows as plain dicts.
+    """
+
+    events: Tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        for e in self.events:
+            if not isinstance(e, _EVENT_TYPES):
+                raise TypeError(f"not a fault event: {e!r}")
+
+    # -- selectors ----------------------------------------------------------
+
+    @property
+    def nan_events(self) -> Tuple[NanGrad, ...]:
+        return tuple(e for e in self.events if isinstance(e, NanGrad))
+
+    @property
+    def corrupt_events(self) -> Tuple[PayloadCorrupt, ...]:
+        return tuple(e for e in self.events if isinstance(e, PayloadCorrupt))
+
+    @property
+    def has_exchange_faults(self) -> bool:
+        """True when any event must be threaded into the jitted exchange."""
+        return bool(self.nan_events or self.corrupt_events)
+
+    def crashes_at(self, step: int) -> List[Tuple[int, StepCrash]]:
+        """(event_index, event) of every crash planned at ``step`` — the
+        loop tracks fired indices so each crash fires once."""
+        return [(i, e) for i, e in enumerate(self.events)
+                if isinstance(e, StepCrash) and e.step == step]
+
+    def delay_at(self, step: int) -> float:
+        return sum(e.delay_s for e in self.events
+                   if isinstance(e, SlowWorker) and e.step == step)
+
+    # -- JSON ----------------------------------------------------------------
+
+    def to_dicts(self) -> List[Dict]:
+        return [dict(kind=e.kind, **dataclasses.asdict(e)) for e in self.events]
+
+    @classmethod
+    def from_dicts(cls, dicts: Optional[List[Dict]]) -> Optional["FaultPlan"]:
+        if not dicts:
+            return None
+        events = []
+        for d in dicts:
+            d = dict(d)
+            kind = d.pop("kind")
+            if kind not in EVENT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r}; expected one of "
+                    f"{sorted(EVENT_KINDS)}")
+            events.append(EVENT_KINDS[kind](**d))
+        return cls(tuple(events))
+
+
+def match_events(events, step, worker=None):
+    """Traced OR over events: does any event hit this (step, worker)?
+
+    ``step``/``worker`` are traced i32 scalars; event coordinates are
+    static Python ints, so the match lowers to a handful of fused
+    compares — identical on every worker for the step part, per-worker
+    for the worker part (bitwise-replicated decisions).
+    """
+    hit = jnp.bool_(False)
+    for e in events:
+        h = jnp.asarray(step) == e.step
+        if worker is not None and hasattr(e, "worker"):
+            h = h & (jnp.asarray(worker) == e.worker)
+        hit = hit | h
+    return hit
+
+
+# ---------------------------------------------------------------------------
+# payload validation / corruption
+# ---------------------------------------------------------------------------
+
+
+def _leaf_checksum(x) -> jnp.ndarray:
+    """uint32 wrap-around sum of a plane's raw bits (order-independent)."""
+    x = jnp.asarray(x)
+    if x.size == 0:
+        return jnp.uint32(0)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    else:
+        bits = x.astype(jnp.uint32)
+    return bits.sum(dtype=jnp.uint32)
+
+
+def payload_checksums(payload) -> Tuple[jnp.ndarray, ...]:
+    """Per-plane uint32 checksums over any payload pytree."""
+    return tuple(_leaf_checksum(l) for l in jax.tree_util.tree_leaves(payload))
+
+
+def tree_finite(tree) -> jnp.ndarray:
+    """Traced AND of ``isfinite`` over every float leaf of a pytree."""
+    ok = jnp.bool_(True)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        leaf = jnp.asarray(leaf)
+        if jnp.issubdtype(leaf.dtype, jnp.floating) and leaf.size:
+            ok = ok & jnp.isfinite(leaf).all()
+    return ok
+
+
+def validate_payload(payload, level: str, *, reference_checksums=None):
+    """jnp bool scalar: is this payload structurally sound at ``level``?
+
+    Payload classes that define ``.validate(level)`` (``FFTPayload`` /
+    ``StackedPayload``) get their structural checks; anything else
+    (terngrad/qsgd tuples) gets generic float-finiteness.  At ``full``,
+    ``reference_checksums`` (from :func:`payload_checksums` at compress
+    time) are compared against the payload's current checksums.
+    """
+    if level not in VALIDATE_LEVELS:
+        raise ValueError(
+            f"unknown validate level {level!r}; expected one of {VALIDATE_LEVELS}")
+    if level == "off":
+        return jnp.bool_(True)
+    if hasattr(payload, "validate"):
+        ok = payload.validate(level)
+    else:
+        ok = tree_finite(payload)
+    if level == "full" and reference_checksums is not None:
+        for got, want in zip(payload_checksums(payload), reference_checksums):
+            ok = ok & (got == want)
+    return ok
+
+
+def _flip_bits(plane, hit):
+    """Silent corruption: flip low mantissa/code bits where ``hit``.
+
+    Mantissa-only flips keep floats finite — the point is corruption that
+    ``cheap`` validation CANNOT see (caught only by ``full`` checksums).
+    """
+    plane = jnp.asarray(plane)
+    if plane.size == 0:
+        return plane
+    if jnp.issubdtype(plane.dtype, jnp.floating):
+        bits = jax.lax.bitcast_convert_type(plane.astype(jnp.float32), jnp.uint32)
+        flipped = jax.lax.bitcast_convert_type(
+            bits ^ jnp.uint32(0x000FFF00), plane.dtype)
+    else:
+        flipped = (plane.astype(jnp.uint32) ^ jnp.uint32(0x55)).astype(plane.dtype)
+    return jnp.where(hit, flipped, plane)
+
+
+def corrupt_payload(payload, plane_hits: Dict[str, jnp.ndarray]):
+    """Apply per-plane corruption masks to an FFT/Stacked payload.
+
+    ``plane_hits`` maps plane name -> traced bool scalar.  Non-FFT payloads
+    (baseline compressors) pass through untouched — the chaos lane targets
+    the paper's codec.
+    """
+    if not (hasattr(payload, "idx") and hasattr(payload, "re")):
+        return payload
+    out = payload
+    hit = plane_hits.get("values")
+    if hit is not None:
+        out = dataclasses.replace(out, re=_flip_bits(out.re, hit))
+    hit = plane_hits.get("idx")
+    if hit is not None:
+        # one past the last valid bin: unambiguously out of [0, chunk)
+        bad = jnp.asarray(out.chunk, out.idx.dtype)
+        out = dataclasses.replace(
+            out, idx=jnp.where(hit, bad, out.idx))
+    hit = plane_hits.get("quant")
+    if hit is not None and out.quant is not None:
+        q = out.quant
+        bad_eps = jnp.where(hit, jnp.float32(jnp.nan), q.eps)
+        out = dataclasses.replace(
+            out, quant=type(q)(q.config, bad_eps, q.p_codes, q.vmax, q.vmin))
+    return out
+
+
+class ExchangeMonitor:
+    """Per-exchange corruption injector + validation accumulator.
+
+    One monitor is created per traced reduce call (so its state is local
+    to the trace); transports hand every locally created payload through
+    :meth:`on_payload` before it reaches a collective.  ``ok()`` is the
+    worker-local AND of every payload verdict — the step guard combines it
+    across workers with a pmin so the skip decision is replicated.
+    """
+
+    def __init__(self, level: str = "off", *, step=None, worker=None,
+                 corrupt: Tuple[PayloadCorrupt, ...] = ()):
+        if level not in VALIDATE_LEVELS:
+            raise ValueError(
+                f"unknown validate level {level!r}; expected one of "
+                f"{VALIDATE_LEVELS}")
+        self.level = level
+        self.step = step
+        self.worker = worker
+        self.corrupt = tuple(corrupt)
+        self._ok = jnp.bool_(True)
+
+    def on_payload(self, payload):
+        reference = (payload_checksums(payload)
+                     if self.level == "full" else None)
+        if self.corrupt and self.step is not None and self.worker is not None:
+            hits = {
+                plane: match_events(
+                    tuple(e for e in self.corrupt if e.plane == plane),
+                    self.step, self.worker)
+                for plane in CORRUPT_PLANES
+                if any(e.plane == plane for e in self.corrupt)
+            }
+            payload = corrupt_payload(payload, hits)
+        if self.level != "off":
+            self._ok = self._ok & validate_payload(
+                payload, self.level, reference_checksums=reference)
+        return payload
+
+    def ok(self) -> jnp.ndarray:
+        return self._ok
+
+
+# ---------------------------------------------------------------------------
+# health record
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ReducerHealth:
+    """Host-side record of guard skips and degradation-ladder transitions."""
+
+    skipped_steps: int = 0
+    skip_steps: List[int] = dataclasses.field(default_factory=list)
+    delays: int = 0
+    transitions: List[Dict] = dataclasses.field(default_factory=list)
+
+    def record_skip(self, step: int):
+        self.skipped_steps += 1
+        self.skip_steps.append(int(step))
+
+    def record_delay(self, step: int):
+        self.delays += 1
+
+    def record_transition(self, step: int, rung: str, reason: str):
+        self.transitions.append(
+            {"step": int(step), "rung": rung, "reason": str(reason)})
+
+    def to_dict(self) -> Dict:
+        return {
+            "skipped_steps": int(self.skipped_steps),
+            "skip_steps": list(self.skip_steps),
+            "delays": int(self.delays),
+            "transitions": list(self.transitions),
+        }

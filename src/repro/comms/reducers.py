@@ -59,7 +59,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.comms import bucketing, scheduler
+from repro.comms import bucketing, collectives, scheduler
+from repro.comms import faults as faults_mod
 from repro.comms.transport import TRANSPORT_NAMES, get_transport
 from repro.core import baselines as B
 from repro.core.compressor import (
@@ -72,6 +73,7 @@ from repro.kernels.engine import BACKEND_NAMES
 __all__ = [
     "ReducerConfig",
     "make_reducer",
+    "degrade_config",
     "flatten_tree",
     "unflatten_tree",
     "residual_size",
@@ -151,6 +153,28 @@ class ReducerConfig:
     selector: str = "sort"
     sample_rate: float = 1.0 / 64.0
     tau_refine_iters: int = 16
+    # resilience layer (DESIGN.md §19): payload validation level
+    # (off | cheap | full) and a deterministic FaultPlan of injected
+    # events.  With validate="off" and faults=None (the defaults) the
+    # reducer keeps its historical signature and adds zero work; otherwise
+    # the reduce functions take a ``step=`` kwarg and return an extra
+    # worker-local ``ok`` flag the step guard folds across workers.
+    validate: str = "off"
+    faults: Optional[faults_mod.FaultPlan] = None
+
+    @property
+    def resilient(self) -> bool:
+        """True when the reduce functions carry the (step, ok) contract.
+
+        Dense reduction has no payloads to corrupt or validate, so a dense
+        config (including one reached down the degradation ladder, which
+        keeps the FaultPlan for gradient-level events) is never resilient.
+        """
+        if self.kind == "dense":
+            return False
+        return (self.validate != "off"
+                or (self.faults is not None
+                    and bool(self.faults.corrupt_events)))
 
     def __post_init__(self):
         from repro.core.selection import SELECTOR_NAMES
@@ -186,6 +210,15 @@ class ReducerConfig:
         if self.stream_groups is not None and self.stream_groups < 1:
             raise ValueError(
                 f"stream_groups must be >= 1, got {self.stream_groups}")
+        if self.validate not in faults_mod.VALIDATE_LEVELS:
+            raise ValueError(
+                f"unknown validate level {self.validate!r}; expected one of "
+                f"{faults_mod.VALIDATE_LEVELS}")
+        if self.faults is not None and not isinstance(
+                self.faults, faults_mod.FaultPlan):
+            raise TypeError(
+                f"faults must be a comms.faults.FaultPlan, got "
+                f"{type(self.faults).__name__}")
 
     def compressor_config(self) -> FFTCompressorConfig:
         return FFTCompressorConfig(
@@ -230,6 +263,13 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
     Without error feedback: reduce_fn(grads) -> mean_grads.
     With error feedback:    reduce_fn(grads, residual) -> (mean_grads, residual').
 
+    Resilient contract (``config.resilient`` — validate != "off" or a
+    FaultPlan with payload-corruption events, DESIGN.md §19): the reduce
+    functions accept an extra ``step=`` kwarg (traced i32 scalar; drives
+    deterministic fault matching) and return one extra WORKER-LOCAL ``ok``
+    bool — the AND of every payload validation this worker saw.  The step
+    guard combines it across workers (pmin) so skip decisions replicate.
+
     ``batch_tokens``, ``workers``, ``profile`` and ``topology`` are the
     policy layers' pricing inputs (DESIGN.md §15/§17/§18): the train-step
     builder passes the real per-step token count, the gradient axes' mesh
@@ -257,6 +297,24 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
         return dense_reduce
 
     comp = _make_compressor(config)
+    resilient = config.resilient
+
+    def _monitor(step):
+        """One ExchangeMonitor per traced reduce call (None when inert)."""
+        if not resilient:
+            return None
+        axes = []
+        for a in (config.axis, config.pod_axis):
+            if a is None:
+                continue
+            axes.extend(a if isinstance(a, tuple) else (a,))
+        worker = collectives.axis_linear_index(tuple(axes))
+        step_t = (jnp.asarray(-1, jnp.int32) if step is None
+                  else jnp.asarray(step, jnp.int32))
+        corrupt = (config.faults.corrupt_events
+                   if config.faults is not None else ())
+        return faults_mod.ExchangeMonitor(
+            config.validate, step=step_t, worker=worker, corrupt=corrupt)
 
     def _concrete(total: int) -> ReducerConfig:
         """The config with ``transport='auto'`` resolved for a flat buffer
@@ -277,7 +335,7 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
             topology=topology)
         return resolved
 
-    def _exchange_flat(flat: jnp.ndarray, axis) -> jnp.ndarray:
+    def _exchange_flat(flat: jnp.ndarray, axis, monitor=None) -> jnp.ndarray:
         cfg = _concrete(flat.shape[0])
         transport = get_transport(cfg.transport)
         layout = cfg.layout_for(flat.shape[0])
@@ -285,9 +343,10 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
                 and layout.n_buckets > 1):
             plan = scheduler.build_plan(layout, cfg.stream_groups)
             return scheduler.exchange_streamed(
-                transport, flat, plan, comp, axis, stacked=cfg.stacked)
+                transport, flat, plan, comp, axis, stacked=cfg.stacked,
+                monitor=monitor)
         return transport.exchange_flat(flat, layout, comp, axis,
-                                       stacked=cfg.stacked)
+                                       stacked=cfg.stacked, monitor=monitor)
 
     def _local_roundtrip_flat(flat: jnp.ndarray) -> jnp.ndarray:
         cfg = _concrete(flat.shape[0])
@@ -301,7 +360,8 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
         return transport.local_roundtrip_flat(
             flat, layout, comp, stacked=cfg.stacked)
 
-    def compressed_reduce(grads):
+    def compressed_reduce(grads, step=None):
+        monitor = _monitor(step)
         flat, shapes, treedef = flatten_tree(grads)
         if config.kind == "hierarchical":
             # 1) dense mean over the fast intra-pod axis (ICI).  axis=None
@@ -311,33 +371,81 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
                 flat = _mean_over(flat, config.axis)
             # 2) compressed exchange over the slow pod axis (DCN)
             if config.pod_axis is not None:
-                flat = _exchange_flat(flat, config.pod_axis)
+                flat = _exchange_flat(flat, config.pod_axis, monitor)
         else:
-            flat = _exchange_flat(flat, config.axis)
+            flat = _exchange_flat(flat, config.axis, monitor)
             if config.pod_axis is not None:
                 flat = _mean_over(flat, config.pod_axis)
-        return unflatten_tree(flat, shapes, treedef)
+        mean = unflatten_tree(flat, shapes, treedef)
+        if resilient:
+            return mean, monitor.ok()
+        return mean
 
     if not config.error_feedback:
         return compressed_reduce
 
-    def ef_reduce(grads, residual_flat):
+    def ef_reduce(grads, residual_flat, step=None):
+        monitor = _monitor(step)
         flat, shapes, treedef = flatten_tree(grads)
         if config.kind == "hierarchical" and config.axis:
             flat = _mean_over(flat, config.axis)
         corrected = flat + residual_flat
         # residual at the exchange's own compression AND dispatch granularity:
         # what THIS schedule's transport dropped on this worker (per-bucket
-        # quantizer fits, per-readiness-group slices and all)
+        # quantizer fits, per-readiness-group slices and all).  The local
+        # roundtrip is NOT monitored: the residual never crosses the wire,
+        # and a skipped step quarantines it regardless (DESIGN.md §19).
         local_hat = _local_roundtrip_flat(corrected)
         new_residual = corrected - local_hat
         axis = config.pod_axis if config.kind == "hierarchical" else config.axis
-        mean_flat = _exchange_flat(corrected, axis)
+        mean_flat = _exchange_flat(corrected, axis, monitor)
         if config.kind != "hierarchical" and config.pod_axis is not None:
             mean_flat = _mean_over(mean_flat, config.pod_axis)
-        return unflatten_tree(mean_flat, shapes, treedef), new_residual
+        mean = unflatten_tree(mean_flat, shapes, treedef)
+        if resilient:
+            return mean, new_residual, monitor.ok()
+        return mean, new_residual
 
     return ef_reduce
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder (DESIGN.md §19)
+# ---------------------------------------------------------------------------
+
+
+def degrade_config(config: ReducerConfig) -> Optional[Tuple[ReducerConfig, str]]:
+    """One rung down the degradation ladder: (simpler config, rung label).
+
+    Returns ``None`` when the ladder is exhausted (already dense).  Rung
+    order drops the most sophisticated machinery first, preserving as much
+    compression as possible at each step:
+
+    1. fused pallas kernels (or auto)      -> reference backend
+    2. streamed/auto dispatch              -> stacked (one collective)
+    3. hierarchical/reduce_scatter fabric  -> flat spectrum psum
+    4. any compressed kind                 -> dense pmean (error feedback
+       off — dense drops nothing, so there is nothing to accumulate; the
+       train loop pops the residual from the state when it takes this rung)
+
+    The FaultPlan is kept (gradient-level events must keep replaying under
+    a degraded exchange) but validation is retired with the payloads on
+    the dense rung.
+    """
+    if config.kind == "dense":
+        return None
+    if config.backend != "reference":
+        return (dataclasses.replace(config, backend="reference"),
+                f"backend:{config.backend}->reference")
+    if config.schedule != "stacked":
+        return (dataclasses.replace(config, schedule="stacked"),
+                f"schedule:{config.schedule}->stacked")
+    if config.transport in ("hierarchical", "reduce_scatter", "auto"):
+        return (dataclasses.replace(config, transport="psum"),
+                f"transport:{config.transport}->psum")
+    return (dataclasses.replace(config, kind="dense", error_feedback=False,
+                                validate="off"),
+            f"kind:{config.kind}->dense")
 
 
 def residual_size(params) -> int:

@@ -180,7 +180,8 @@ def _concat_index_order(parts):
 
 
 def exchange_streamed(transport, flat: jnp.ndarray, plan: StreamPlan, comp,
-                      axis: str, stacked: bool = True) -> jnp.ndarray:
+                      axis: str, stacked: bool = True,
+                      monitor=None) -> jnp.ndarray:
     """Whole-gradient exchange as ``n_groups`` independent collectives.
 
     Each group's compress+collective consumes ONLY its flat slice, and
@@ -192,7 +193,8 @@ def exchange_streamed(transport, flat: jnp.ndarray, plan: StreamPlan, comp,
     bitwise the stacked exchange's.
     """
     parts = [
-        transport.exchange_flat(flat[lo:hi], sub, comp, axis, stacked=stacked)
+        transport.exchange_flat(flat[lo:hi], sub, comp, axis, stacked=stacked,
+                                monitor=monitor)
         for lo, hi, sub in plan.group_slices()  # traced in readiness order
     ]
     return _concat_index_order(parts)

@@ -104,22 +104,33 @@ def two_level_axes(axis) -> tuple:
         f"2-D mesh (launch.mesh.make_two_level_mesh), got {axis!r}")
 
 
-def _compress_all(buckets: Sequence[jnp.ndarray], comp) -> List:
-    """Per-bucket payloads; FFTCompressor fits one quantizer per bucket."""
+def _compress_all(buckets: Sequence[jnp.ndarray], comp, monitor=None) -> List:
+    """Per-bucket payloads; FFTCompressor fits one quantizer per bucket.
+
+    ``monitor`` (comms.faults.ExchangeMonitor, DESIGN.md §19) intercepts
+    every locally created payload before it reaches a collective: planned
+    wire corruption is injected and the validation verdict accumulated.
+    ``None`` (the default) is the zero-overhead path.
+    """
     if hasattr(comp, "compress_buckets"):
-        return comp.compress_buckets(buckets)
-    return [comp.compress(b) for b in buckets]
+        payloads = comp.compress_buckets(buckets)
+    else:
+        payloads = [comp.compress(b) for b in buckets]
+    if monitor is not None:
+        payloads = [monitor.on_payload(p) for p in payloads]
+    return payloads
 
 
 def _can_stack(comp) -> bool:
     return hasattr(comp, "compress_stacked")
 
 
-def _compress_stacked(flat: jnp.ndarray, layout, comp):
+def _compress_stacked(flat: jnp.ndarray, layout, comp, monitor=None):
     """ONE batched compress of every bucket (same quantizer granularity as
     the per-bucket loop: one fit per bucket row)."""
-    return comp.compress_stacked(
+    payload = comp.compress_stacked(
         bucketing.stack_buckets(flat, layout), layout.sizes())
+    return payload if monitor is None else monitor.on_payload(payload)
 
 
 def _irfft_rows(mean_spectrum: jnp.ndarray, chunk: int) -> jnp.ndarray:
@@ -197,7 +208,8 @@ class Transport:
 
     name: str = "base"
 
-    def exchange(self, buckets: Sequence[jnp.ndarray], comp, axis: str) -> List[jnp.ndarray]:
+    def exchange(self, buckets: Sequence[jnp.ndarray], comp, axis: str,
+                 monitor=None) -> List[jnp.ndarray]:
         raise NotImplementedError
 
     def local_roundtrip(self, buckets: Sequence[jnp.ndarray], comp) -> List[jnp.ndarray]:
@@ -206,16 +218,21 @@ class Transport:
     # -- flat (batched-executor) entry points, DESIGN.md §14 ----------------
 
     def exchange_flat(self, flat: jnp.ndarray, layout, comp, axis: str,
-                      stacked: bool = True) -> jnp.ndarray:
+                      stacked: bool = True, monitor=None) -> jnp.ndarray:
         """Whole-gradient exchange over a bucket layout -> flat mean.
 
         Default: the per-bucket loop (split -> exchange -> concat).  Stacked
         transports override this with the single-collective path.
+        ``monitor`` threads the resilience layer (corruption injection +
+        payload validation) through every payload-creation site; the
+        local-roundtrip (error-feedback) paths are deliberately NOT
+        monitored — the residual never crosses the wire, and a skipped
+        step quarantines it anyway (DESIGN.md §19).
         """
         del stacked  # loop fallback ignores the flag
         buckets = bucketing.split_buckets(flat, layout)
         return bucketing.concat_buckets(
-            self.exchange(buckets, comp, axis), layout)
+            self.exchange(buckets, comp, axis, monitor=monitor), layout)
 
     def local_roundtrip_flat(self, flat: jnp.ndarray, layout, comp,
                              stacked: bool = True) -> jnp.ndarray:
@@ -230,10 +247,13 @@ class AllGatherTransport(Transport):
 
     name = "allgather"
 
-    def exchange(self, buckets, comp, axis):
+    def exchange(self, buckets, comp, axis, monitor=None):
         sizes = [int(b.shape[0]) for b in buckets]
         flat = buckets[0] if len(buckets) == 1 else jnp.concatenate(list(buckets))
-        mean = _gather_mean_payload(comp.compress(flat), comp, axis)
+        payload = comp.compress(flat)
+        if monitor is not None:
+            payload = monitor.on_payload(payload)
+        mean = _gather_mean_payload(payload, comp, axis)
         return _resplit(mean, sizes)
 
     def local_roundtrip(self, buckets, comp):
@@ -243,9 +263,13 @@ class AllGatherTransport(Transport):
 
     # monolithic by definition: already one payload, one collective — the
     # flat entry points skip the bucket split/concat entirely
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                      monitor=None):
         del layout, stacked
-        return _gather_mean_payload(comp.compress(flat), comp, axis)
+        payload = comp.compress(flat)
+        if monitor is not None:
+            payload = monitor.on_payload(payload)
+        return _gather_mean_payload(payload, comp, axis)
 
     def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
         del layout, stacked
@@ -265,14 +289,16 @@ class SequencedTransport(Transport):
 
     name = "sequenced"
 
-    def exchange(self, buckets, comp, axis):
-        payloads = _compress_all(buckets, comp)
+    def exchange(self, buckets, comp, axis, monitor=None):
+        payloads = _compress_all(buckets, comp, monitor)
         return [_gather_mean_payload(p, comp, axis) for p in payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                      monitor=None):
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked)
-        payload = _compress_stacked(flat, layout, comp)
+            return super().exchange_flat(flat, layout, comp, axis, stacked,
+                                         monitor=monitor)
+        payload = _compress_stacked(flat, layout, comp, monitor)
         gathered = jax.lax.all_gather(payload, axis)  # ONE collective
         if hasattr(comp, "decompress_spectrum"):
             spectra = jax.vmap(comp.decompress_spectrum)(gathered)
@@ -301,14 +327,16 @@ class SpectrumPsumTransport(Transport):
 
     name = "psum"
 
-    def exchange(self, buckets, comp, axis):
-        payloads = _compress_all(buckets, comp)
+    def exchange(self, buckets, comp, axis, monitor=None):
+        payloads = _compress_all(buckets, comp, monitor)
         return [_psum_mean_payload(p, comp, axis) for p in payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                      monitor=None):
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked)
-        payload = _compress_stacked(flat, layout, comp)
+            return super().exchange_flat(flat, layout, comp, axis, stacked,
+                                         monitor=monitor)
+        payload = _compress_stacked(flat, layout, comp, monitor)
         inv_p = 1.0 / axis_size(axis)
         if hasattr(comp, "decompress_spectrum"):
             spec = comp.decompress_spectrum(payload)  # (B, max_chunks, f)
@@ -360,20 +388,22 @@ class HierarchicalTransport(Transport):
 
     name = "hierarchical"
 
-    def exchange(self, buckets, comp, axis):
+    def exchange(self, buckets, comp, axis, monitor=None):
         node_ax, local_ax = two_level_axes(axis)
         inv_l = 1.0 / axis_size(local_ax)
         # loop fallback psums the raw time-domain buckets (== the spectra
         # psum by FFT linearity, same dense wire), then compresses the node
         # mean once per island
         node_means = [jax.lax.psum(b, local_ax) * inv_l for b in buckets]
-        node_payloads = _compress_all(node_means, comp)
+        node_payloads = _compress_all(node_means, comp, monitor)
         return [_gather_mean_payload(p, comp, node_ax) for p in node_payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                      monitor=None):
         node_ax, local_ax = two_level_axes(axis)
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked)
+            return super().exchange_flat(flat, layout, comp, axis, stacked,
+                                         monitor=monitor)
         inv_l = 1.0 / axis_size(local_ax)
         rows = bucketing.stack_buckets(flat, layout)  # (B, padded)
         if hasattr(comp, "decompress_spectrum"):
@@ -389,7 +419,7 @@ class HierarchicalTransport(Transport):
         # compress ONCE per island: this payload is the only thing the
         # inter-node fabric carries (every island worker holds the same
         # node_mean after the psum, so the fabric sees one copy per node)
-        node_payload = _compress_stacked(node_mean, layout, comp)
+        node_payload = _compress_stacked(node_mean, layout, comp, monitor)
         gathered = jax.lax.all_gather(node_payload, node_ax)
         if hasattr(comp, "decompress_spectrum"):
             spectra = jax.vmap(comp.decompress_spectrum)(gathered)
@@ -433,16 +463,18 @@ class ReduceScatterTransport(Transport):
 
     name = "reduce_scatter"
 
-    def exchange(self, buckets, comp, axis):
-        payloads = _compress_all(buckets, comp)
+    def exchange(self, buckets, comp, axis, monitor=None):
+        payloads = _compress_all(buckets, comp, monitor)
         return [_psum_mean_payload(p, comp, axis) for p in payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True):
+    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                      monitor=None):
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked)
+            return super().exchange_flat(flat, layout, comp, axis, stacked,
+                                         monitor=monitor)
         p = axis_size(axis)
         inv_p = 1.0 / p
-        payload = _compress_stacked(flat, layout, comp)
+        payload = _compress_stacked(flat, layout, comp, monitor)
         if hasattr(comp, "decompress_spectrum"):
             spec = comp.decompress_spectrum(payload)  # (B, max_chunks, f)
             planes = jnp.stack([spec.real, spec.imag], axis=1)  # (B, 2, c, f)

@@ -103,6 +103,17 @@ class FFTPayload:
     def tree_unflatten(cls, aux, leaves):
         return cls(*leaves, *aux)
 
+    def validate(self, level: str = "cheap") -> jnp.ndarray:
+        """Traced structural sanity check -> bool scalar (DESIGN.md §19).
+
+        ``cheap`` (and ``full``, whose extra checksum comparison lives in
+        ``comms.faults`` where the compress-time reference is known):
+        index bounds vs the chunk width, finiteness of float value planes,
+        and quantizer-param sanity.  O(payload) elementwise work; no
+        collectives.
+        """
+        return _validate_planes(self, level)
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -166,6 +177,29 @@ class StackedPayload:
                 self.re[b, :c_b], self.im[b, :c_b], self.idx[b, :c_b],
                 self.bucket_quant(b), size, self.chunk, has_im=self.has_im))
         return out
+
+    def validate(self, level: str = "cheap") -> jnp.ndarray:
+        """Traced structural sanity check -> bool scalar; see
+        :meth:`FFTPayload.validate`."""
+        return _validate_planes(self, level)
+
+
+def _validate_planes(payload, level: str) -> jnp.ndarray:
+    """Shared structural checks for FFT/Stacked payloads (DESIGN.md §19)."""
+    if level == "off":
+        return jnp.bool_(True)
+    ok = (payload.idx >= 0).all() & (payload.idx < payload.chunk).all()
+    for plane in (payload.re, payload.im):
+        if jnp.issubdtype(plane.dtype, jnp.floating) and plane.size:
+            ok = ok & jnp.isfinite(plane).all()
+    q = payload.quant
+    if q is not None:
+        ok = ok & jnp.isfinite(q.eps).all() & (q.eps > 0).all()
+        ok = ok & jnp.isfinite(q.vmax).all() & jnp.isfinite(q.vmin).all()
+        ok = ok & (q.vmin <= q.vmax).all()
+        n_codes = q.config.n_codes
+        ok = ok & ((q.p_codes >= 1) & (q.p_codes <= n_codes - 2)).all()
+    return ok
 
 
 @dataclasses.dataclass(frozen=True)

@@ -54,7 +54,7 @@ from repro.core.theory import (
     thm34_envelope,
 )
 
-__all__ = ["Claim", "Tolerances", "evaluate_results"]
+__all__ = ["Claim", "Tolerances", "evaluate_results", "chaos_claims"]
 
 
 @dataclasses.dataclass
@@ -101,6 +101,88 @@ def _named(runs: Dict[str, Dict], name: str) -> Optional[Dict]:
 
 def _rel_gap(x: float, base: float) -> float:
     return (x - base) / max(abs(base), 1e-9)
+
+
+def chaos_claims(
+    runs: Dict[str, Dict], tol: Tolerances = Tolerances()
+) -> List[Claim]:
+    """The resilience claims (DESIGN.md §19), emitted ONLY for models whose
+    chaos rows are present — a matrix without fault rows gets no chaos
+    claims (so fabricated evaluator fixtures and pre-chaos artifacts keep
+    evaluating cleanly)."""
+    claims: List[Claim] = []
+
+    def claim(name: str, passed: bool, detail: str) -> None:
+        claims.append(Claim(name, bool(passed), detail))
+
+    for m in _models(runs):
+        has_chaos = any(f"{m}_chaos_{k}" in runs
+                        for k in ("nan", "crash", "corrupt"))
+        if not has_chaos:
+            continue
+        clean = _named(runs, f"{m}_fft_theta0.7")
+
+        # -- nan_step_skipped_matches_clean --------------------------------
+        nan_run = _named(runs, f"{m}_chaos_nan")
+        if nan_run and clean:
+            health = nan_run.get("health") or {}
+            nan_steps = sorted({ev["step"]
+                                for ev in (nan_run["spec"].get("faults") or [])
+                                if ev.get("kind") == "nan_grad"})
+            skip_steps = health.get("skip_steps", [])
+            exact = skip_steps == nan_steps
+            cl, ch = _loss_curve(clean), _loss_curve(nan_run)
+            first = nan_steps[0] if nan_steps else len(ch)
+            prefix_bitwise = cl[:first] == ch[:first] and first > 0
+            fc, fn = _final(clean, tol.final_tail), _final(nan_run, tol.final_tail)
+            gap = _rel_gap(fn, fc)
+            claim(f"{m}:nan_step_skipped_matches_clean",
+                  exact and prefix_bitwise and gap <= tol.loss_tol,
+                  f"guard skipped steps {skip_steps} (planned {nan_steps}); "
+                  f"pre-fault curve bitwise equal: {prefix_bitwise}; final "
+                  f"clean {fc:.4f} vs chaos {fn:.4f} (gap {gap:+.2%}, "
+                  f"tol {tol.loss_tol:.0%})")
+        elif nan_run:
+            claim(f"{m}:nan_step_skipped_matches_clean", False,
+                  "missing clean theta0.7 comparator run")
+
+        # -- crash_resume_bitwise ------------------------------------------
+        crash_run = _named(runs, f"{m}_chaos_crash")
+        if crash_run and clean:
+            health = crash_run.get("health") or {}
+            resumes = health.get("resumes", 0)
+            cl, ch = _loss_curve(clean), _loss_curve(crash_run)
+            bitwise = cl == ch and len(ch) > 0
+            claim(f"{m}:crash_resume_bitwise",
+                  resumes >= 1 and bitwise,
+                  f"{resumes} auto-resume(s); kill+resume trajectory bitwise "
+                  f"equal to the uninterrupted run: {bitwise} "
+                  f"({len(ch)} vs {len(cl)} steps)")
+        elif crash_run:
+            claim(f"{m}:crash_resume_bitwise", False,
+                  "missing clean theta0.7 comparator run")
+
+        # -- corrupt_payload_detected_and_degraded -------------------------
+        corrupt_run = _named(runs, f"{m}_chaos_corrupt")
+        if corrupt_run:
+            health = corrupt_run.get("health") or {}
+            spec = corrupt_run["spec"]
+            corrupt_steps = sorted({ev["step"]
+                                    for ev in (spec.get("faults") or [])
+                                    if ev.get("kind") == "payload_corrupt"})
+            skip_steps = health.get("skip_steps", [])
+            detected = (len(skip_steps) > 0
+                        and set(skip_steps) <= set(corrupt_steps))
+            transitions = health.get("transitions", [])
+            completed = (len(corrupt_run["records"]) == spec["steps"]
+                         and math.isfinite(_final(corrupt_run, tol.final_tail)))
+            claim(f"{m}:corrupt_payload_detected_and_degraded",
+                  detected and len(transitions) > 0 and completed,
+                  f"validation caught {len(skip_steps)} corrupted step(s) "
+                  f"{skip_steps} of planned {corrupt_steps}; ladder "
+                  f"transitions {[t['rung'] for t in transitions]}; run "
+                  f"completed: {completed}")
+    return claims
 
 
 def evaluate_results(
@@ -257,9 +339,13 @@ def evaluate_results(
             if run["spec"]["model"] != m:
                 continue
             spec = run["spec"]
-            loss = _loss_curve(run)
-            gsq = [r["grad_sq"] for r in run["records"]]
-            thetas = [r["theta"] or 0.0 for r in run["records"]]
+            # guard-skipped steps committed no update and their measured
+            # gradient energy is the POISONED gradient's (NaN by design on
+            # nan_grad rows) — the envelope bounds the committed trajectory
+            recs = [r for r in run["records"] if not r.get("skipped")]
+            loss = [r["loss"] for r in recs]
+            gsq = [r["grad_sq"] for r in recs]
+            thetas = [r["theta"] or 0.0 for r in recs]
             constants = estimate_curve_constants(
                 loss, gsq, eta=spec["lr"], batch=spec["global_batch"],
                 fstar=run.get("entropy_floor", 0.0))
@@ -276,4 +362,5 @@ def evaluate_results(
               "measured min grad-energy under the plug-in Thm 3.4 bound"
               + (f" EXCEPT {'; '.join(env_detail)}" if env_detail else ""))
 
+    claims += chaos_claims(runs, tol)
     return claims, all(c.passed for c in claims)

@@ -46,10 +46,14 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description="convergence lab matrix")
     p.add_argument("--smoke", action="store_true",
                    help="CI smoke matrix (convnet + tiny LM, all transports)")
+    p.add_argument("--chaos", action="store_true",
+                   help="chaos lane only (DESIGN.md §19): fault rows + their "
+                        "clean comparators, judged by the resilience claims")
     p.add_argument("--workers", type=int, default=8,
                    help="simulated worker count (default 8)")
-    p.add_argument("--out", default="BENCH_convergence.json",
-                   help="JSON artifact path")
+    p.add_argument("--out", default=None,
+                   help="JSON artifact path (default BENCH_convergence.json; "
+                        "BENCH_chaos.json with --chaos)")
     p.add_argument("--docs", default="docs/EXPERIMENTS.md",
                    help="EXPERIMENTS.md to splice the results table into "
                         "('skip' to disable)")
@@ -57,20 +61,34 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     _ensure_devices(args.workers)
+    if args.out is None:
+        args.out = "BENCH_chaos.json" if args.chaos else "BENCH_convergence.json"
 
     # jax-touching imports only AFTER the device count is pinned
     from repro.lab import report, spec
-    from repro.lab.evaluate import evaluate_results
+    from repro.lab.evaluate import chaos_claims, evaluate_results
     from repro.lab.runner import run_matrix
 
-    matrix = (spec.smoke_matrix(args.workers) if args.smoke
-              else spec.full_matrix(args.workers))
+    if args.chaos:
+        matrix = spec.chaos_matrix(args.workers)
+    elif args.smoke:
+        matrix = spec.smoke_matrix(args.workers)
+    else:
+        matrix = spec.full_matrix(args.workers)
     results = run_matrix(matrix, verbose=not args.quiet)
     runs = {name: r.to_dict() for name, r in results.items()}
-    claims, all_passed = evaluate_results(runs)
+    if args.chaos:
+        # chaos lane: only the resilience claims apply (the accuracy claims
+        # need the full accuracy rows, which this lane deliberately skips)
+        claims = chaos_claims(runs)
+        all_passed = bool(claims) and all(c.passed for c in claims)
+    else:
+        claims, all_passed = evaluate_results(runs)
 
     report.write_json(args.out, runs, [c.to_dict() for c in claims], all_passed)
     print(f"[lab] wrote {args.out}")
+    if args.chaos and args.docs == "docs/EXPERIMENTS.md":
+        args.docs = "skip"  # the chaos lane never rewrites the results table
     if args.docs != "skip":
         block = report.render_markdown(runs, [c.to_dict() for c in claims], all_passed)
         if report.splice_experiments_md(args.docs, block):

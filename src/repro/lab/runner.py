@@ -23,6 +23,8 @@ import; this module only checks the device count is sufficient.
 from __future__ import annotations
 
 import dataclasses
+import shutil
+import tempfile
 import time
 from typing import Dict, List, Optional
 
@@ -30,6 +32,7 @@ import jax
 
 from repro import jaxcompat as compat
 from repro.comms import cost_model
+from repro.comms import faults as faults_mod
 from repro.comms.reducers import ReducerConfig, flatten_tree
 from repro.configs.base import ArchConfig
 from repro.core import schedules as theta_schedules
@@ -70,6 +73,10 @@ class RunResult:
     entropy_floor: float
     wire: Optional[Dict]  # cost_model.RunWireAccount.to_dict()
     walltime_s: float
+    # resilience evidence (DESIGN.md §19): the loop's ReducerHealth record
+    # (skipped steps, delays, degradation transitions) plus the number of
+    # fatal-crash auto-resumes the harness performed
+    health: Optional[Dict] = None
 
     @property
     def loss_curve(self) -> List[float]:
@@ -92,6 +99,7 @@ class RunResult:
             "final_loss": self.final_loss(),
             "wire": self.wire,
             "walltime_s": round(self.walltime_s, 2),
+            "health": self.health,
         }
 
 
@@ -114,7 +122,8 @@ def _data_axes(spec: ExperimentSpec):
     return TWO_LEVEL_AXES if spec.nodes is not None else ("data",)
 
 
-def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
+def _reducer_config(spec: ExperimentSpec,
+                    plan: Optional[faults_mod.FaultPlan]) -> Optional[ReducerConfig]:
     if spec.reducer is None:
         return None
     axis = TWO_LEVEL_AXES if spec.nodes is not None else "data"
@@ -124,6 +133,7 @@ def _reducer_config(spec: ExperimentSpec) -> Optional[ReducerConfig]:
         transport=spec.transport, error_feedback=spec.error_feedback,
         backend=spec.backend, stacked=spec.stacked,
         schedule=spec.exchange_schedule, selector=spec.selector,
+        validate=spec.validate, faults=plan,
     )
 
 
@@ -176,7 +186,9 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
     model, stream = _build_model_and_stream(spec)
     opt = (OptConfig(kind="sgd", lr=spec.lr, momentum=0.9)
            if spec.opt == "sgd" else OptConfig(kind="adamw", lr=spec.lr))
-    reducer = _reducer_config(spec)
+    plan = (faults_mod.FaultPlan.from_dicts(spec.faults)
+            if spec.faults else None)
+    reducer = _reducer_config(spec, plan)
     mode = "pjit" if reducer is None else "compressed_dp"
     if spec.nodes is not None:
         step_cfg = StepConfig(mode=mode, reducer=reducer,
@@ -231,6 +243,8 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
         }
         if "acc" in metrics:
             rec["acc"] = metrics["acc"]
+        if "skipped" in metrics:
+            rec["skipped"] = metrics["skipped"]
         payload = (payload_at(theta if theta is not None else spec.theta)
                    if spec.reducer is not None else None)
         rec["payload_bits"] = payload
@@ -248,14 +262,52 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
         if verbose and step % 10 == 0:
             print(f"[lab:{spec.name}] step {step} loss {metrics['loss']:.4f}")
 
+    # crash/resume rows checkpoint into a throwaway dir; a fatal injected
+    # crash simulates process death, so the harness restarts ``train_loop``
+    # (auto-resume restores the newest checkpoint; the fired-crash set on
+    # loop_cfg persists across restarts so each crash fires once)
+    ckpt_dir = (tempfile.mkdtemp(prefix=f"lab-{spec.name}-ckpt-")
+                if spec.ckpt_every else None)
     loop_cfg = TrainLoopConfig(
         total_steps=spec.steps, log_every=max(spec.steps, 1),
         theta_schedule=schedule, metrics_hook=hook,
+        faults=plan, ckpt_dir=ckpt_dir,
+        ckpt_every=spec.ckpt_every or 50,
     )
     t0 = time.perf_counter()
-    with compat.set_mesh(mesh):
-        train_loop(model, opt, step_cfg, mesh, state, stream, loop_cfg)
+    resumes = 0
+    try:
+        with compat.set_mesh(mesh):
+            while True:
+                try:
+                    out = train_loop(
+                        model, opt, step_cfg, mesh, state, stream, loop_cfg)
+                    break
+                except faults_mod.FatalInjectedCrash as e:
+                    resumes += 1
+                    if resumes > 8:
+                        raise
+                    if verbose:
+                        print(f"[lab:{spec.name}] {e}; restarting "
+                              f"(auto-resume #{resumes})")
+                    # simulated process death: the restarted process builds a
+                    # fresh init state; restore overwrites it from the newest
+                    # checkpoint (or the run restarts from scratch when the
+                    # crash predates the first checkpoint)
+                    state = init_state(
+                        jax.random.PRNGKey(spec.seed), model, opt,
+                        error_feedback=spec.error_feedback)
+    finally:
+        if ckpt_dir is not None:
+            shutil.rmtree(ckpt_dir, ignore_errors=True)
+    health = dict(out["health"], resumes=resumes)
     walltime = time.perf_counter() - t0
+
+    if plan is not None:
+        # rollback/resume re-runs steps, appending duplicate records; keep
+        # the LAST record per step (what the committed trajectory saw)
+        last = {r["step"]: r for r in records}
+        records = [last[s] for s in sorted(last)]
 
     if schedule is not None:
         # the loop's realized thetas must equal the declarative curve —
@@ -279,6 +331,7 @@ def run_experiment(spec: ExperimentSpec, verbose: bool = True) -> RunResult:
     return RunResult(
         spec=spec, records=records, n_elems=n_elems,
         entropy_floor=stream.entropy_floor(), wire=wire, walltime_s=walltime,
+        health=health,
     )
 
 

@@ -16,7 +16,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-__all__ = ["ExperimentSpec", "smoke_matrix", "full_matrix", "group_by_model"]
+__all__ = ["ExperimentSpec", "smoke_matrix", "full_matrix", "chaos_matrix",
+           "group_by_model"]
+
+# mirrors comms/faults.py (VALIDATE_LEVELS / EVENT_KINDS) — this module must
+# stay jax-free, so it cannot import the (jnp-using) faults module;
+# tests/test_faults.py asserts the mirrors agree
+_VALIDATE_LEVELS = ("off", "cheap", "full")
+_EVENT_KINDS = ("nan_grad", "payload_corrupt", "step_crash", "slow_worker")
 
 
 @dataclasses.dataclass
@@ -64,6 +71,16 @@ class ExperimentSpec:
     # exchange then rides both axes and the hierarchical transports apply.
     # None keeps the flat (workers,) x ("data",) mesh.
     nodes: Optional[int] = None
+    # chaos lane (DESIGN.md §19): a deterministic fault plan in its
+    # JSON-dict form (``comms.faults.FaultPlan.to_dicts()``) — nan_grad /
+    # payload_corrupt events ride the reducer into the jitted step,
+    # step_crash / slow_worker fire host-side in the train loop
+    faults: Optional[List[Dict]] = None
+    # payload validation level on the exchange (ReducerConfig.validate):
+    # off | cheap (index bounds + quantizer sanity) | full (+ checksums)
+    validate: str = "off"
+    # checkpoint cadence for crash/resume rows; 0 = no checkpointing
+    ckpt_every: int = 0
 
     def __post_init__(self):
         if self.model not in ("lm", "convnet"):
@@ -96,6 +113,14 @@ class ExperimentSpec:
                 "transport='hierarchical' needs a two-level mesh: set nodes")
         if self.reducer is None and self.schedule is not None:
             raise ValueError("dense baseline cannot take a theta schedule")
+        if self.validate not in _VALIDATE_LEVELS:
+            raise ValueError(f"unknown validate level {self.validate!r}")
+        if self.faults is not None:
+            for ev in self.faults:
+                if not isinstance(ev, dict) or ev.get("kind") not in _EVENT_KINDS:
+                    raise ValueError(f"unknown fault event {ev!r}")
+        if self.ckpt_every < 0:
+            raise ValueError(f"ckpt_every must be >= 0, got {self.ckpt_every}")
         if self.workers < 1 or self.global_batch % self.workers:
             raise ValueError(
                 f"global_batch {self.global_batch} must divide by workers {self.workers}"
@@ -205,6 +230,69 @@ def _matrix(model: str, *, workers: int, steps: int, seed: int = 0) -> List[Expe
     return specs
 
 
+def _chaos_rows(model: str, *, workers: int, steps: int, seed: int = 0) -> List[ExperimentSpec]:
+    """The chaos lane (DESIGN.md §19): three fault rows per model, each
+    proving one resilience claim against the model's clean theta0.7 row.
+
+    * ``{model}_chaos_nan`` — two workers emit all-NaN gradients at two
+      steps; the non-finite guard must skip EXACTLY those steps (bitwise
+      clean before the first fault, 5% loss envelope at the end).
+    * ``{model}_chaos_crash`` — a fatal crash mid-run with checkpointing;
+      the harness restarts ``train_loop`` (auto-resume) and the deduped
+      trajectory must be BITWISE identical to the uninterrupted clean row.
+    * ``{model}_chaos_corrupt`` — persistent payload corruption on a
+      bucketed exchange with ``validate=cheap``; the guard skips every
+      corrupted step until the loop walks the degradation ladder, and the
+      run still completes.
+    """
+    base = dict(model=model, workers=workers, steps=steps, seed=seed)
+    if model == "convnet":
+        base.update(opt="sgd", lr=0.1)
+    sched = {"kind": "constant", "theta": 0.7}
+    # probes record reconstruction stats, not trajectory — chaos rows skip
+    # them (the bitwise claims compare losses, and the probe would fire on
+    # skipped steps' params too)
+    chaos = dict(theta=0.7, schedule=sched, probe_every=0)
+    nan_steps = (steps // 4, steps // 2)
+    # a run of corrupted steps long enough to exhaust the loop's skip
+    # patience (max_retries=2 -> degrade after 3 consecutive skips)
+    corrupt_lo = steps // 3
+    corrupt_steps = range(corrupt_lo, corrupt_lo + 6)
+    return [
+        ExperimentSpec(
+            name=f"{model}_chaos_nan",
+            faults=[{"kind": "nan_grad", "step": nan_steps[0], "worker": 1},
+                    {"kind": "nan_grad", "step": nan_steps[1],
+                     "worker": workers - 1}],
+            **chaos, **base),
+        ExperimentSpec(
+            name=f"{model}_chaos_crash", ckpt_every=10,
+            faults=[{"kind": "step_crash", "step": (steps * 2) // 3,
+                     "fatal": True}],
+            **chaos, **base),
+        ExperimentSpec(
+            name=f"{model}_chaos_corrupt", transport="sequenced",
+            bucket_bytes=4096 * 4, validate="cheap",
+            faults=[{"kind": "payload_corrupt", "step": s, "worker": 1,
+                     "plane": "idx"} for s in corrupt_steps],
+            **chaos, **base),
+    ]
+
+
+def chaos_matrix(workers: int = 8) -> List[ExperimentSpec]:
+    """The chaos lane plus the clean rows its claims compare against."""
+    specs: List[ExperimentSpec] = []
+    for model in ("lm", "convnet"):
+        base = dict(model=model, workers=workers, steps=50)
+        if model == "convnet":
+            base.update(opt="sgd", lr=0.1)
+        specs.append(ExperimentSpec(
+            name=f"{model}_fft_theta0.7", theta=0.7,
+            schedule={"kind": "constant", "theta": 0.7}, **base))
+        specs += _chaos_rows(model, workers=workers, steps=50)
+    return specs
+
+
 def smoke_matrix(workers: int = 8) -> List[ExperimentSpec]:
     """CI smoke: convnet + tiny transformer, 8 simulated workers."""
     return (_matrix("lm", workers=workers, steps=50)
@@ -244,6 +332,11 @@ def full_matrix(workers: int = 8) -> List[ExperimentSpec]:
                            transport="sequenced", exchange_schedule="auto",
                            schedule={"kind": "constant", "theta": 0.7}, **base),
         ]
+    # chaos lane (DESIGN.md §19): the fault rows ride the full sweep too,
+    # so BENCH_convergence.json carries the resilience evidence alongside
+    # the accuracy claims (their clean comparators are the smoke rows above)
+    for model in ("lm", "convnet"):
+        specs += _chaos_rows(model, workers=workers, steps=50)
     # worker-count scaling point (claims are worker-count independent);
     # derived from the requested count so e.g. --workers 2 never demands
     # more devices than the CLI pinned

@@ -1,12 +1,18 @@
-"""Checkpointing: atomic, resumable, mesh-elastic.
+"""Checkpointing: atomic, resumable, mesh-elastic, corruption-detecting.
 
 Layout per checkpoint:  <dir>/step_<N>/
-    manifest.json   — leaf paths, shapes, dtypes, PartitionSpecs (logical)
+    manifest.json   — leaf paths, shapes, dtypes, per-array sha256 digests
     arrays.npz      — all leaves, host-gathered
 
-Design points for fleet-scale operation (DESIGN.md §5):
+Design points for fleet-scale operation (DESIGN.md §5, §19):
 * **atomicity** — written to ``step_<N>.tmp`` then ``os.rename``d; a crash
-  mid-write never corrupts the latest checkpoint;
+  mid-write never corrupts the latest checkpoint (the stray ``.tmp`` dir is
+  invisible to ``latest_step``/``restore``);
+* **end-to-end verification** — ``manifest.json`` records a sha256 digest
+  per array; ``restore`` re-hashes what it loaded and, when the newest
+  checkpoint fails verification (bit rot, torn write below the rename),
+  falls back to the previous step with a warning instead of resuming from
+  garbage;
 * **elastic remesh** — arrays are saved *unsharded* (host view) with their
   logical PartitionSpec recorded; ``restore`` re-device_puts onto whatever
   mesh is alive, so a 512-chip run restores onto 256 chips (or 8 CPU devices
@@ -16,22 +22,52 @@ Design points for fleet-scale operation (DESIGN.md §5):
 * on a real multi-host fleet the np.savez writer shards by host; the
   single-process container exercises the same code path with one host.
 
-Async: ``save`` can run on a background thread (``block=False``) so the train
-loop overlaps checkpoint I/O with compute.
+Async: ``save`` can run on a background thread (``block=False``) so the
+train loop overlaps checkpoint I/O with compute.  The in-flight writer is
+TRACKED: the next ``save`` (either mode), ``restore``, and the manager's
+``_gc`` join it first, and ``wait()`` drains it at loop shutdown — so the
+final-path return value can never race a later reader and GC can never
+unlink a directory mid-rename.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
 import shutil
 import threading
+import warnings
 from typing import Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "wait", "CheckpointError",
+           "CheckpointManager"]
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint exists but cannot be trusted (digest mismatch, torn
+    archive).  A RuntimeError so the train loop's recovery path may absorb
+    it like any other step-time failure."""
+
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+# in-flight async writer (module-level: `save` is a free function); guarded
+# by a lock so concurrent callers hand off cleanly
+_INFLIGHT_LOCK = threading.Lock()
+_INFLIGHT: Optional[threading.Thread] = None
+
+
+def wait() -> None:
+    """Join the in-flight async save, if any (loop shutdown, pre-restore)."""
+    with _INFLIGHT_LOCK:
+        t = _INFLIGHT
+    if t is not None:
+        t.join()
 
 
 def _flatten_with_paths(tree):
@@ -40,17 +76,28 @@ def _flatten_with_paths(tree):
 
 
 def save(directory: str, step: int, state, *, block: bool = True) -> str:
-    """Write state atomically; returns the final checkpoint path."""
+    """Write state atomically; returns the final checkpoint path.
+
+    With ``block=False`` the write runs on a background thread; the
+    returned path is only guaranteed to exist after the NEXT ``save`` /
+    ``restore`` / ``wait()`` joins the writer.
+    """
+    global _INFLIGHT
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
 
+    # snapshot to host BEFORE returning: the caller may mutate/donate the
+    # state the moment save() returns, async or not
     leaves = _flatten_with_paths(state)
     arrays = {k: np.asarray(v) for k, v in leaves.items()}
     manifest = {
         "step": step,
         "leaves": {
             k: {"shape": list(a.shape), "dtype": str(a.dtype)} for k, a in arrays.items()
+        },
+        "digests": {
+            k: hashlib.sha256(a.tobytes()).hexdigest() for k, a in arrays.items()
         },
     }
 
@@ -65,23 +112,56 @@ def save(directory: str, step: int, state, *, block: bool = True) -> str:
             shutil.rmtree(final)
         os.rename(tmp, final)
 
+    wait()  # never two writers in flight; serializes with the previous save
     if block:
         write()
     else:
         t = threading.Thread(target=write, daemon=True)
+        with _INFLIGHT_LOCK:
+            _INFLIGHT = t
         t.start()
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _step_numbers(directory: str):
+    """Sorted step numbers of COMPLETE checkpoints; stray files, ``.tmp``
+    leftovers of dead writers, and non-conforming names are ignored."""
     if not os.path.isdir(directory):
-        return None
-    steps = [
-        int(d.split("_")[1])
-        for d in os.listdir(directory)
-        if d.startswith("step_") and not d.endswith(".tmp")
-    ]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.match(d)
+        if m and os.path.isdir(os.path.join(directory, d)):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _step_numbers(directory)
+    return steps[-1] if steps else None
+
+
+def _load_verified(directory: str, step: int):
+    """Load + digest-check one checkpoint; raises CheckpointError when the
+    archive is torn or any array's sha256 disagrees with the manifest."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            arrays = {k: data[k] for k in data.files}
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except Exception as e:  # torn zip, truncated json, interrupted GC, ...
+        raise CheckpointError(f"unreadable checkpoint {path}: {e}") from e
+    digests = manifest.get("digests")
+    if digests:  # pre-digest checkpoints restore unverified
+        for k, want in digests.items():
+            if k not in arrays:
+                raise CheckpointError(f"{path}: manifest names missing leaf {k}")
+            got = hashlib.sha256(arrays[k].tobytes()).hexdigest()
+            if got != want:
+                raise CheckpointError(
+                    f"{path}: digest mismatch on {k} (corrupt array)")
+    return arrays
 
 
 def restore(directory: str, state_like, *, step: Optional[int] = None,
@@ -91,14 +171,37 @@ def restore(directory: str, state_like, *, step: Optional[int] = None,
     ``state_like`` may be concrete or ShapeDtypeStructs; ``shardings`` is an
     optional matching tree of NamedShardings for the TARGET mesh (elastic
     remesh: the saved mesh is irrelevant).
-    """
-    step = step if step is not None else latest_step(directory)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        arrays = {k: data[k] for k in data.files}
 
+    Every array is digest-verified against the manifest.  When no explicit
+    ``step`` is requested and the newest checkpoint fails verification, the
+    restore WARNS and falls back to the next-older step — resuming slightly
+    earlier beats resuming from corruption.
+    """
+    wait()  # never read under an in-flight writer
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = list(reversed(_step_numbers(directory)))
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    last_err: Optional[Exception] = None
+    for s in candidates:
+        try:
+            arrays = _load_verified(directory, s)
+        except CheckpointError as e:
+            last_err = e
+            if step is not None:
+                raise
+            warnings.warn(
+                f"checkpoint step {s} failed verification ({e}); "
+                f"falling back to the previous step")
+            continue
+        return _rebuild(arrays, state_like, shardings), s
+    raise CheckpointError(
+        f"no verifiable checkpoint under {directory}") from last_err
+
+
+def _rebuild(arrays, state_like, shardings):
     flat_like = _flatten_with_paths(state_like)
     missing = set(flat_like) - set(arrays)
     if missing:
@@ -116,7 +219,7 @@ def restore(directory: str, state_like, *, step: Optional[int] = None,
     # rebuild the tree in state_like's structure
     paths, treedef = jax.tree_util.tree_flatten_with_path(state_like)
     leaves = [restored[jax.tree_util.keystr(p)] for p, _ in paths]
-    return jax.tree_util.tree_unflatten(treedef, leaves), step
+    return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
 class CheckpointManager:
@@ -136,13 +239,15 @@ class CheckpointManager:
         self._gc()
         return path
 
+    def wait(self) -> None:
+        """Drain the in-flight async writer (call at loop shutdown)."""
+        wait()
+
     def _gc(self):
-        if not os.path.isdir(self.directory):
-            return
-        steps = sorted(
-            int(d.split("_")[1])
-            for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp")
-        )
+        # join the in-flight writer first: GC must never race a rename,
+        # and the newest checkpoint must be visible before pruning
+        wait()
+        steps = _step_numbers(self.directory)
         for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True)
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -55,10 +55,12 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import jaxcompat as compat
-from repro.comms import scheduler
+from repro.comms import collectives, scheduler
+from repro.comms import faults as faults_mod
 from repro.comms.reducers import ReducerConfig, make_reducer
 from repro.models.sharding import count_params, spec_tree_to_pspecs
 from repro.models.transformer import MeshCtx
@@ -86,6 +88,16 @@ class StepConfig:
     # measured backprop rate instead of the static defaults.  A key mismatch
     # raises calibrate.ProfileKeyMismatch at step-build time.
     calibration_path: Optional[str] = None
+    # non-finite guard (DESIGN.md §19, compressed modes): every step, all
+    # workers agree (one pmin over the manual axes) that the local gradient,
+    # the reduced mean, the EF residual update, and every payload validation
+    # are finite/sound; a failed step commits NOTHING — params, optimizer
+    # moments, and the EF residual carry over unchanged (only the step
+    # counter advances), so one poisoned worker cannot sneak a NaN into the
+    # DGC recurrence.  The decision is bitwise-replicated; on a clean step
+    # the select is the identity, so guarded and unguarded trajectories are
+    # bitwise-identical.
+    guard: bool = True
 
     @property
     def batch_axes(self) -> Tuple[str, ...]:
@@ -263,20 +275,68 @@ def build_train_step(
     )
     vg_inner = _loss_and_grad(model, inner_ctx)
 
+    plan = reducer_cfg.faults
+    resilient = reducer_cfg.resilient
+    guard = step_cfg.guard
+
     def inner(state, batch):
+        step_no = state["step"]
         if ef:
             state = dict(state, residual=state["residual"][0])
         (loss, metrics), grads = vg_inner(state["params"], batch)
+        if plan is not None and plan.nan_events:
+            # deterministic gradient poisoning (FaultPlan.nan_grad): the
+            # worker coordinate is the row-major linear index over the
+            # manual axes, the step coordinate the replicated counter —
+            # both traced, so the chaos run shares the clean run's jaxpr
+            widx = collectives.axis_linear_index(manual)
+            poison = faults_mod.match_events(plan.nan_events, step_no, widx)
+            grads = jax.tree_util.tree_map(
+                lambda g: jnp.where(poison, jnp.asarray(jnp.nan, g.dtype), g),
+                grads)
+        pay_ok = jnp.bool_(True)
         if ef:
-            grads, new_residual = reducer(grads, state["residual"])
+            if resilient:
+                reduced, new_residual, pay_ok = reducer(
+                    grads, state["residual"], step=step_no)
+            else:
+                reduced, new_residual = reducer(grads, state["residual"])
         else:
-            grads = reducer(grads)
+            if resilient:
+                reduced, pay_ok = reducer(grads, step=step_no)
+            else:
+                reduced = reducer(grads)
         loss = jax.lax.pmean(loss, manual)
         metrics = jax.lax.pmean(metrics, manual)
-        new_state, gnorm = _optimizer_update(opt_cfg, step_cfg, state, grads, lr_scale)
+        new_state, gnorm = _optimizer_update(
+            opt_cfg, step_cfg, state, reduced, lr_scale)
         if ef:
-            new_state["residual"] = new_residual[None]
-        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            new_state["residual"] = new_residual
+        skipped = jnp.float32(0.0)
+        if guard:
+            # all-workers-agree finiteness flag: local gradient, reduced
+            # mean, residual update, and payload validation must all be
+            # sound EVERYWHERE — one pmin makes the verdict bitwise-
+            # replicated, so workers can never diverge on whether the
+            # update committed
+            ok_local = (pay_ok
+                        & faults_mod.tree_finite(grads)
+                        & faults_mod.tree_finite(reduced))
+            if ef:
+                ok_local = ok_local & jnp.isfinite(new_residual).all()
+            keep = jax.lax.pmin(ok_local.astype(jnp.int32), manual) > 0
+            # a skipped step commits nothing but the step counter: params
+            # and moments stay put, and the EF residual is QUARANTINED —
+            # carrying e_{t-1} over unchanged keeps the DGC recurrence on
+            # clean inputs instead of folding a poisoned error in
+            old_state = dict(state, step=state["step"] + 1)
+            new_state = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(keep, new, old),
+                new_state, old_state)
+            skipped = 1.0 - keep.astype(jnp.float32)
+        if ef:
+            new_state["residual"] = new_state["residual"][None]
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, skipped=skipped)
         return new_state, metrics
 
     def state_in_specs(state_like):

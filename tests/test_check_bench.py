@@ -199,6 +199,33 @@ def test_topology_inter_wire_must_beat_flat_psum(committed):
     assert any("strictly below" in e for e in check_bench.check(data))
 
 
+def test_resilience_section_guarded(committed):
+    """ISSUE 9 acceptance evidence: the guarded-exchange overhead
+    measurement must be present, cheap-or-better, and backed by the
+    deterministic structural check (no expensive primitives added)."""
+    data = copy.deepcopy(committed)
+    del data["resilience"]
+    assert any("resilience" in e for e in check_bench.check(data))
+    for key in check_bench.RESILIENCE_KEYS:
+        data = copy.deepcopy(committed)
+        del data["resilience"][key]
+        assert any(key in e for e in check_bench.check(data)), key
+    # validation must actually be on in the measurement
+    data = copy.deepcopy(committed)
+    data["resilience"]["validate_level"] = "off"
+    assert any("validate_level" in e for e in check_bench.check(data))
+    # the overhead ratio must be a positive number
+    for bad in (0.0, -1.0, None, "fast"):
+        data = copy.deepcopy(committed)
+        data["resilience"]["guard_overhead_ratio"] = bad
+        assert any("guard_overhead_ratio" in e
+                   for e in check_bench.check(data)), bad
+    # the structural no-new-primitives verdict is the flake-proof gate
+    data = copy.deepcopy(committed)
+    data["resilience"]["deterministic_ok"] = False
+    assert any("deterministic_ok" in e for e in check_bench.check(data))
+
+
 def test_topology_inter_wire_must_shrink_with_island_size(committed):
     """For a fixed node count, growing `local` must strictly shrink each
     worker's share of the fabric hop (nodes*B/local)."""

@@ -1,0 +1,442 @@
+"""Resilience layer (DESIGN.md §19): typed fault plans, payload validation,
+the non-finite step guard, the degradation ladder, and corruption-detecting
+checkpoints.  Multi-worker behaviour (guard agreement, crash auto-resume)
+runs on fake CPU devices in a subprocess."""
+
+import dataclasses
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+
+from repro.comms import faults
+from repro.comms.reducers import ReducerConfig, degrade_config
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+from repro.train import checkpoint as ckpt
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_roundtrip_and_hashable():
+    plan = faults.FaultPlan(events=(
+        faults.NanGrad(step=3, worker=2),
+        faults.PayloadCorrupt(step=5, worker=0, plane="values"),
+        faults.StepCrash(step=7, fatal=True),
+        faults.SlowWorker(step=9, worker=1, delay_s=0.01),
+    ))
+    dicts = plan.to_dicts()
+    json.loads(json.dumps(dicts))  # JSON-serializable
+    assert faults.FaultPlan.from_dicts(dicts) == plan
+    hash(plan)  # frozen ReducerConfigs carry the plan into jit cache keys
+    assert faults.FaultPlan.from_dicts(None) is None
+    assert faults.FaultPlan.from_dicts([]) is None
+
+
+def test_fault_plan_selectors():
+    plan = faults.FaultPlan(events=(
+        faults.NanGrad(step=3, worker=2),
+        faults.StepCrash(step=7),
+        faults.StepCrash(step=7, fatal=True),
+        faults.SlowWorker(step=9, worker=1, delay_s=0.25),
+    ))
+    assert len(plan.nan_events) == 1
+    assert plan.has_exchange_faults
+    assert [i for i, _ in plan.crashes_at(7)] == [1, 2]
+    assert plan.crashes_at(3) == []
+    assert plan.delay_at(9) == pytest.approx(0.25)
+    assert plan.delay_at(0) == 0.0
+
+
+def test_fault_events_reject_bad_input():
+    with pytest.raises(ValueError):
+        faults.PayloadCorrupt(step=1, worker=0, plane="imaginary")
+    with pytest.raises(TypeError):
+        faults.FaultPlan(events=("not-an-event",))
+    with pytest.raises(ValueError):
+        faults.FaultPlan.from_dicts([{"kind": "meteor_strike", "step": 1}])
+
+
+def test_spec_mirrors_agree_with_faults_module():
+    """lab/spec.py stays jax-free, so it mirrors the validate levels and
+    event kinds; the mirrors must never drift from the real registry."""
+    from repro.lab import spec as lab_spec
+
+    assert lab_spec._VALIDATE_LEVELS == faults.VALIDATE_LEVELS
+    assert tuple(sorted(lab_spec._EVENT_KINDS)) == tuple(
+        sorted(faults.EVENT_KINDS))
+
+
+def test_match_events_is_traced_and_exact():
+    events = (faults.NanGrad(step=3, worker=2),)
+
+    def f(step, worker):
+        return faults.match_events(events, step, worker)
+
+    hit = jax.jit(f)(jnp.int32(3), jnp.int32(2))
+    miss_step = jax.jit(f)(jnp.int32(4), jnp.int32(2))
+    miss_worker = jax.jit(f)(jnp.int32(3), jnp.int32(1))
+    assert bool(hit) and not bool(miss_step) and not bool(miss_worker)
+
+
+# ---------------------------------------------------------------------------
+# payload validation + corruption
+# ---------------------------------------------------------------------------
+
+
+def _payload(quantize=True):
+    comp = FFTCompressor(FFTCompressorConfig(theta=0.7, quantize=quantize))
+    g = jnp.sin(jnp.arange(4096) / 30.0) * 0.1
+    return comp.compress(g)
+
+
+def test_validation_levels_on_clean_payload():
+    p = _payload()
+    assert bool(faults.validate_payload(p, "off"))
+    assert bool(faults.validate_payload(p, "cheap"))
+    ref = faults.payload_checksums(p)
+    assert bool(faults.validate_payload(p, "full", reference_checksums=ref))
+    with pytest.raises(ValueError):
+        faults.validate_payload(p, "paranoid")
+
+
+def test_cheap_validation_catches_index_and_quant_corruption():
+    p = _payload()
+    hit = jnp.bool_(True)
+    bad_idx = faults.corrupt_payload(p, {"idx": hit})
+    assert not bool(faults.validate_payload(bad_idx, "cheap"))
+    bad_quant = faults.corrupt_payload(p, {"quant": hit})
+    assert not bool(faults.validate_payload(bad_quant, "cheap"))
+
+
+def test_value_corruption_is_silent_until_full_checksums():
+    """Mantissa bit-flips decode to finite floats: cheap validation cannot
+    see them, the full checksums must."""
+    p = _payload(quantize=False)
+    ref = faults.payload_checksums(p)
+    bad = faults.corrupt_payload(p, {"values": jnp.bool_(True)})
+    assert not np.array_equal(np.asarray(bad.re), np.asarray(p.re))
+    assert bool(faults.validate_payload(bad, "cheap"))  # silent at cheap
+    assert not bool(
+        faults.validate_payload(bad, "full", reference_checksums=ref))
+
+
+def test_corruption_miss_is_identity():
+    p = _payload()
+    out = faults.corrupt_payload(p, {"idx": jnp.bool_(False),
+                                     "values": jnp.bool_(False)})
+    np.testing.assert_array_equal(np.asarray(out.idx), np.asarray(p.idx))
+    np.testing.assert_array_equal(np.asarray(out.re), np.asarray(p.re))
+
+
+def test_exchange_monitor_injects_and_accumulates():
+    p = _payload()
+    corrupt = (faults.PayloadCorrupt(step=3, worker=1, plane="idx"),)
+    # event hits this (step, worker): verdict goes false
+    mon = faults.ExchangeMonitor("cheap", step=jnp.int32(3),
+                                 worker=jnp.int32(1), corrupt=corrupt)
+    mon.on_payload(p)
+    assert not bool(mon.ok())
+    # different worker: payload untouched, verdict stays true
+    mon2 = faults.ExchangeMonitor("cheap", step=jnp.int32(3),
+                                  worker=jnp.int32(0), corrupt=corrupt)
+    out = mon2.on_payload(p)
+    assert bool(mon2.ok())
+    np.testing.assert_array_equal(np.asarray(out.idx), np.asarray(p.idx))
+
+
+def test_tree_finite():
+    assert bool(faults.tree_finite({"a": jnp.ones(3), "b": jnp.arange(3)}))
+    assert not bool(faults.tree_finite({"a": jnp.array([1.0, jnp.nan])}))
+    assert not bool(faults.tree_finite({"a": jnp.array([jnp.inf])}))
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_degrade_config_walks_every_rung():
+    cfg = ReducerConfig(kind="fft", axis="data", theta=0.7, backend="pallas",
+                        transport="sequenced", bucket_bytes=4096 * 4,
+                        schedule="streamed", error_feedback=True,
+                        validate="cheap")
+    labels = []
+    while True:
+        rung = degrade_config(cfg)
+        if rung is None:
+            break
+        cfg, label = rung
+        labels.append(label)
+    assert labels == ["backend:pallas->reference",
+                      "schedule:streamed->stacked",
+                      "kind:fft->dense"]
+    # terminal rung: dense, no EF, validation off — and nowhere further
+    assert cfg.kind == "dense" and not cfg.error_feedback
+    assert cfg.validate == "off"
+    assert degrade_config(cfg) is None
+
+
+def test_degrade_config_retires_exotic_transports():
+    cfg = ReducerConfig(kind="fft", axis=("node", "local"),
+                        transport="hierarchical", theta=0.7)
+    cfg2, label = degrade_config(cfg)
+    assert label == "transport:hierarchical->psum"
+    assert cfg2.transport == "psum"
+
+
+def test_degraded_dense_config_is_not_resilient():
+    """The dense rung keeps the FaultPlan (for the record) but must opt out
+    of the resilient reduce contract — dense exchanges ship no payloads."""
+    plan = faults.FaultPlan(events=(
+        faults.PayloadCorrupt(step=1, worker=0),))
+    cfg = ReducerConfig(kind="fft", axis="data", theta=0.7, validate="cheap",
+                        faults=plan)
+    assert cfg.resilient
+    dense, _ = degrade_config(cfg)
+    assert dense.faults == plan and not dense.resilient
+
+
+# ---------------------------------------------------------------------------
+# checkpoint verification + async writer
+# ---------------------------------------------------------------------------
+
+
+def _state(v=1.0):
+    return {"params": {"w": jnp.full((32,), v)}, "step": jnp.int32(7)}
+
+
+def test_checkpoint_digest_mismatch_falls_back(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 5, _state(1.0))
+    ckpt.save(d, 10, _state(2.0))
+    # corrupt the newest checkpoint's arrays behind the manifest's back
+    path = os.path.join(d, "step_00000010", "arrays.npz")
+    with np.load(path) as data:
+        arrays = {k: data[k].copy() for k in data.files}
+    k = next(k for k in arrays if arrays[k].dtype.kind == "f")
+    arrays[k].flat[0] += 1.0  # bit rot
+    np.savez(path, **arrays)
+    with pytest.warns(UserWarning, match="failed verification"):
+        state, step = ckpt.restore(d, _state())
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.full((32,), 1.0))
+    # explicitly requesting the corrupt step must raise, not fall back
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(d, _state(), step=10)
+
+
+def test_writer_death_mid_write_leaves_prior_step(tmp_path):
+    """A .tmp directory from a dead writer is invisible: latest_step and
+    restore resume from the last COMPLETE checkpoint."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 5, _state(1.0))
+    # simulate a writer killed between makedirs and rename
+    torn = os.path.join(d, "step_00000010.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "arrays.npz"), "wb") as f:
+        f.write(b"partial garbage")
+    assert ckpt.latest_step(d) == 5
+    state, step = ckpt.restore(d, _state())
+    assert step == 5
+
+
+def test_latest_step_ignores_stray_names(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, _state())
+    os.makedirs(os.path.join(d, "step_"), exist_ok=True)
+    os.makedirs(os.path.join(d, "lost+found"), exist_ok=True)
+    with open(os.path.join(d, "step_00000099"), "w") as f:
+        f.write("a FILE named like a checkpoint")
+    assert ckpt.latest_step(d) == 3
+
+
+def test_async_save_is_joined_before_reads(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, _state(1.0), block=False)
+    # restore joins the in-flight writer — no race, fresh data
+    state, step = ckpt.restore(d, _state())
+    assert step == 1
+    ckpt.save(d, 2, _state(2.0), block=False)
+    ckpt.wait()
+    assert ckpt.latest_step(d) == 2
+
+
+def test_async_save_serializes_with_next_save(tmp_path):
+    """Back-to-back async saves must not interleave their write/rename."""
+    d = str(tmp_path / "ck")
+    for i in range(1, 6):
+        ckpt.save(d, i, _state(float(i)), block=False)
+    ckpt.wait()
+    state, step = ckpt.restore(d, _state())
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.full((32,), 5.0))
+
+
+def test_restore_raises_when_nothing_verifiable(tmp_path):
+    d = str(tmp_path / "ck")
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(d, _state())
+    ckpt.save(d, 5, _state())
+    shutil.rmtree(os.path.join(d, "step_00000005"))
+    os.makedirs(os.path.join(d, "step_00000005"))  # complete-looking, empty
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(d, _state())
+
+
+# ---------------------------------------------------------------------------
+# train-loop recovery semantics (host-side, single device)
+# ---------------------------------------------------------------------------
+
+
+def test_loop_without_checkpoint_surfaces_original_error():
+    """When every retry fails before any checkpoint exists, the ORIGINAL
+    step error must surface — not a FileNotFoundError from a hopeless
+    restore."""
+    from repro.configs.base import ArchConfig
+    from repro.data import SyntheticConfig, SyntheticStream
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.transformer import LM
+    from repro.optim import OptConfig
+    from repro.train import TrainLoopConfig, init_state, train_loop
+    from repro.train.step import StepConfig
+    from repro import jaxcompat as compat
+
+    tiny = ArchConfig(name="tiny", family="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab_size=64, remat="none")
+    model = LM(tiny)
+    opt = OptConfig(kind="sgd")
+    stream = SyntheticStream(SyntheticConfig(
+        vocab_size=64, seq_len=16, global_batch=4))
+    mesh = make_local_mesh()
+    # three planned crashes at step 0, one per attempt: retries exhaust
+    # before any checkpoint exists and pjit mode has no ladder to walk
+    plan = faults.FaultPlan(events=tuple(
+        faults.StepCrash(step=0) for _ in range(3)))
+    with compat.set_mesh(mesh):
+        with pytest.raises(faults.InjectedCrash):
+            train_loop(model, opt, StepConfig(mode="pjit"), mesh,
+                       init_state(jax.random.PRNGKey(0), model, opt), stream,
+                       TrainLoopConfig(total_steps=4, max_retries=1,
+                                       faults=plan))
+
+
+# ---------------------------------------------------------------------------
+# multi-worker guard + crash auto-resume (fake devices, subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_guard_skips_and_crash_resumes_on_fake_devices():
+    """4 fake devices, compressed exchange with error feedback:
+
+    * a NaN gradient on ONE worker skips exactly that step everywhere
+      (params, moments, EF residual quarantined), bitwise-clean before it;
+    * a fatal injected crash + harness restart resumes from the last
+      checkpoint and lands bitwise-identical to the uninterrupted run.
+    """
+    out = run_with_devices("""
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ArchConfig
+from repro.comms.faults import FatalInjectedCrash, FaultPlan, NanGrad, StepCrash
+from repro.comms.reducers import ReducerConfig
+from repro.data import SyntheticConfig, SyntheticStream
+from repro.models.transformer import LM
+from repro.optim import OptConfig
+from repro.train import TrainLoopConfig, init_state, train_loop
+from repro.train.step import StepConfig
+from repro.jaxcompat import make_auto_mesh, set_mesh
+
+TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=64, remat="none")
+mesh = make_auto_mesh((4,), ("data",))
+model = LM(TINY)
+opt = OptConfig(kind="adamw", lr=3e-3)
+stream = SyntheticStream(SyntheticConfig(vocab_size=64, seq_len=32, global_batch=8))
+
+def run(plan, steps=10, ckpt_dir=None, ckpt_every=50):
+    rc = ReducerConfig(kind="fft", axis="data", theta=0.5,
+                       error_feedback=True, faults=plan)
+    recs = []
+    loop_cfg = TrainLoopConfig(total_steps=steps, log_every=100,
+                               ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                               faults=plan,
+                               metrics_hook=lambda s, m, st: recs.append(dict(m)))
+    state = init_state(jax.random.PRNGKey(0), model, opt, error_feedback=True)
+    with set_mesh(mesh):
+        while True:
+            try:
+                out = train_loop(model, opt,
+                                 StepConfig(mode="compressed_dp", reducer=rc),
+                                 mesh, state, stream, loop_cfg)
+                break
+            except FatalInjectedCrash:
+                state = init_state(jax.random.PRNGKey(0), model, opt,
+                                   error_feedback=True)
+    last = {r["step"]: r for r in recs}
+    return out, [last[s] for s in sorted(last)]
+
+clean, crecs = run(None)
+
+# --- non-finite guard: nan on worker 2 at step 3 ---
+nan_plan = FaultPlan(events=(NanGrad(step=3, worker=2),))
+faulty, frecs = run(nan_plan)
+skips = [r["step"] for r in frecs if r["skipped"] > 0]
+assert skips == [3], skips
+assert faulty["health"]["skip_steps"] == [3], faulty["health"]
+for s in range(3):
+    assert crecs[s]["loss"] == frecs[s]["loss"], (s, crecs[s], frecs[s])
+cl, fl = crecs[-1]["loss"], frecs[-1]["loss"]
+assert abs(fl - cl) <= 0.05 * abs(cl) + 0.05, (cl, fl)
+
+# --- fatal crash at step 6, checkpoint every 2, auto-resume: bitwise ---
+crash_plan = FaultPlan(events=(StepCrash(step=6, fatal=True),))
+with tempfile.TemporaryDirectory() as d:
+    crashed, krecs = run(crash_plan, ckpt_dir=d, ckpt_every=2)
+assert crashed["health"]["skipped_steps"] == 0
+assert len(krecs) == len(crecs)
+for a, b in zip(crecs, krecs):
+    assert a["loss"] == b["loss"], (a, b)
+print("RESILIENCE_OK", skips, cl, fl)
+""", devices=4, timeout=560)
+    assert "RESILIENCE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# resilient reducer contract (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_reducer_signature_unchanged_when_not_resilient():
+    """validate='off' with no exchange faults keeps the historical reducer
+    signatures — resilience must cost nothing when off."""
+    cfg = ReducerConfig(kind="fft", axis="data", theta=0.7)
+    assert not cfg.resilient
+    plan = faults.FaultPlan(events=(faults.StepCrash(step=1),))
+    host_only = dataclasses.replace(cfg, faults=plan)
+    assert not host_only.resilient  # crash events are host-side
+    assert dataclasses.replace(cfg, validate="cheap").resilient
+    nan_plan = faults.FaultPlan(events=(faults.NanGrad(step=1, worker=0),))
+    assert not dataclasses.replace(cfg, faults=nan_plan).resilient
+    corrupt = faults.FaultPlan(events=(
+        faults.PayloadCorrupt(step=1, worker=0),))
+    assert dataclasses.replace(cfg, faults=corrupt).resilient
+
+
+def test_reducer_config_rejects_bad_resilience_args():
+    with pytest.raises(ValueError):
+        ReducerConfig(kind="fft", axis="data", validate="sometimes")
+    with pytest.raises(TypeError):
+        ReducerConfig(kind="fft", axis="data",
+                      faults=[{"kind": "nan_grad", "step": 1, "worker": 0}])

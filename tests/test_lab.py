@@ -13,8 +13,9 @@ from helpers import REPO
 
 from repro.comms import cost_model
 from repro.lab import report
-from repro.lab.evaluate import Tolerances, evaluate_results
-from repro.lab.spec import ExperimentSpec, full_matrix, smoke_matrix
+from repro.lab.evaluate import Tolerances, chaos_claims, evaluate_results
+from repro.lab.spec import (ExperimentSpec, chaos_matrix, full_matrix,
+                            smoke_matrix)
 
 # ---------------------------------------------------------------------------
 # specs
@@ -56,6 +57,34 @@ def test_spec_rejects_bad_configs():
                        schedule={"kind": "constant", "theta": 0.5})
     with pytest.raises(ValueError):
         ExperimentSpec(name="x", workers=8, global_batch=12)
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", validate="sometimes")
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", faults=[{"kind": "meteor", "step": 1}])
+    with pytest.raises(ValueError):
+        ExperimentSpec(name="x", ckpt_every=-1)
+
+
+def test_chaos_matrix_covers_the_chaos_claims():
+    """Each model gets its clean comparator plus one row per resilience
+    claim (DESIGN.md §19); the full matrix carries the same rows."""
+    names = {s.name for s in chaos_matrix()}
+    for model in ("lm", "convnet"):
+        assert f"{model}_fft_theta0.7" in names  # the comparator rides along
+        assert f"{model}_chaos_nan" in names
+        assert f"{model}_chaos_crash" in names
+        assert f"{model}_chaos_corrupt" in names
+    assert len(names) == 8
+    assert names <= {s.name for s in full_matrix()}
+    by_name = {s.name: s for s in chaos_matrix()}
+    # the crash row checkpoints (else resume is impossible) and its crash
+    # is fatal (else the in-loop rollback absorbs it and nothing resumes)
+    crash = by_name["lm_chaos_crash"]
+    assert crash.ckpt_every > 0
+    assert all(ev["fatal"] for ev in crash.faults)
+    # the corrupt row validates a bucketed exchange — payloads must exist
+    corrupt = by_name["lm_chaos_corrupt"]
+    assert corrupt.validate != "off" and corrupt.bucket_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +283,121 @@ def test_evaluator_flags_missing_runs():
     failed = {c.name for c in claims if not c.passed}
     assert "lm:theta0.7_matches_dense" in failed
     assert "lm:mixed_recovers" in failed
+
+
+# ---------------------------------------------------------------------------
+# chaos claims on fabricated runs (DESIGN.md §19)
+# ---------------------------------------------------------------------------
+
+
+T07 = [4.0, 3.1, 2.6, 2.25, 2.05, 2.02]
+SCHED = {"kind": "constant", "theta": 0.7}
+
+
+def _chaos_runs():
+    """A healthy chaos lane: skip exactly the planned nan step, one
+    auto-resume with a bitwise curve, corruption caught then degraded."""
+    runs = _matrix_runs()
+
+    nan = _fake_run("lm_chaos_nan", "fft",
+                    [4.0, 3.1, 2.7, 2.31, 2.08, 2.04], schedule=SCHED)
+    nan["spec"]["faults"] = [{"kind": "nan_grad", "step": 2, "worker": 1}]
+    nan["health"] = {"skipped_steps": 1, "skip_steps": [2], "resumes": 0,
+                     "transitions": [], "delays": 0}
+
+    crash = _fake_run("lm_chaos_crash", "fft", list(T07), schedule=SCHED)
+    crash["spec"]["faults"] = [{"kind": "step_crash", "step": 4,
+                                "fatal": True}]
+    crash["spec"]["ckpt_every"] = 2
+    crash["health"] = {"skipped_steps": 0, "skip_steps": [], "resumes": 1,
+                       "transitions": [], "delays": 0}
+
+    corrupt = _fake_run("lm_chaos_corrupt", "fft",
+                        [4.0, 3.1, 2.6, 2.6, 2.2, 2.1], schedule=SCHED,
+                        transport="sequenced", bucket_bytes=4096 * 4)
+    corrupt["spec"]["faults"] = [
+        {"kind": "payload_corrupt", "step": 3, "worker": 1, "plane": "idx"}]
+    corrupt["spec"]["validate"] = "cheap"
+    corrupt["spec"]["steps"] = 6  # fabricated curves are 6 steps long
+    corrupt["health"] = {"skipped_steps": 1, "skip_steps": [3], "resumes": 0,
+                         "transitions": [{"step": 4, "rung": "kind:fft->dense"}],
+                         "delays": 0}
+
+    runs.update({r["spec"]["name"]: r for r in (nan, crash, corrupt)})
+    return runs
+
+
+def test_chaos_claims_pass_on_a_healthy_lane():
+    claims = chaos_claims(_chaos_runs(), Tolerances(final_tail=1))
+    names = {c.name: c for c in claims}
+    assert set(names) == {"lm:nan_step_skipped_matches_clean",
+                          "lm:crash_resume_bitwise",
+                          "lm:corrupt_payload_detected_and_degraded"}
+    assert all(c.passed for c in claims), [c.to_dict() for c in claims]
+    # and evaluate_results folds them in next to the convergence claims
+    all_claims, ok = evaluate_results(_chaos_runs(), Tolerances(final_tail=1))
+    assert ok and set(names) <= {c.name for c in all_claims}
+
+
+def test_chaos_claims_absent_without_chaos_rows():
+    """Pre-chaos artifacts and plain fixtures get no chaos claims."""
+    assert chaos_claims(_matrix_runs()) == []
+
+
+def test_chaos_claims_catch_wrong_or_extra_skips():
+    runs = _chaos_runs()
+    runs["lm_chaos_nan"]["health"]["skip_steps"] = [2, 4]  # spurious skip
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:nan_step_skipped_matches_clean"].passed
+    runs = _chaos_runs()
+    runs["lm_chaos_nan"]["health"]["skip_steps"] = []  # nan slipped through
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:nan_step_skipped_matches_clean"].passed
+
+
+def test_chaos_claims_catch_prefix_divergence():
+    """Before the first fault the guarded run must be bitwise clean — the
+    guard may not perturb healthy steps even inside float noise."""
+    runs = _chaos_runs()
+    recs = runs["lm_chaos_nan"]["records"]
+    recs[1]["loss"] = recs[1]["loss"] + 1e-7
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:nan_step_skipped_matches_clean"].passed
+
+
+def test_chaos_claims_catch_missing_resume_or_divergent_resume():
+    runs = _chaos_runs()
+    runs["lm_chaos_crash"]["health"]["resumes"] = 0  # crash never fired
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:crash_resume_bitwise"].passed
+    runs = _chaos_runs()
+    runs["lm_chaos_crash"]["records"][5]["loss"] += 1e-7  # not bitwise
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:crash_resume_bitwise"].passed
+
+
+def test_chaos_claims_catch_undetected_or_undegraded_corruption():
+    runs = _chaos_runs()
+    runs["lm_chaos_corrupt"]["health"]["skip_steps"] = []  # nothing caught
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:corrupt_payload_detected_and_degraded"].passed
+    runs = _chaos_runs()
+    runs["lm_chaos_corrupt"]["health"]["transitions"] = []  # ladder never walked
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:corrupt_payload_detected_and_degraded"].passed
+    runs = _chaos_runs()
+    runs["lm_chaos_corrupt"]["records"] = (
+        runs["lm_chaos_corrupt"]["records"][:4])  # run did not complete
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:corrupt_payload_detected_and_degraded"].passed
+
+
+def test_chaos_claims_require_the_clean_comparator():
+    runs = _chaos_runs()
+    del runs["lm_fft_theta0.7"]
+    claims = {c.name: c for c in chaos_claims(runs, Tolerances(final_tail=1))}
+    assert not claims["lm:nan_step_skipped_matches_clean"].passed
+    assert not claims["lm:crash_resume_bitwise"].passed
 
 
 # ---------------------------------------------------------------------------

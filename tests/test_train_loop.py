@@ -7,6 +7,7 @@ import jax
 import numpy as np
 
 from repro import jaxcompat as compat
+from repro.comms.faults import FaultPlan, StepCrash
 from repro.configs.base import ArchConfig
 from repro.data import SyntheticConfig, SyntheticStream
 from repro.launch.mesh import make_local_mesh
@@ -92,27 +93,24 @@ def test_resume_is_bit_exact(tmp_path):
 
 def test_failure_injection_rolls_back(tmp_path):
     """A step that blows up mid-run recovers from the last checkpoint and
-    completes (fleet-scale requirement: node failure != job failure)."""
+    completes (fleet-scale requirement: node failure != job failure).  The
+    crash is a typed FaultPlan event (DESIGN.md §19) — it fires exactly
+    once, the loop rolls back to the newest checkpoint, and the retried
+    run finishes."""
     mesh = make_local_mesh()
     model = LM(TINY)
     opt = OptConfig(kind="adamw", lr=1e-3)
     stream = _stream()
-    fails = {"armed": True}
+    plan = FaultPlan(events=(StepCrash(step=12),))
 
-    def injector(step):
-        if step == 12 and fails["armed"]:
-            fails["armed"] = False
-            raise RuntimeError("injected node failure")
-
+    loop_cfg = TrainLoopConfig(total_steps=16, ckpt_dir=str(tmp_path / "fi"),
+                               ckpt_every=5, log_every=100, faults=plan)
     with compat.set_mesh(mesh):
         out = train_loop(
             model, opt, StepConfig(mode="pjit"), mesh,
-            init_state(jax.random.PRNGKey(3), model, opt), stream,
-            TrainLoopConfig(total_steps=16, ckpt_dir=str(tmp_path / "fi"),
-                            ckpt_every=5, log_every=100,
-                            failure_injector=injector))
+            init_state(jax.random.PRNGKey(3), model, opt), stream, loop_cfg)
     assert int(out["state"]["step"]) == 16
-    assert not fails["armed"]
+    assert loop_cfg.fired_faults == {0}  # the crash fired exactly once
 
 
 def test_checkpoint_gc_keeps_last_k(tmp_path):

@@ -29,6 +29,12 @@ efficiency numbers) hides a regression from every later PR.  Checks:
   throughputs and backprop rate, and per-profile calibrated-vs-static auto
   verdicts — the acceptance evidence that ``schedule=auto`` decisions are
   driven by measurements, not the static napkin constants.
+* ``resilience`` — the exchange-guard overhead record (DESIGN.md §19):
+  steady-state stacked compress with and without ``cheap`` payload
+  validation, the measured overhead ratio, and the deterministic structural
+  verdict (validation adds no sort/FFT/collective primitive and
+  ``validate('off')`` stays free) — the acceptance evidence that resilience
+  is effectively free on the hot path.
 * ``topology`` — the two-level (nodes × local) sweep (DESIGN.md §18):
   per-axis wire bits and hierarchical-vs-flat exchange times per shape;
   the hierarchical per-worker inter-node wire must sit STRICTLY below the
@@ -327,11 +333,50 @@ def check_topology(data: dict) -> List[str]:
     return errors
 
 
+RESILIENCE_KEYS = (
+    "n_elems",
+    "n_buckets",
+    "validate_level",
+    "unguarded_compress_steady_us",
+    "guarded_compress_steady_us",
+    "guard_overhead_ratio",
+    "guard_slack",
+    "deterministic_ok",
+)
+
+
+def check_resilience(data: dict) -> List[str]:
+    errors = []
+    res = data.get("resilience")
+    if not res:
+        return ["missing 'resilience' field (exchange-guard overhead, "
+                "DESIGN.md §19)"]
+    for key in RESILIENCE_KEYS:
+        if key not in res:
+            errors.append(f"resilience section lacks {key!r}")
+    if res.get("validate_level") not in ("cheap", "full"):
+        errors.append(
+            f"resilience validate_level must measure a non-off level "
+            f"(cheap|full), got {res.get('validate_level')!r}")
+    ratio = res.get("guard_overhead_ratio")
+    if not isinstance(ratio, (int, float)) or not ratio > 0:
+        errors.append(
+            f"resilience guard_overhead_ratio must be a positive number, "
+            f"got {ratio!r}")
+    if res.get("deterministic_ok") is not True:
+        errors.append(
+            "resilience record lacks deterministic_ok=true — the structural "
+            "guard invariants (no expensive primitives, validate('off') "
+            "free) did not hold when the artifact was written")
+    return errors
+
+
 def check(data: dict) -> List[str]:
     """All violations in one pass (empty list == schema ok)."""
     return (check_backends(data) + check_records(data)
             + check_schedules(data) + check_selectors(data)
-            + check_calibration(data) + check_topology(data))
+            + check_calibration(data) + check_topology(data)
+            + check_resilience(data))
 
 
 def main(argv=None) -> int:
@@ -354,9 +399,11 @@ def main(argv=None) -> int:
     n_sel = len(data.get("selectors", []))
     n_cal = len(data.get("calibration", {}).get("decisions", []))
     n_topo = len(data.get("topology", []))
+    guard_x = data.get("resilience", {}).get("guard_overhead_ratio")
     print(f"schema ok: {n_back} backend records, {n_rec} sweep records, "
           f"{n_sched} schedule-policy records, {n_sel} selector records, "
-          f"{n_cal} calibration decisions, {n_topo} topology records")
+          f"{n_cal} calibration decisions, {n_topo} topology records, "
+          f"guard overhead {guard_x}x")
     return 0
 
 
