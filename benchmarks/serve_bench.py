@@ -1,0 +1,205 @@
+"""Serving publish-path benchmark: BENCH_serve.json (DESIGN.md §20).
+
+Trains the tiny lab LM once, records the committed-weight trajectory, then
+replays the publisher (serve/publish.py) over it at every (publish_every,
+theta) cell of the matrix — each cell gets its own ring in a temp dir and a
+small replica fleet:
+
+* ``sub_a`` — syncs after EVERY delta (the one-at-a-time replay reference);
+* ``sub_b`` — joins at snapshot v0 and first syncs K deltas behind, inside
+  one snapshot interval: the summed-spectrum catch-up must run exactly ONE
+  decompress and land bitwise on ``sub_a``'s weights at that version;
+* ``sub_b`` again at the end — at cadence 1 the ring has wrapped past it,
+  exercising the snapshot-fallback (gap) path.
+
+Per cell the artifact records measured wire bytes (delta vs dense-at-the-
+same-cadence — the acceptance comparison), the modeled account
+(``cost_model.publish_wire_account``), replica staleness vs the trainer
+(steps + relative weight error, bounded by ONE delta's codec error thanks
+to the publisher's error-feedback mirror), and the catch-up/gap evidence.
+Schema-guarded by ``tools/check_bench.py`` (``kind == "serve"``).
+
+Run from the repo root:
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--out BENCH_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+import jax
+
+from repro import jaxcompat as compat
+from repro.comms import bucketing, cost_model
+from repro.comms.reducers import flatten_tree
+from repro.configs.base import ArchConfig
+from repro.data import SyntheticConfig, SyntheticStream
+from repro.launch.mesh import make_local_mesh
+from repro.models.transformer import LM
+from repro.optim import OptConfig
+from repro.serve import PublishConfig, ReplicaSubscriber, WeightDeltaPublisher
+from repro.train import TrainLoopConfig, init_state, train_loop
+from repro.train.step import StepConfig
+
+TINY = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=64, remat="none")
+STEPS = 24
+CADENCES = (1, 4, 8)
+THETAS = (0.0, 0.7, 0.9)
+# small chunk + bucket so the tiny LM still exercises a MULTI-bucket stacked
+# layout with a ragged tail (the codec's hard case)
+CHUNK = 256
+BUCKET_BYTES = 1 << 18
+SNAPSHOT_EVERY = 8
+CAPACITY = 12  # < the cadence-1 delta count, so that cell wraps the ring
+
+
+def _train_trajectory():
+    """One tiny-LM run; returns (params tree per committed step, init tree)."""
+    model = LM(TINY)
+    opt = OptConfig(kind="adamw", lr=3e-3)
+    mesh = make_local_mesh()
+    stream = SyntheticStream(SyntheticConfig(vocab_size=64, seq_len=32,
+                                             global_batch=8))
+    state = init_state(jax.random.PRNGKey(0), model, opt)
+    init_params = jax.tree_util.tree_map(np.asarray, state["params"])
+    traj = []
+
+    def record(step, metrics, state):
+        traj.append(jax.tree_util.tree_map(np.asarray, state["params"]))
+
+    with compat.set_mesh(mesh):
+        train_loop(model, opt, StepConfig(mode="pjit"), mesh, state, stream,
+                   TrainLoopConfig(total_steps=STEPS, log_every=STEPS,
+                                   metrics_hook=record))
+    assert len(traj) == STEPS
+    return traj, init_params
+
+
+def _rel_err(a: np.ndarray, b: np.ndarray) -> float:
+    return float(np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30))
+
+
+def _run_cell(traj, init_params, publish_every: int, theta: float) -> dict:
+    cfg = PublishConfig(publish_every=publish_every, capacity=CAPACITY,
+                        snapshot_every=SNAPSHOT_EVERY, theta=theta,
+                        chunk=CHUNK, bucket_bytes=BUCKET_BYTES,
+                        quantize=True)
+    with tempfile.TemporaryDirectory() as ring_dir:
+        pub = WeightDeltaPublisher(ring_dir, init_params, cfg)
+        n_publishes = len(range(0, STEPS, publish_every))
+        # first catch-up stays inside one snapshot interval: versions
+        # 1..v_catch fold with NO rebase boundary, so the summed-spectrum
+        # path must cost exactly one decompress
+        v_catch = min(SNAPSHOT_EVERY - 1, n_publishes)
+        sub_a = ReplicaSubscriber(ring_dir)  # per-delta replay reference
+        sub_b = ReplicaSubscriber(ring_dir)  # the laggard
+        a_weights = {}
+        catchup = None
+        for step, params in enumerate(traj):
+            if pub.on_step(step, params) is None:
+                continue
+            sub_a.sync()
+            a_weights[pub.version] = np.asarray(sub_a.weights())
+            if pub.version == v_catch:
+                stats = sub_b.sync()
+                catchup = {
+                    "lag": stats.applied,
+                    "decompress_count": stats.decompress_count,
+                    "bitwise_equal": bool(np.array_equal(
+                        sub_b.weights(), a_weights[v_catch])),
+                    "crosses_rebase": stats.rebases > 0,
+                }
+        pub.close()
+        final = np.asarray(pub.state.materialize())
+        # the laggard's final sync: at cadence 1 the ring wrapped past v7 and
+        # this walks the snapshot-fallback path
+        gap_stats = sub_b.sync()
+        gap = {
+            "detected": gap_stats.gap_detected,
+            "snapshot_loads": gap_stats.snapshot_loads,
+            "bitwise_equal_after": bool(np.array_equal(
+                sub_b.weights(), a_weights[pub.version])),
+        }
+        flat_final, _, _ = flatten_tree(traj[-1])
+        flat_final = np.asarray(flat_final)
+        last_pub_step = max(s for s in range(0, STEPS, publish_every))
+        model = cost_model.publish_wire_account(
+            pub.layout.total, pub.comp.wire_bits, pub.layout.sizes(),
+            steps=STEPS, publish_every=publish_every,
+            snapshot_every=SNAPSHOT_EVERY, chunk=CHUNK)
+        return {
+            "publish_every": publish_every,
+            "theta": theta,
+            "n_publishes": pub.version,
+            "n_elems": pub.layout.total,
+            "n_buckets": pub.layout.n_buckets,
+            "delta_bytes_total": pub.delta_bytes_total,
+            "snapshot_bytes_total": pub.snapshot_bytes_total,
+            "dense_bytes_at_cadence": 4 * pub.layout.total * pub.version,
+            "wire_savings": round(
+                4 * pub.layout.total * pub.version
+                / max(pub.delta_bytes_total, 1), 3),
+            "staleness_steps": (STEPS - 1) - last_pub_step,
+            "staleness_rel_err": _rel_err(a_weights[pub.version], flat_final),
+            "mirror_bitwise_equal": bool(np.array_equal(
+                np.asarray(sub_a.weights()), final)),
+            "model": model.to_dict(),
+            "catchup": catchup,
+            "gap": gap,
+        }
+
+
+def run() -> dict:
+    traj, init_params = _train_trajectory()
+    n_elems = int(flatten_tree(init_params)[0].shape[0])
+    records = []
+    for publish_every in CADENCES:
+        for theta in THETAS:
+            r = _run_cell(traj, init_params, publish_every, theta)
+            records.append(r)
+            print(f"publish_every={publish_every} theta={theta}: "
+                  f"{r['delta_bytes_total']} delta B vs "
+                  f"{r['dense_bytes_at_cadence']} dense B "
+                  f"({r['wire_savings']}x), stale {r['staleness_steps']} "
+                  f"steps rel_err {r['staleness_rel_err']:.2e}, catchup "
+                  f"lag {r['catchup']['lag']} -> "
+                  f"{r['catchup']['decompress_count']} decompress")
+    return {
+        "kind": "serve",
+        "meta": {
+            "arch": TINY.name,
+            "steps": STEPS,
+            "n_elems": n_elems,
+            "chunk": CHUNK,
+            "bucket_bytes": BUCKET_BYTES,
+            "n_buckets": bucketing.build_layout(
+                n_elems, BUCKET_BYTES, CHUNK).n_buckets,
+            "snapshot_every": SNAPSHOT_EVERY,
+            "capacity": CAPACITY,
+        },
+        "records": records,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+    data = run()
+    with open(args.out, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(data['records'])} records)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,7 +42,8 @@ __all__ = ["Throughputs", "PAPER_V100", "TPU_V5E", "compression_cost_s",
            "StreamedExchangePlan", "streamed_exchange_time_s",
            "TwoLevelWire", "two_level_wire_bits",
            "TwoLevelExchangePlan", "two_level_exchange_time_s",
-           "dense_allreduce_bits", "RunWireAccount", "run_wire_account"]
+           "dense_allreduce_bits", "RunWireAccount", "run_wire_account",
+           "PublishWireAccount", "publish_wire_account"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -761,5 +762,88 @@ def run_wire_account(
         steps=steps,
         dense_bits=dense_total,
         compressed_bits=compressed_total,
+        savings=savings,
+    )
+
+
+# ---------------------------------------------------------------------------
+# publish-path pricing (DESIGN.md §20): the asymmetric train->serve traffic.
+# A training job publishing weight deltas to a replica fleet moves ONE
+# compressed StackedPayload per publish plus a dense snapshot per rebase
+# point; the baseline it must beat is shipping a dense snapshot at the same
+# cadence.  Unlike the exchange paths there is no collective here — the
+# bytes land on the ring (disk or fabric) once, whatever the fleet size —
+# so the account is pure payload bits, no α–β term.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishWireAccount:
+    """Modeled publish traffic of one training run (serve/publish.py)."""
+
+    steps: int
+    publish_every: int
+    n_publishes: int
+    snapshot_every: int
+    n_snapshots: int  # rebase snapshots (the version-0 seed included)
+    delta_bits: float  # compressed delta payloads, total
+    snapshot_bits: float  # dense rebase snapshots, total
+    total_bits: float  # delta_bits + snapshot_bits
+    dense_bits: float  # baseline: one dense snapshot per publish
+    savings: float  # dense_bits / delta_bits (inf when delta_bits is 0)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def publish_wire_account(
+    n_elems: int,
+    wire_bits_fn,
+    sizes,
+    *,
+    steps: int,
+    publish_every: int = 1,
+    snapshot_every: int = 16,
+    chunk: int = 4096,
+    dtype_bits: int = 32,
+) -> PublishWireAccount:
+    """Price the publish path at one (cadence, theta) point.
+
+    ``wire_bits_fn``/``sizes`` follow :func:`bucketed_payload_bits` (the
+    publisher ships one stacked payload over the delta's bucket layout per
+    publish).  ``steps`` are trainer steps; publishes land on every
+    ``publish_every``-th step (step 0 included — the loop's 0-based
+    convention), and every ``snapshot_every``-th publish also writes a
+    dense rebase snapshot, plus the version-0 snapshot at ring creation.
+
+    The acceptance comparison (tools/check_bench.py ``check_serve``) is
+    ``delta_bits`` vs ``dense_bits``: compressed deltas must be strictly
+    cheaper than shipping dense snapshots at the SAME cadence.
+    """
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if publish_every < 1:
+        raise ValueError(f"publish_every must be >= 1, got {publish_every}")
+    if snapshot_every < 1:
+        raise ValueError(f"snapshot_every must be >= 1, got {snapshot_every}")
+    n_publishes = -(-steps // publish_every)  # steps 0..steps-1, step 0 pubs
+    delta_per_publish = bucketed_payload_bits(
+        wire_bits_fn, sizes, "sequenced", stacked=True, chunk=chunk)
+    delta_bits = n_publishes * delta_per_publish
+    snapshot_each = float(dtype_bits) * n_elems
+    n_snapshots = 1 + n_publishes // snapshot_every
+    snapshot_bits = n_snapshots * snapshot_each
+    dense_bits = n_publishes * snapshot_each
+    savings = dense_bits / delta_bits if delta_bits > 0 else float("inf")
+    return PublishWireAccount(
+        steps=int(steps),
+        publish_every=int(publish_every),
+        n_publishes=int(n_publishes),
+        snapshot_every=int(snapshot_every),
+        n_snapshots=int(n_snapshots),
+        delta_bits=delta_bits,
+        snapshot_bits=snapshot_bits,
+        total_bits=delta_bits + snapshot_bits,
+        dense_bits=dense_bits,
         savings=savings,
     )

@@ -335,30 +335,27 @@ def make_reducer(config: ReducerConfig, *, batch_tokens: Optional[int] = None,
             topology=topology)
         return resolved
 
+    def _dispatch_spec(cfg: ReducerConfig, total: int) -> dict:
+        """layout= or plan= kwargs for ``Transport.run`` — plan when the
+        resolved schedule streams over a multi-bucket layout, one stacked
+        layout dispatch otherwise (DESIGN.md §20)."""
+        layout = cfg.layout_for(total)
+        if _schedule_for(cfg, total) == "streamed" and layout.n_buckets > 1:
+            return {"plan": scheduler.build_plan(layout, cfg.stream_groups)}
+        return {"layout": layout}
+
     def _exchange_flat(flat: jnp.ndarray, axis, monitor=None) -> jnp.ndarray:
         cfg = _concrete(flat.shape[0])
         transport = get_transport(cfg.transport)
-        layout = cfg.layout_for(flat.shape[0])
-        if (_schedule_for(cfg, flat.shape[0]) == "streamed"
-                and layout.n_buckets > 1):
-            plan = scheduler.build_plan(layout, cfg.stream_groups)
-            return scheduler.exchange_streamed(
-                transport, flat, plan, comp, axis, stacked=cfg.stacked,
-                monitor=monitor)
-        return transport.exchange_flat(flat, layout, comp, axis,
-                                       stacked=cfg.stacked, monitor=monitor)
+        return transport.run(flat, comp=comp, axis=axis, stacked=cfg.stacked,
+                             monitor=monitor,
+                             **_dispatch_spec(cfg, flat.shape[0]))
 
     def _local_roundtrip_flat(flat: jnp.ndarray) -> jnp.ndarray:
         cfg = _concrete(flat.shape[0])
         transport = get_transport(cfg.transport)
-        layout = cfg.layout_for(flat.shape[0])
-        if (_schedule_for(cfg, flat.shape[0]) == "streamed"
-                and layout.n_buckets > 1):
-            plan = scheduler.build_plan(layout, cfg.stream_groups)
-            return scheduler.local_roundtrip_streamed(
-                transport, flat, plan, comp, stacked=cfg.stacked)
-        return transport.local_roundtrip_flat(
-            flat, layout, comp, stacked=cfg.stacked)
+        return transport.run(flat, comp=comp, stacked=cfg.stacked,
+                             **_dispatch_spec(cfg, flat.shape[0]))
 
     def compressed_reduce(grads, step=None):
         monitor = _monitor(step)

@@ -41,12 +41,17 @@ a numerics choice.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
 from repro.comms import bucketing, cost_model
 from repro.comms.bucketing import BucketLayout
+# reassembly helper moved to transport.py with the run() redesign
+# (DESIGN.md §20); the alias keeps this module's historical import path
+# (executor.streamed_roundtrip_fn) working
+from repro.comms.transport import _concat_index_order  # noqa: F401
 
 __all__ = [
     "SCHEDULE_NAMES",
@@ -169,50 +174,34 @@ def build_plan(layout: BucketLayout, n_groups: Optional[int] = None) -> StreamPl
 # ---------------------------------------------------------------------------
 
 
-def _concat_index_order(parts):
-    """Readiness-ordered group results -> flat buffer in index order.
-
-    ``StreamPlan`` groups are strictly descending in the flat space
-    (validated in ``__post_init__``), so index order is exactly the reverse
-    of dispatch order."""
-    ordered = list(reversed(parts))
-    return ordered[0] if len(ordered) == 1 else jnp.concatenate(ordered)
+def _warn_streamed_deprecated(old: str) -> None:
+    warnings.warn(
+        f"scheduler.{old}() is deprecated; call Transport.run(flat, "
+        f"comp=..., plan=..., axis=...) instead (DESIGN.md §20)",
+        DeprecationWarning, stacklevel=3)
 
 
 def exchange_streamed(transport, flat: jnp.ndarray, plan: StreamPlan, comp,
                       axis: str, stacked: bool = True,
                       monitor=None) -> jnp.ndarray:
-    """Whole-gradient exchange as ``n_groups`` independent collectives.
+    """Deprecated shim over ``Transport.run(plan=...)`` (DESIGN.md §20).
 
-    Each group's compress+collective consumes ONLY its flat slice, and
-    groups are traced first-ready first, so inside a jitted step the
-    dispatch boundary of group g is the availability of its gradients —
-    nothing serializes it behind lower-offset backprop.  Each group rides
-    the transport's stacked path (one collective per group); payload codes
-    and the per-worker mean fold are bucket-local, so the result is
-    bitwise the stacked exchange's.
+    The streamed dispatch semantics — one collective per readiness group,
+    traced first-ready first, reassembled in index order, bitwise the
+    stacked exchange — now live on the transport's single entry point.
     """
-    parts = [
-        transport.exchange_flat(flat[lo:hi], sub, comp, axis, stacked=stacked,
-                                monitor=monitor)
-        for lo, hi, sub in plan.group_slices()  # traced in readiness order
-    ]
-    return _concat_index_order(parts)
+    _warn_streamed_deprecated("exchange_streamed")
+    return transport.run(flat, comp=comp, plan=plan, axis=axis,
+                         stacked=stacked, monitor=monitor)
 
 
 def local_roundtrip_streamed(transport, flat: jnp.ndarray, plan: StreamPlan,
                              comp, stacked: bool = True) -> jnp.ndarray:
-    """Compress->decompress reconstruction at the streamed dispatch
-    granularity (what error feedback accumulates against).  Residual slices
-    follow the SAME readiness groups as the exchange, so each group's
-    residual accumulates exactly what its own dispatch dropped — and since
-    groups preserve bucket boundaries, the values equal the stacked path's
-    bitwise."""
-    parts = [
-        transport.local_roundtrip_flat(flat[lo:hi], sub, comp, stacked=stacked)
-        for lo, hi, sub in plan.group_slices()
-    ]
-    return _concat_index_order(parts)
+    """Deprecated shim over ``Transport.run(plan=..., axis=None)``: the
+    compress->decompress reconstruction at the streamed dispatch
+    granularity (what streamed error feedback accumulates against)."""
+    _warn_streamed_deprecated("local_roundtrip_streamed")
+    return transport.run(flat, comp=comp, plan=plan, stacked=stacked)
 
 
 # ---------------------------------------------------------------------------

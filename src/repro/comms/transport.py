@@ -61,18 +61,35 @@ rebuilds the flat buffer — per-worker wire is ring-allreduce-shaped
 (2·(P-1)/P of the dense planes) instead of growing with P like the gather
 transports.
 
-Batched bucket executor (DESIGN.md §14): the hot entry point is now
-``exchange_flat`` — the whole flat gradient goes in, the whole mean comes
-out.  With ``stacked=True`` (the default) and a stacked-capable compressor,
-the bucketed transports compress EVERY bucket with one batched kernel pass
-(``compress_stacked``) and move ONE ``StackedPayload`` per exchange — one
-collective launch instead of one per bucket — while staying bitwise-equal to
-the per-bucket loop (per-bucket quantizers included).  ``stacked=False`` or a
-loop-only compressor (terngrad/qsgd) falls back to the per-bucket path.
+One entry point (DESIGN.md §20): every consumer — the stacked executor
+(§14), the streamed overlap engine (§15), error feedback, and the serving
+publisher — calls ``Transport.run(flat, comp=..., ...)``:
+
+* ``layout=``            one stacked dispatch over the whole layout;
+* ``plan=``              a ``StreamPlan``: one dispatch per readiness group,
+                         issued first-ready first, reassembled in index
+                         order (bitwise the stacked result);
+* ``axis=None``          no collective: the local compress->decompress
+                         roundtrip at the exchange's own granularity (what
+                         error feedback accumulates against);
+* ``axis="data"``/tuple  the cross-worker mean over that mesh axis.
+
+The legacy names (``exchange``, ``exchange_flat``, ``local_roundtrip``,
+``local_roundtrip_flat``, and ``scheduler.exchange_streamed`` /
+``local_roundtrip_streamed``) remain as thin deprecated shims over ``run``
+and emit ``DeprecationWarning``.
+
+With ``stacked=True`` (the default) and a stacked-capable compressor, each
+dispatch compresses EVERY bucket with one batched kernel pass
+(``compress_stacked``) and moves ONE ``StackedPayload`` per collective —
+while staying bitwise-equal to the per-bucket loop (per-bucket quantizers
+included).  ``stacked=False`` or a loop-only compressor (terngrad/qsgd)
+falls back to the per-bucket path.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import List, Sequence
 
 import jax
@@ -102,6 +119,23 @@ def two_level_axes(axis) -> tuple:
     raise ValueError(
         f"hierarchical transport needs axis=(node_axis, local_axis) over a "
         f"2-D mesh (launch.mesh.make_two_level_mesh), got {axis!r}")
+
+
+def _warn_deprecated(old: str) -> None:
+    warnings.warn(
+        f"Transport.{old}() is deprecated; call Transport.run(flat, "
+        f"comp=..., layout=/plan=..., axis=...) instead (DESIGN.md §20)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _concat_index_order(parts):
+    """Readiness-ordered group results -> flat buffer in index order.
+
+    ``StreamPlan`` groups are strictly descending in the flat space
+    (validated in ``StreamPlan.__post_init__``), so index order is exactly
+    the reverse of dispatch order."""
+    ordered = list(reversed(parts))
+    return ordered[0] if len(ordered) == 1 else jnp.concatenate(ordered)
 
 
 def _compress_all(buckets: Sequence[jnp.ndarray], comp, monitor=None) -> List:
@@ -194,52 +228,121 @@ def _psum_mean_payload(payload, comp, axis: str) -> jnp.ndarray:
 class Transport:
     """Exchange interface.
 
-    The hot entry points take the WHOLE flat gradient plus its bucket layout
-    (``exchange_flat`` / ``local_roundtrip_flat``) so the batched executor
-    can run end-to-end without per-bucket list plumbing; the per-bucket
-    ``exchange``/``local_roundtrip`` remain as the loop fallback (and for
-    compressors with no stacked path).
+    The single public entry point is :meth:`run`; subclasses implement the
+    private dispatch hooks:
 
-    ``local_roundtrip_flat`` exposes the compress->decompress reconstruction
-    at the SAME granularity the transport ships at, so error feedback
-    accumulates exactly what this transport drops (per-bucket quantizers and
-    all).
+    * ``_exchange_flat`` / ``_roundtrip_flat`` — the batched-executor paths
+      (whole flat buffer + bucket layout), overridden with stacked
+      single-collective implementations;
+    * ``_exchange_buckets`` / ``_roundtrip_buckets`` — the per-bucket loop
+      fallback (and the path for compressors with no stacked support).
+
+    ``run(axis=None)`` exposes the compress->decompress reconstruction at
+    the SAME granularity the transport ships at, so error feedback
+    accumulates exactly what this transport drops (per-bucket quantizers
+    and all).
     """
 
     name: str = "base"
 
+    # -- the single public entry point (DESIGN.md §20) ----------------------
+
+    def run(self, flat: jnp.ndarray, *, comp, layout=None, axis=None,
+            plan=None, stacked: bool = True, monitor=None) -> jnp.ndarray:
+        """One dispatch surface for every exchange shape.
+
+        Args:
+          flat: the whole flat f32 buffer (gradient, delta, ...).
+          comp: the compressor carrying the wire codec.
+          layout: ``BucketLayout`` for one stacked dispatch over the whole
+            buffer.  Mutually exclusive with ``plan``.
+          axis: mesh axis name (or tuple for two-level transports) to mean
+            over; ``None`` runs the LOCAL compress->decompress roundtrip —
+            no collective — at the transport's own granularity.
+          plan: a ``scheduler.StreamPlan``: dispatch one collective per
+            readiness group, first-ready first, and reassemble in index
+            order (bitwise the ``layout=`` result; DESIGN.md §15).
+          stacked: batched single-collective path (default) vs the
+            per-bucket loop.
+          monitor: ``comms.faults.ExchangeMonitor`` threading the resilience
+            layer through every payload-creation site; the roundtrip
+            (error-feedback) path is deliberately NOT monitored — the
+            residual never crosses the wire (DESIGN.md §19).
+
+        Returns the flat mean (``axis`` given) or the flat reconstruction
+        (``axis=None``), same shape as ``flat``.
+        """
+        if plan is not None:
+            if layout is not None:
+                raise ValueError("run() takes layout= or plan=, not both")
+            parts = [
+                self._run_one(flat[lo:hi], sub, comp, axis, stacked, monitor)
+                for lo, hi, sub in plan.group_slices()  # readiness order
+            ]
+            return _concat_index_order(parts)
+        if layout is None:
+            raise ValueError("run() needs a layout= or a plan=")
+        return self._run_one(flat, layout, comp, axis, stacked, monitor)
+
+    def _run_one(self, flat, layout, comp, axis, stacked, monitor):
+        if axis is None:
+            return self._roundtrip_flat(flat, layout, comp, stacked)
+        return self._exchange_flat(flat, layout, comp, axis, stacked, monitor)
+
+    # -- deprecated shims (kept for one release; DESIGN.md §20) -------------
+
     def exchange(self, buckets: Sequence[jnp.ndarray], comp, axis: str,
                  monitor=None) -> List[jnp.ndarray]:
-        raise NotImplementedError
+        _warn_deprecated("exchange")
+        return self._exchange_buckets(buckets, comp, axis, monitor=monitor)
 
-    def local_roundtrip(self, buckets: Sequence[jnp.ndarray], comp) -> List[jnp.ndarray]:
-        return [comp.decompress(p) for p in _compress_all(buckets, comp)]
-
-    # -- flat (batched-executor) entry points, DESIGN.md §14 ----------------
+    def local_roundtrip(self, buckets: Sequence[jnp.ndarray],
+                        comp) -> List[jnp.ndarray]:
+        _warn_deprecated("local_roundtrip")
+        return self._roundtrip_buckets(buckets, comp)
 
     def exchange_flat(self, flat: jnp.ndarray, layout, comp, axis: str,
                       stacked: bool = True, monitor=None) -> jnp.ndarray:
+        _warn_deprecated("exchange_flat")
+        return self.run(flat, comp=comp, layout=layout, axis=axis,
+                        stacked=stacked, monitor=monitor)
+
+    def local_roundtrip_flat(self, flat: jnp.ndarray, layout, comp,
+                             stacked: bool = True) -> jnp.ndarray:
+        _warn_deprecated("local_roundtrip_flat")
+        return self.run(flat, comp=comp, layout=layout, stacked=stacked)
+
+    # -- per-bucket loop hooks ----------------------------------------------
+
+    def _exchange_buckets(self, buckets: Sequence[jnp.ndarray], comp,
+                          axis: str, monitor=None) -> List[jnp.ndarray]:
+        raise NotImplementedError
+
+    def _roundtrip_buckets(self, buckets: Sequence[jnp.ndarray],
+                           comp) -> List[jnp.ndarray]:
+        return [comp.decompress(p) for p in _compress_all(buckets, comp)]
+
+    # -- flat (batched-executor) hooks, DESIGN.md §14 ------------------------
+
+    def _exchange_flat(self, flat: jnp.ndarray, layout, comp, axis: str,
+                       stacked: bool = True, monitor=None) -> jnp.ndarray:
         """Whole-gradient exchange over a bucket layout -> flat mean.
 
         Default: the per-bucket loop (split -> exchange -> concat).  Stacked
         transports override this with the single-collective path.
-        ``monitor`` threads the resilience layer (corruption injection +
-        payload validation) through every payload-creation site; the
-        local-roundtrip (error-feedback) paths are deliberately NOT
-        monitored — the residual never crosses the wire, and a skipped
-        step quarantines it anyway (DESIGN.md §19).
         """
         del stacked  # loop fallback ignores the flag
         buckets = bucketing.split_buckets(flat, layout)
         return bucketing.concat_buckets(
-            self.exchange(buckets, comp, axis, monitor=monitor), layout)
+            self._exchange_buckets(buckets, comp, axis, monitor=monitor),
+            layout)
 
-    def local_roundtrip_flat(self, flat: jnp.ndarray, layout, comp,
-                             stacked: bool = True) -> jnp.ndarray:
+    def _roundtrip_flat(self, flat: jnp.ndarray, layout, comp,
+                        stacked: bool = True) -> jnp.ndarray:
         del stacked
         buckets = bucketing.split_buckets(flat, layout)
         return bucketing.concat_buckets(
-            self.local_roundtrip(buckets, comp), layout)
+            self._roundtrip_buckets(buckets, comp), layout)
 
 
 class AllGatherTransport(Transport):
@@ -247,7 +350,7 @@ class AllGatherTransport(Transport):
 
     name = "allgather"
 
-    def exchange(self, buckets, comp, axis, monitor=None):
+    def _exchange_buckets(self, buckets, comp, axis, monitor=None):
         sizes = [int(b.shape[0]) for b in buckets]
         flat = buckets[0] if len(buckets) == 1 else jnp.concatenate(list(buckets))
         payload = comp.compress(flat)
@@ -256,22 +359,22 @@ class AllGatherTransport(Transport):
         mean = _gather_mean_payload(payload, comp, axis)
         return _resplit(mean, sizes)
 
-    def local_roundtrip(self, buckets, comp):
+    def _roundtrip_buckets(self, buckets, comp):
         sizes = [int(b.shape[0]) for b in buckets]
         flat = buckets[0] if len(buckets) == 1 else jnp.concatenate(list(buckets))
         return _resplit(comp.decompress(comp.compress(flat)), sizes)
 
     # monolithic by definition: already one payload, one collective — the
     # flat entry points skip the bucket split/concat entirely
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
-                      monitor=None):
+    def _exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                       monitor=None):
         del layout, stacked
         payload = comp.compress(flat)
         if monitor is not None:
             payload = monitor.on_payload(payload)
         return _gather_mean_payload(payload, comp, axis)
 
-    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+    def _roundtrip_flat(self, flat, layout, comp, stacked=True):
         del layout, stacked
         return comp.decompress(comp.compress(flat))
 
@@ -289,15 +392,15 @@ class SequencedTransport(Transport):
 
     name = "sequenced"
 
-    def exchange(self, buckets, comp, axis, monitor=None):
+    def _exchange_buckets(self, buckets, comp, axis, monitor=None):
         payloads = _compress_all(buckets, comp, monitor)
         return [_gather_mean_payload(p, comp, axis) for p in payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
-                      monitor=None):
+    def _exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                       monitor=None):
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked,
-                                         monitor=monitor)
+            return super()._exchange_flat(flat, layout, comp, axis, stacked,
+                                          monitor=monitor)
         payload = _compress_stacked(flat, layout, comp, monitor)
         gathered = jax.lax.all_gather(payload, axis)  # ONE collective
         if hasattr(comp, "decompress_spectrum"):
@@ -308,9 +411,9 @@ class SequencedTransport(Transport):
         recon = jax.vmap(comp.decompress_stacked)(gathered)  # (W, B, padded)
         return bucketing.unstack_buckets(_ordered_worker_mean(recon), layout)
 
-    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+    def _roundtrip_flat(self, flat, layout, comp, stacked=True):
         if not (stacked and _can_stack(comp)):
-            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+            return super()._roundtrip_flat(flat, layout, comp, stacked)
         payload = _compress_stacked(flat, layout, comp)
         return bucketing.unstack_buckets(
             comp.decompress_stacked(payload), layout)
@@ -327,15 +430,15 @@ class SpectrumPsumTransport(Transport):
 
     name = "psum"
 
-    def exchange(self, buckets, comp, axis, monitor=None):
+    def _exchange_buckets(self, buckets, comp, axis, monitor=None):
         payloads = _compress_all(buckets, comp, monitor)
         return [_psum_mean_payload(p, comp, axis) for p in payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
-                      monitor=None):
+    def _exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                       monitor=None):
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked,
-                                         monitor=monitor)
+            return super()._exchange_flat(flat, layout, comp, axis, stacked,
+                                          monitor=monitor)
         payload = _compress_stacked(flat, layout, comp, monitor)
         inv_p = 1.0 / axis_size(axis)
         if hasattr(comp, "decompress_spectrum"):
@@ -347,9 +450,9 @@ class SpectrumPsumTransport(Transport):
         summed = jax.lax.psum(comp.decompress_stacked(payload), axis)
         return bucketing.unstack_buckets(summed * inv_p, layout)
 
-    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+    def _roundtrip_flat(self, flat, layout, comp, stacked=True):
         if not (stacked and _can_stack(comp)):
-            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+            return super()._roundtrip_flat(flat, layout, comp, stacked)
         payload = _compress_stacked(flat, layout, comp)
         return bucketing.unstack_buckets(
             comp.decompress_stacked(payload), layout)
@@ -388,7 +491,7 @@ class HierarchicalTransport(Transport):
 
     name = "hierarchical"
 
-    def exchange(self, buckets, comp, axis, monitor=None):
+    def _exchange_buckets(self, buckets, comp, axis, monitor=None):
         node_ax, local_ax = two_level_axes(axis)
         inv_l = 1.0 / axis_size(local_ax)
         # loop fallback psums the raw time-domain buckets (== the spectra
@@ -398,12 +501,12 @@ class HierarchicalTransport(Transport):
         node_payloads = _compress_all(node_means, comp, monitor)
         return [_gather_mean_payload(p, comp, node_ax) for p in node_payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
-                      monitor=None):
+    def _exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                       monitor=None):
         node_ax, local_ax = two_level_axes(axis)
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked,
-                                         monitor=monitor)
+            return super()._exchange_flat(flat, layout, comp, axis, stacked,
+                                          monitor=monitor)
         inv_l = 1.0 / axis_size(local_ax)
         rows = bucketing.stack_buckets(flat, layout)  # (B, padded)
         if hasattr(comp, "decompress_spectrum"):
@@ -429,7 +532,7 @@ class HierarchicalTransport(Transport):
         recon = jax.vmap(comp.decompress_stacked)(gathered)
         return bucketing.unstack_buckets(_ordered_worker_mean(recon), layout)
 
-    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+    def _roundtrip_flat(self, flat, layout, comp, stacked=True):
         # EF residual: the exchange's only loss is the island-level compress
         # of the node MEAN — per-worker state can't hold island-shared loss,
         # so the residual accumulates this worker's own compress roundtrip
@@ -437,7 +540,7 @@ class HierarchicalTransport(Transport):
         # compressor, same theta, same bucket granularity as the flat
         # transports); see DESIGN.md §18
         if not (stacked and _can_stack(comp)):
-            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+            return super()._roundtrip_flat(flat, layout, comp, stacked)
         payload = _compress_stacked(flat, layout, comp)
         return bucketing.unstack_buckets(
             comp.decompress_stacked(payload), layout)
@@ -463,15 +566,15 @@ class ReduceScatterTransport(Transport):
 
     name = "reduce_scatter"
 
-    def exchange(self, buckets, comp, axis, monitor=None):
+    def _exchange_buckets(self, buckets, comp, axis, monitor=None):
         payloads = _compress_all(buckets, comp, monitor)
         return [_psum_mean_payload(p, comp, axis) for p in payloads]
 
-    def exchange_flat(self, flat, layout, comp, axis, stacked=True,
-                      monitor=None):
+    def _exchange_flat(self, flat, layout, comp, axis, stacked=True,
+                       monitor=None):
         if not (stacked and _can_stack(comp)):
-            return super().exchange_flat(flat, layout, comp, axis, stacked,
-                                         monitor=monitor)
+            return super()._exchange_flat(flat, layout, comp, axis, stacked,
+                                          monitor=monitor)
         p = axis_size(axis)
         inv_p = 1.0 / p
         payload = _compress_stacked(flat, layout, comp, monitor)
@@ -496,9 +599,9 @@ class ReduceScatterTransport(Transport):
         full = jax.lax.all_gather(rows, axis, tiled=True)  # (B', padded)
         return bucketing.unstack_buckets(full[:b], layout)
 
-    def local_roundtrip_flat(self, flat, layout, comp, stacked=True):
+    def _roundtrip_flat(self, flat, layout, comp, stacked=True):
         if not (stacked and _can_stack(comp)):
-            return super().local_roundtrip_flat(flat, layout, comp, stacked)
+            return super()._roundtrip_flat(flat, layout, comp, stacked)
         payload = _compress_stacked(flat, layout, comp)
         return bucketing.unstack_buckets(
             comp.decompress_stacked(payload), layout)

@@ -1,0 +1,183 @@
+"""Versioned byte codec for compressed payloads (DESIGN.md §20).
+
+The registered-pytree payloads (``FFTPayload`` / ``StackedPayload``) are the
+IN-PROCESS wire format: they flow through collectives as device arrays.  The
+serving ring buffer — and any future cross-process transport — needs the same
+payload as BYTES a separate process can read back without sharing a Python
+session.  This module is that boundary:
+
+    blob    = to_bytes(payload)
+    payload = from_bytes(blob)
+
+Format (all integers little-endian):
+
+    [0:4]    magic  b"RPAY"
+    [4:8]    u32    header length H
+    [8:8+H]  JSON   self-describing header (utf-8)
+    [8+H:]   raw plane bytes, concatenated in header order, C-order LE
+
+The header carries everything needed to reconstruct the payload with no
+out-of-band knowledge — format version, payload kind, static aux fields
+(``sizes``/``orig_len``, ``chunk``, ``has_im``), and one descriptor
+``{name, dtype, shape}`` per array plane (``re``/``im``/``idx`` plus the four
+quantizer leaves and its ``n_bits``/``m_bits`` when quantization is on).
+Dtypes are spelled as numpy names ("uint8", "float32", ...), so the blob is
+backend-agnostic: a payload compressed by any engine backend round-trips
+through host memory and reconstructs on any other (the planes are identical
+across backends by the parity contract, tests/test_engine.py).
+
+Version policy: ``FORMAT_VERSION`` bumps on any layout change; ``from_bytes``
+rejects unknown versions loudly instead of misparsing silently.  Readers MUST
+tolerate unknown *header keys* (forward-compatible additions); writers MUST
+NOT change the meaning of existing keys within a version.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import List, Tuple, Union
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.compressor import FFTPayload, StackedPayload
+from repro.core.quantizer import FittedQuantizer, RangeQuantConfig
+
+__all__ = ["FORMAT_VERSION", "MAGIC", "to_bytes", "from_bytes"]
+
+MAGIC = b"RPAY"
+FORMAT_VERSION = 1
+
+# quantizer leaves in serialization order (matches FittedQuantizer fields)
+_QUANT_LEAVES = ("eps", "p_codes", "vmax", "vmin")
+
+
+def _plane_desc(name: str, arr: np.ndarray) -> dict:
+    return {"name": name, "dtype": arr.dtype.name,
+            "shape": list(arr.shape)}
+
+
+def _host(arr) -> np.ndarray:
+    """Device array -> contiguous little-endian host array."""
+    a = np.asarray(arr)
+    le = a.dtype.newbyteorder("<")
+    return np.ascontiguousarray(a.astype(le, copy=False))
+
+
+def to_bytes(payload: Union[FFTPayload, StackedPayload]) -> bytes:
+    """Serialize a payload to a self-describing binary blob."""
+    if isinstance(payload, StackedPayload):
+        kind = "stacked"
+        aux = {"sizes": [int(s) for s in payload.sizes]}
+    elif isinstance(payload, FFTPayload):
+        kind = "fft"
+        aux = {"orig_len": int(payload.orig_len)}
+    else:
+        raise TypeError(f"cannot serialize {type(payload).__name__}")
+
+    planes: List[Tuple[str, np.ndarray]] = [
+        ("re", _host(payload.re)),
+        ("im", _host(payload.im)),
+        ("idx", _host(payload.idx)),
+    ]
+    quant_hdr = None
+    if payload.quant is not None:
+        q = payload.quant
+        quant_hdr = {"n_bits": q.config.n_bits, "m_bits": q.config.m_bits,
+                     "planes": []}
+        for leaf in _QUANT_LEAVES:
+            arr = _host(getattr(q, leaf))
+            quant_hdr["planes"].append(_plane_desc(leaf, arr))
+            planes.append((f"quant.{leaf}", arr))
+
+    header = {
+        "magic": "RPAY",
+        "format_version": FORMAT_VERSION,
+        "kind": kind,
+        "chunk": int(payload.chunk),
+        "has_im": bool(payload.has_im),
+        "planes": [_plane_desc(n, a) for n, a in planes[:3]],
+        "quant": quant_hdr,
+        **aux,
+    }
+    hdr_bytes = json.dumps(header, sort_keys=True).encode("utf-8")
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", len(hdr_bytes))
+    out += hdr_bytes
+    for _, arr in planes:
+        out += arr.tobytes(order="C")
+    return bytes(out)
+
+
+def _read_plane(buf: memoryview, off: int, desc: dict) -> Tuple[np.ndarray, int]:
+    dtype = np.dtype(desc["dtype"]).newbyteorder("<")
+    shape = tuple(int(d) for d in desc["shape"])
+    nbytes = dtype.itemsize * int(np.prod(shape, dtype=np.int64)) if shape \
+        else dtype.itemsize
+    if off + nbytes > len(buf):
+        raise ValueError(
+            f"payload blob truncated: plane {desc['name']!r} needs "
+            f"{nbytes} bytes at offset {off}, blob has {len(buf)}")
+    arr = np.frombuffer(buf[off:off + nbytes], dtype=dtype).reshape(shape)
+    # native byte order for jnp; copy releases the memoryview
+    return np.ascontiguousarray(arr.astype(arr.dtype.newbyteorder("="))), \
+        off + nbytes
+
+
+def from_bytes(blob: bytes) -> Union[FFTPayload, StackedPayload]:
+    """Reconstruct a payload from :func:`to_bytes` output.
+
+    Validates the magic and format version; raises ``ValueError`` on
+    anything that is not a well-formed v1 blob (truncation included) so a
+    torn ring-buffer read can never yield a silently-wrong payload.
+    """
+    if len(blob) < 8 or blob[:4] != MAGIC:
+        raise ValueError("not a payload blob (bad magic)")
+    (hdr_len,) = struct.unpack("<I", blob[4:8])
+    if len(blob) < 8 + hdr_len:
+        raise ValueError("payload blob truncated: incomplete header")
+    try:
+        header = json.loads(blob[8:8 + hdr_len].decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ValueError(f"payload header is not valid JSON: {e}") from None
+    version = header.get("format_version")
+    if version != FORMAT_VERSION:
+        raise ValueError(
+            f"unsupported payload format version {version!r} "
+            f"(this reader supports {FORMAT_VERSION})")
+    kind = header.get("kind")
+    if kind not in ("fft", "stacked"):
+        raise ValueError(f"unknown payload kind {kind!r}")
+
+    buf = memoryview(blob)
+    off = 8 + hdr_len
+    arrays = {}
+    for desc in header["planes"]:
+        arrays[desc["name"]], off = _read_plane(buf, off, desc)
+
+    quant = None
+    if header.get("quant") is not None:
+        qh = header["quant"]
+        leaves = {}
+        for desc in qh["planes"]:
+            leaves[desc["name"]], off = _read_plane(buf, off, desc)
+        missing = set(_QUANT_LEAVES) - set(leaves)
+        if missing:
+            raise ValueError(f"quantizer block missing leaves {sorted(missing)}")
+        quant = FittedQuantizer(
+            RangeQuantConfig(int(qh["n_bits"]), int(qh["m_bits"])),
+            *(jnp.asarray(leaves[name]) for name in _QUANT_LEAVES))
+
+    re = jnp.asarray(arrays["re"])
+    im = jnp.asarray(arrays["im"])
+    idx = jnp.asarray(arrays["idx"])
+    chunk = int(header["chunk"])
+    has_im = bool(header["has_im"])
+    if kind == "stacked":
+        return StackedPayload(re, im, idx, quant,
+                              tuple(int(s) for s in header["sizes"]),
+                              chunk, has_im=has_im)
+    return FFTPayload(re, im, idx, quant, int(header["orig_len"]),
+                      chunk, has_im=has_im)

@@ -114,6 +114,21 @@ class FFTPayload:
         """
         return _validate_planes(self, level)
 
+    def to_bytes(self) -> bytes:
+        """Self-describing binary blob (core.bytecodec, DESIGN.md §20)."""
+        from repro.core import bytecodec
+
+        return bytecodec.to_bytes(self)
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "FFTPayload":
+        from repro.core import bytecodec
+
+        payload = bytecodec.from_bytes(blob)
+        if not isinstance(payload, FFTPayload):
+            raise ValueError("blob holds a StackedPayload, not an FFTPayload")
+        return payload
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -182,6 +197,21 @@ class StackedPayload:
         """Traced structural sanity check -> bool scalar; see
         :meth:`FFTPayload.validate`."""
         return _validate_planes(self, level)
+
+    def to_bytes(self) -> bytes:
+        """Self-describing binary blob (core.bytecodec, DESIGN.md §20)."""
+        from repro.core import bytecodec
+
+        return bytecodec.to_bytes(self)
+
+    @staticmethod
+    def from_bytes(blob: bytes) -> "StackedPayload":
+        from repro.core import bytecodec
+
+        payload = bytecodec.from_bytes(blob)
+        if not isinstance(payload, StackedPayload):
+            raise ValueError("blob holds an FFTPayload, not a StackedPayload")
+        return payload
 
 
 def _validate_planes(payload, level: str) -> jnp.ndarray:

@@ -98,6 +98,20 @@ def main(argv=None):
                          "(key-checked against this platform/mesh/model/jax), "
                          "written after --calibrate so later jobs skip the "
                          "profiling pass")
+    ap.add_argument("--publish-dir", default=None,
+                    help="serving publish path (DESIGN.md §20): append "
+                         "compressed weight deltas to this ring-buffer "
+                         "directory every --publish-every steps; replicas "
+                         "tail it with `launch.serve --follow <dir>`")
+    ap.add_argument("--publish-every", type=int, default=1,
+                    help="trainer steps between published deltas")
+    ap.add_argument("--publish-theta", type=float, default=0.0,
+                    help="spectrum drop-out of the delta codec (0.0: "
+                         "lossless spectrum, quantization only)")
+    ap.add_argument("--publish-capacity", type=int, default=64,
+                    help="ring depth: deltas buffered for lagging replicas")
+    ap.add_argument("--publish-snapshot-every", type=int, default=16,
+                    help="deltas between dense snapshots (rebase points)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--mesh", default="local", choices=["local", "production", "multi_pod"])
@@ -209,6 +223,23 @@ def main(argv=None):
         print(f"[calibrate] backprop {profile.backprop_flops_per_s / 1e12:.2f} "
               f"TFLOP/s; artifact at {path}")
 
+    publisher = None
+    if args.publish_dir is not None:
+        from repro.serve import PublishConfig, WeightDeltaPublisher
+
+        publisher = WeightDeltaPublisher(
+            args.publish_dir, state["params"],
+            PublishConfig(
+                publish_every=args.publish_every,
+                capacity=args.publish_capacity,
+                snapshot_every=args.publish_snapshot_every,
+                theta=args.publish_theta,
+            ),
+            extra_meta={"arch": args.arch, "reduced": bool(args.reduced)})
+        print(f"[publish] ring at {args.publish_dir} "
+              f"(every {args.publish_every} steps, "
+              f"theta={args.publish_theta})")
+
     loop_cfg = TrainLoopConfig(
         total_steps=args.steps,
         ckpt_dir=args.ckpt_dir,
@@ -216,9 +247,17 @@ def main(argv=None):
         log_every=max(1, args.steps // 20),
         theta_schedule=theta_sched,
         lr_schedule=lr_schedules.warmup_cosine(max(2, args.steps // 10), args.steps),
+        publish_hook=publisher.hook() if publisher is not None else None,
     )
-    with compat.set_mesh(mesh):
-        result = train_loop(model, opt_cfg, step_cfg, mesh, state, stream, loop_cfg)
+    try:
+        with compat.set_mesh(mesh):
+            result = train_loop(model, opt_cfg, step_cfg, mesh, state, stream,
+                                loop_cfg)
+    finally:
+        if publisher is not None:
+            publisher.close()
+            print(f"[publish] closed ring at v{publisher.version} "
+                  f"({publisher.delta_bytes_total} delta bytes)")
     for row in result["history"]:
         print({k: (round(v, 4) if isinstance(v, float) else v) for k, v in row.items()})
     return result

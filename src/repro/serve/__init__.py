@@ -1,3 +1,20 @@
 from repro.serve.engine import ServeConfig, Engine
+from repro.serve.publish import (
+    PublishConfig,
+    SpectrumReplicaState,
+    WeightDeltaPublisher,
+)
+from repro.serve.ring import RingReader, RingWriter
+from repro.serve.subscribe import ReplicaSubscriber, SyncStats
 
-__all__ = ["ServeConfig", "Engine"]
+__all__ = [
+    "ServeConfig",
+    "Engine",
+    "PublishConfig",
+    "SpectrumReplicaState",
+    "WeightDeltaPublisher",
+    "RingReader",
+    "RingWriter",
+    "ReplicaSubscriber",
+    "SyncStats",
+]

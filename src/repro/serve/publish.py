@@ -1,0 +1,207 @@
+"""Training-side weight-delta publisher (DESIGN.md §20).
+
+Every ``publish_every`` committed steps the trainer diffs its live params
+against a local REPLICA MIRROR — the exact weights a subscriber that has
+applied every published delta holds — compresses the diff through the same
+``BucketLayout -> compress_stacked -> StackedPayload`` pipeline the gradient
+exchange uses, and appends the bytecodec blob to the on-disk ring
+(serve/ring.py).  Mirroring the subscriber instead of the previous params is
+the DGC-style error-feedback trick (arXiv 1712.01887): whatever the lossy
+codec dropped from delta v lands back in delta v+1, so replica staleness
+error is bounded by ONE delta's compression error and never accumulates.
+
+The replica state is deliberately NOT ``weights`` but the pair
+``(base, spectrum_sum)``:
+
+    weights == base + irfft(spectrum_sum)        # materialized lazily
+
+FFT linearity (DESIGN.md §10) means folding a delta is one complex ADD of
+its dequantized spectrum — no inverse FFT — and a replica that fell K
+deltas behind catches up by summing K spectra before ONE irfft.  Because
+every replica (the publisher's mirror included) folds the same spectra in
+the same version order onto the same base, their materialized weights are
+BITWISE identical no matter how they batched the catch-up: the irfft is a
+pure function of ``(base, spectrum_sum)``.  Rebase points (snapshots, every
+``snapshot_every`` deltas) collapse the pair to ``(weights, 0)`` at the
+same versions on every replica, so equality survives snapshot boundaries —
+including the fallback path that loads the snapshot file instead of
+computing the rebase locally (the file holds the same materialized bits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.comms import bucketing
+from repro.comms.reducers import flatten_tree
+from repro.comms.transport import _irfft_rows
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+from repro.serve.ring import RingWriter
+
+__all__ = ["PublishConfig", "SpectrumReplicaState", "WeightDeltaPublisher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishConfig:
+    """Static knobs of the publish path."""
+
+    publish_every: int = 1  # trainer steps between deltas
+    capacity: int = 64  # ring depth (deltas buffered for laggards)
+    snapshot_every: int = 16  # deltas between snapshots/rebase points
+    theta: float = 0.0  # spectrum drop-out of the delta codec
+    n_bits: int = 8
+    m_bits: int = 3
+    chunk: int = 4096
+    bucket_bytes: int = 4 << 20
+    quantize: bool = True
+    backend: str = "reference"
+
+    def __post_init__(self):
+        if self.publish_every < 1:
+            raise ValueError(f"publish_every must be >= 1, got {self.publish_every}")
+        if self.snapshot_every < 1:
+            raise ValueError(f"snapshot_every must be >= 1, got {self.snapshot_every}")
+        if self.capacity < self.snapshot_every:
+            # a replica that wrapped must bridge snapshot -> latest from the
+            # buffered deltas alone; a shallower ring could strand it
+            raise ValueError(
+                f"capacity ({self.capacity}) must be >= snapshot_every "
+                f"({self.snapshot_every}) so the snapshot always reaches the "
+                f"buffered tail")
+
+    def compressor_config(self) -> FFTCompressorConfig:
+        return FFTCompressorConfig(
+            theta=self.theta, n_bits=self.n_bits, m_bits=self.m_bits,
+            chunk=self.chunk, quantize=self.quantize, backend=self.backend)
+
+
+class SpectrumReplicaState:
+    """The ``(base, spectrum_sum)`` pair every replica folds deltas onto.
+
+    ``fold`` is spectrum-only (one complex add per delta — no inverse FFT);
+    ``materialize`` runs the ONE irfft and caches until the next fold;
+    ``rebase`` collapses to ``(weights, 0)``.  ``decompress_count`` counts
+    actual irfft materializations — the metric the catch-up acceptance
+    criterion is stated in (BENCH_serve.json, tools/check_bench.py).
+    """
+
+    def __init__(self, base_flat, layout, comp):
+        self.layout = layout
+        self.comp = comp
+        self.base = jnp.asarray(base_flat, jnp.float32)
+        self._spectrum = None  # None == zero (no deltas since rebase)
+        self._cached: Optional[jnp.ndarray] = self.base
+        self.decompress_count = 0
+
+    def fold(self, payload) -> None:
+        """Accumulate one delta payload's dequantized spectrum."""
+        spec = self.comp.decompress_spectrum(payload)
+        self._spectrum = spec if self._spectrum is None \
+            else self._spectrum + spec
+        self._cached = None
+
+    def materialize(self) -> jnp.ndarray:
+        """Current replica weights: base + irfft(spectrum_sum), cached."""
+        if self._cached is None:
+            rows = _irfft_rows(self._spectrum, self.layout.chunk)
+            delta = bucketing.unstack_buckets(rows, self.layout)
+            self._cached = self.base + delta
+            self.decompress_count += 1
+        return self._cached
+
+    def rebase(self) -> jnp.ndarray:
+        """Collapse to (weights, 0) — the snapshot-version contract."""
+        self.base = self.materialize()
+        self._spectrum = None
+        self._cached = self.base
+        return self.base
+
+
+class WeightDeltaPublisher:
+    """Appends compressed weight deltas (and periodic snapshots) to a ring.
+
+    Owns the single ``RingWriter``; versions are monotone, one per
+    published delta.  Construction writes snapshot version 0 (the initial
+    weights), so a subscriber can join before the first delta exists.
+    """
+
+    def __init__(self, ring_dir: str, init_params,
+                 config: PublishConfig = PublishConfig(),
+                 extra_meta: Optional[Dict] = None):
+        self.config = config
+        flat0, self._shapes, self._treedef = flatten_tree(init_params)
+        total = int(flat0.shape[0])
+        self.comp = FFTCompressor(config.compressor_config())
+        self.layout = bucketing.build_layout(
+            total, config.bucket_bytes, config.chunk)
+        meta = {
+            "flat_len": total,
+            "bucket_bytes": int(config.bucket_bytes),
+            "chunk": int(config.chunk),
+            "snapshot_every": int(config.snapshot_every),
+            "publish_every": int(config.publish_every),
+            "compressor": {
+                "theta": float(config.theta),
+                "n_bits": int(config.n_bits),
+                "m_bits": int(config.m_bits),
+                "chunk": int(config.chunk),
+                "quantize": bool(config.quantize),
+                "backend": str(config.backend),
+            },
+        }
+        if extra_meta:
+            meta.update(extra_meta)
+        self.writer = RingWriter(ring_dir, capacity=config.capacity, meta=meta)
+        self.state = SpectrumReplicaState(flat0, self.layout, self.comp)
+        self.writer.write_snapshot(np.asarray(self.state.base),
+                                   version=0, step=-1)
+        self.delta_bytes_total = 0
+        self.snapshot_bytes_total = int(4 * total)  # the v0 snapshot
+
+    @property
+    def version(self) -> int:
+        return self.writer.latest_version
+
+    def publish(self, step: int, params) -> int:
+        """Diff params against the replica mirror, append one delta; returns
+        the new version."""
+        flat, _, _ = flatten_tree(params)
+        if int(flat.shape[0]) != self.layout.total:
+            raise ValueError(
+                f"param tree flattens to {int(flat.shape[0])} elements; "
+                f"publisher was built for {self.layout.total}")
+        delta = flat - self.state.materialize()
+        payload = self.comp.compress_stacked(
+            bucketing.stack_buckets(delta, self.layout), self.layout.sizes())
+        blob = payload.to_bytes()
+        version = self.writer.append_delta(
+            blob, step=step, theta=self.config.theta)
+        self.delta_bytes_total += len(blob)
+        # fold AFTER the write: the mirror tracks what subscribers can read
+        self.state.fold(payload)
+        if version % self.config.snapshot_every == 0:
+            weights = self.state.rebase()
+            self.writer.write_snapshot(np.asarray(weights),
+                                       version=version, step=step)
+            self.snapshot_bytes_total += 4 * self.layout.total
+        return version
+
+    def on_step(self, step: int, params) -> Optional[int]:
+        """Cadence filter: publish on every ``publish_every``-th step."""
+        if step % self.config.publish_every == 0:
+            return self.publish(step, params)
+        return None
+
+    def hook(self) -> Callable[[int, Dict], None]:
+        """A ``TrainLoopConfig.publish_hook`` bound to this publisher."""
+        def _hook(step: int, state: Dict) -> None:
+            self.on_step(step, state["params"])
+        return _hook
+
+    def close(self) -> None:
+        """Mark the ring closed so tailing subscribers can exit."""
+        self.writer.close()

@@ -81,6 +81,13 @@ class TrainLoopConfig:
     # hangs its per-step recorder (loss / grad-energy / Assumption 3.1 probe)
     # here without changing the history contract below.
     metrics_hook: Optional[Callable[[int, Dict, Dict], None]] = None
+    # Called EVERY committed step with (step, state) AFTER metrics_hook —
+    # the serving publish path (serve/publish.py, DESIGN.md §20) hangs
+    # WeightDeltaPublisher.hook() here; the publisher applies its own
+    # publish_every cadence.  Kept separate from metrics_hook: it consumes
+    # the state (not the metrics), and skipped steps still publish — the
+    # replica fleet tracks committed weights, whatever the step did.
+    publish_hook: Optional[Callable[[int, Dict], None]] = None
     # crash events that already fired, persisted ACROSS train_loop calls on
     # the same config: a restarted process does not re-hit a transient
     # crash, so fatal-crash + auto-resume runs complete (comms/faults.py)
@@ -188,6 +195,8 @@ def train_loop(
                                     dt=time.perf_counter() - t0,
                                     degradations=len(health.transitions))
                 loop_cfg.metrics_hook(step, hook_metrics, state)
+            if loop_cfg.publish_hook is not None:
+                loop_cfg.publish_hook(step, state)
             if step % loop_cfg.log_every == 0:
                 metrics = {k: float(v) for k, v in metrics.items()}
                 metrics.update(step=step, theta=theta, dt=time.perf_counter() - t0)

@@ -1,0 +1,134 @@
+"""Property tests for the versioned payload byte codec (core/bytecodec.py).
+
+Round-trip law: ``from_bytes(to_bytes(p))`` reproduces every plane and
+quantizer leaf BIT-FOR-BIT (the ring stores these blobs; a lossy codec here
+would silently break the serve path's bitwise-replica guarantee), across
+theta, bit widths, quantization on/off, monolithic and stacked payloads,
+ragged bucket tails, and the backend spellings.  Malformed input never
+crashes into numpy — every corruption fails as ``ValueError``.
+
+``given``/``st`` come from tests/helpers.py: real hypothesis when installed,
+a deterministic boundary-example runner otherwise.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from helpers import given, settings, st  # hypothesis or deterministic fallback
+
+from repro.comms import bucketing
+from repro.core import bytecodec
+from repro.core.compressor import (
+    FFTCompressor,
+    FFTCompressorConfig,
+    FFTPayload,
+    StackedPayload,
+)
+
+CHUNK = 64
+
+
+def _flat(n: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+
+
+def _comp(**kw):
+    kw.setdefault("chunk", CHUNK)
+    kw.setdefault("backend", "reference")
+    return FFTCompressor(FFTCompressorConfig(**kw))
+
+
+def _assert_payload_equal(a, b):
+    assert type(a) is type(b)
+    np.testing.assert_array_equal(np.asarray(a.re), np.asarray(b.re))
+    np.testing.assert_array_equal(np.asarray(a.im), np.asarray(b.im))
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    assert np.asarray(a.re).dtype == np.asarray(b.re).dtype
+    assert np.asarray(a.idx).dtype == np.asarray(b.idx).dtype
+    assert a.chunk == b.chunk and a.has_im == b.has_im
+    if a.quant is None:
+        assert b.quant is None
+    else:
+        assert a.quant.config.n_bits == b.quant.config.n_bits
+        assert a.quant.config.m_bits == b.quant.config.m_bits
+        for leaf in ("eps", "p_codes", "vmax", "vmin"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a.quant, leaf)),
+                np.asarray(getattr(b.quant, leaf)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(theta=st.sampled_from([0.0, 0.5, 0.9]),
+       n_bits=st.sampled_from([8, 12]),
+       quantize=st.sampled_from([True, False]),
+       tail=st.integers(1, 2 * CHUNK - 1))
+def test_stacked_roundtrip_bitwise(theta, n_bits, quantize, tail):
+    comp = _comp(theta=theta, n_bits=n_bits, quantize=quantize)
+    total = 3 * 512 + tail  # last bucket ragged
+    layout = bucketing.build_layout(total, 4 * 512, CHUNK)
+    p = comp.compress_stacked(
+        bucketing.stack_buckets(_flat(total, seed=tail), layout),
+        layout.sizes())
+    q = StackedPayload.from_bytes(p.to_bytes())
+    _assert_payload_equal(p, q)
+    assert q.sizes == p.sizes
+    np.testing.assert_array_equal(np.asarray(comp.decompress_stacked(q)),
+                                  np.asarray(comp.decompress_stacked(p)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(theta=st.sampled_from([0.0, 0.7]),
+       quantize=st.sampled_from([True, False]),
+       n=st.integers(CHUNK, 5 * CHUNK + 17))
+def test_monolithic_roundtrip_bitwise(theta, quantize, n):
+    comp = _comp(theta=theta, quantize=quantize)
+    p = comp.compress(_flat(n, seed=n))
+    q = FFTPayload.from_bytes(p.to_bytes())
+    _assert_payload_equal(p, q)
+    assert q.orig_len == p.orig_len
+    np.testing.assert_array_equal(np.asarray(comp.decompress(q)),
+                                  np.asarray(comp.decompress(p)))
+
+
+def test_backend_spellings_share_the_wire_format():
+    """auto resolves per platform, but the blob layout is backend-free:
+    whatever backend compressed it, any subscriber can decode it."""
+    flat = _flat(4 * CHUNK)
+    blobs = {}
+    for backend in ("reference", "auto"):
+        comp = _comp(theta=0.5, backend=backend)
+        blobs[backend] = comp.compress(flat).to_bytes()
+    decoded = {k: FFTPayload.from_bytes(v) for k, v in blobs.items()}
+    ref = _comp(theta=0.5)
+    np.testing.assert_array_equal(
+        np.asarray(ref.decompress(decoded["reference"])),
+        np.asarray(ref.decompress(decoded["auto"])))
+
+
+def test_header_is_self_describing():
+    p = _comp(theta=0.5).compress(_flat(3 * CHUNK))
+    blob = p.to_bytes()
+    assert blob[:4] == bytecodec.MAGIC
+    hlen = int.from_bytes(blob[4:8], "little")
+    import json
+
+    header = json.loads(blob[8:8 + hlen])
+    assert header["format_version"] == bytecodec.FORMAT_VERSION
+    assert header["kind"] == "fft"
+    assert {pl["name"] for pl in header["planes"]} >= {"re", "im", "idx"}
+
+
+def test_malformed_blobs_raise_value_error():
+    p = _comp(theta=0.5).compress(_flat(3 * CHUNK))
+    blob = p.to_bytes()
+    with pytest.raises(ValueError):
+        bytecodec.from_bytes(b"XXXX" + blob[4:])  # wrong magic
+    with pytest.raises(ValueError):
+        bytecodec.from_bytes(blob[:len(blob) // 2])  # truncated planes
+    with pytest.raises(ValueError):
+        bytecodec.from_bytes(blob[:6])  # truncated header
+    with pytest.raises(ValueError):
+        StackedPayload.from_bytes(blob)  # kind mismatch (fft blob)

@@ -240,3 +240,92 @@ def test_topology_inter_wire_must_shrink_with_island_size(committed):
     assert any("shrink" in e for e in check_bench.check(data))
     # and the committed sweep actually exercises a multi-island node count
     assert len(grown) >= 2
+
+
+# ---------------------------------------------------------------------------
+# BENCH_serve.json (kind == "serve"): the publish-path guard (DESIGN.md §20)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def serve():
+    with open(os.path.join(REPO, "BENCH_serve.json")) as f:
+        return json.load(f)
+
+
+def test_committed_serve_artifact_passes(serve):
+    assert serve["kind"] == "serve"
+    assert check_bench.check(serve) == []
+
+
+def test_serve_record_columns_guarded(serve):
+    data = copy.deepcopy(serve)
+    del data["records"]
+    assert any("records" in e for e in check_bench.check(data))
+    for key in check_bench.SERVE_RECORD_KEYS:
+        data = copy.deepcopy(serve)
+        del data["records"][0][key]
+        assert any(key in e for e in check_bench.check(data)), key
+    for key in check_bench.SERVE_CATCHUP_KEYS:
+        data = copy.deepcopy(serve)
+        del data["records"][0]["catchup"][key]
+        assert any(key in e for e in check_bench.check(data)), key
+
+
+def test_serve_deltas_must_beat_dense(serve):
+    """ISSUE 10 acceptance gate: compressed deltas STRICTLY cheaper than
+    dense snapshots at the same cadence, on every record."""
+    data = copy.deepcopy(serve)
+    r = data["records"][0]
+    r["delta_bytes_total"] = r["dense_bytes_at_cadence"]
+    assert any("STRICTLY cheaper" in e for e in check_bench.check(data))
+    data = copy.deepcopy(serve)
+    data["records"][0]["model"]["savings"] = 0.9
+    assert any("savings" in e for e in check_bench.check(data))
+
+
+def test_serve_catchup_must_cost_one_decompress(serve):
+    data = copy.deepcopy(serve)
+    data["records"][0]["catchup"]["decompress_count"] = 3
+    assert any("ONE decompress" in e for e in check_bench.check(data))
+    data = copy.deepcopy(serve)
+    data["records"][0]["catchup"]["bitwise_equal"] = False
+    assert any("bitwise" in e for e in check_bench.check(data))
+    data = copy.deepcopy(serve)
+    data["records"][0]["mirror_bitwise_equal"] = False
+    assert any("mirror" in e for e in check_bench.check(data))
+
+
+def test_serve_sweep_coverage_guarded(serve):
+    # shrink to one cadence: coverage failure
+    data = copy.deepcopy(serve)
+    data["records"] = [r for r in data["records"]
+                       if r["publish_every"] == 1]
+    assert any("cadences" in e for e in check_bench.check(data))
+    # drop every wrapped-ring record: the fallback evidence disappears
+    data = copy.deepcopy(serve)
+    for r in data["records"]:
+        r["gap"]["detected"] = False
+    assert any("snapshot fallback" in e for e in check_bench.check(data))
+    # no multi-delta catch-up left
+    data = copy.deepcopy(serve)
+    for r in data["records"]:
+        r["catchup"]["lag"] = 1
+    assert any("lag" in e for e in check_bench.check(data))
+
+
+def test_main_cli_dispatches_both_kinds(tmp_path, committed, serve, capsys):
+    tp = tmp_path / "throughput.json"
+    tp.write_text(json.dumps(committed))
+    sv = tmp_path / "serve.json"
+    sv.write_text(json.dumps(serve))
+    assert check_bench.main([str(tp), str(sv)]) == 0
+    out = capsys.readouterr().out
+    assert out.count("schema ok") == 2
+    assert "publish records" in out
+    # one bad artifact fails the whole invocation
+    bad = copy.deepcopy(serve)
+    bad["records"][0]["catchup"]["decompress_count"] = 2
+    bad_path = tmp_path / "bad_serve.json"
+    bad_path.write_text(json.dumps(bad))
+    assert check_bench.main([str(tp), str(bad_path)]) == 1

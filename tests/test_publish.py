@@ -1,0 +1,229 @@
+"""Publish/subscribe weight-delta path (DESIGN.md §20).
+
+The contract under test, stated in serve/publish.py's terms:
+
+* **exactness** — at theta=0 with quantization off the codec keeps the full
+  spectrum, so one published delta reconstructs the trainer's weights to
+  float-roundoff;
+* **bounded staleness** — at lossy settings the publisher diffs against its
+  replica MIRROR (error feedback), so the replica's error vs the trainer is
+  bounded by ONE delta's codec error and does not accumulate across deltas;
+* **summed-spectrum catch-up** — a replica K versions behind folds K
+  spectra and runs ONE irfft, landing BITWISE on the weights of a replica
+  that replayed the deltas one at a time;
+* **snapshot fallback** — when the ring wrapped past a laggard, it reloads
+  the snapshot (gap detected) and still lands bitwise on the replay
+  replica;
+* plus the config invariants and the end-to-end lab-LM smoke: train with
+  the publish hook, rebuild weights from the ring directory alone, and
+  generate greedy tokens through the serving engine.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comms.reducers import flatten_tree
+from repro.serve import (
+    PublishConfig,
+    ReplicaSubscriber,
+    WeightDeltaPublisher,
+)
+
+N = 3000
+
+
+def _params(seed: int):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(50, 40)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(N - 2000,)).astype(np.float32)),
+    }
+
+
+def _walk(params, seed: int, scale: float = 1e-2):
+    """One optimizer-ish step: params + small random update."""
+    rng = np.random.default_rng(seed)
+    return jax.tree_util.tree_map(
+        lambda x: x + jnp.asarray(
+            scale * rng.normal(size=x.shape).astype(np.float32)), params)
+
+
+def _cfg(**kw):
+    kw.setdefault("chunk", 64)
+    kw.setdefault("bucket_bytes", 4 * 1024)  # 1024 floats -> 3 buckets
+    kw.setdefault("snapshot_every", 4)
+    kw.setdefault("capacity", 4)
+    return PublishConfig(**kw)
+
+
+def _flat(params) -> np.ndarray:
+    return np.asarray(flatten_tree(params)[0])
+
+
+def test_theta0_unquantized_delta_is_exact(tmp_path):
+    pub = WeightDeltaPublisher(
+        str(tmp_path), _params(0), _cfg(theta=0.0, quantize=False))
+    stepped = _walk(_params(0), seed=1)
+    pub.publish(0, stepped)
+    sub = ReplicaSubscriber(str(tmp_path))
+    stats = sub.sync()
+    assert stats.applied == 1 and stats.decompress_count == 1
+    np.testing.assert_allclose(sub.weights(), _flat(stepped),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_lossy_staleness_bounded_by_one_delta(tmp_path):
+    """Error feedback: replica error vs the trainer stays at single-delta
+    codec scale over many publishes instead of accumulating."""
+    cfg = _cfg(theta=0.7, quantize=True)
+    params = _params(0)
+    pub = WeightDeltaPublisher(str(tmp_path), params, cfg)
+    sub = ReplicaSubscriber(str(tmp_path))
+    errs = []
+    for step in range(12):
+        params = _walk(params, seed=100 + step)
+        pub.publish(step, params)
+        sub.sync()
+        true = _flat(params)
+        errs.append(np.linalg.norm(sub.weights() - true)
+                    / np.linalg.norm(true))
+    # lossy but bounded: no blow-up, and the tail is no worse than the
+    # early error (the accumulation failure mode this guards against)
+    assert max(errs) < 0.1
+    assert errs[-1] < 3.0 * max(errs[0], 1e-6)
+    # the publisher's mirror IS a replica: bitwise equal to the subscriber
+    np.testing.assert_array_equal(
+        np.asarray(pub.state.materialize()), sub.weights())
+
+
+def test_catchup_sums_spectra_one_decompress_bitwise(tmp_path):
+    cfg = _cfg(theta=0.5, quantize=True, snapshot_every=8, capacity=8)
+    params = _params(1)
+    pub = WeightDeltaPublisher(str(tmp_path), params, cfg)
+    replay = ReplicaSubscriber(str(tmp_path))  # one delta at a time
+    laggard = ReplicaSubscriber(str(tmp_path))  # catches up in one sync
+    for step in range(3):
+        params = _walk(params, seed=200 + step)
+        pub.publish(step, params)
+        replay.sync()
+    stats = laggard.sync()
+    assert stats.applied == 3
+    assert stats.decompress_count == 1  # K spectra summed, ONE irfft
+    assert not stats.gap_detected
+    np.testing.assert_array_equal(laggard.weights(), replay.weights())
+
+
+def test_catchup_across_rebase_boundary_stays_bitwise(tmp_path):
+    """A catch-up window crossing a snapshot version rebases locally at the
+    same version the publisher did — equality survives the boundary."""
+    cfg = _cfg(theta=0.5, quantize=True, snapshot_every=4, capacity=8)
+    params = _params(2)
+    pub = WeightDeltaPublisher(str(tmp_path), params, cfg)
+    replay = ReplicaSubscriber(str(tmp_path))
+    laggard = ReplicaSubscriber(str(tmp_path))
+    for step in range(6):  # crosses the v4 rebase
+        params = _walk(params, seed=300 + step)
+        pub.publish(step, params)
+        replay.sync()
+    stats = laggard.sync()
+    assert stats.applied == 6
+    assert stats.rebases == 1
+    np.testing.assert_array_equal(laggard.weights(), replay.weights())
+
+
+def test_ring_wrap_falls_back_to_snapshot(tmp_path):
+    cfg = _cfg(theta=0.5, quantize=True, snapshot_every=4, capacity=4)
+    params = _params(3)
+    pub = WeightDeltaPublisher(str(tmp_path), params, cfg)
+    replay = ReplicaSubscriber(str(tmp_path))
+    laggard = ReplicaSubscriber(str(tmp_path))  # will be wrapped past
+    for step in range(10):
+        params = _walk(params, seed=400 + step)
+        pub.publish(step, params)
+        replay.sync()
+    stats = laggard.sync()
+    assert stats.gap_detected
+    assert stats.snapshot_loads == 1
+    assert stats.version == 10
+    np.testing.assert_array_equal(laggard.weights(), replay.weights())
+
+
+def test_publish_cadence_and_close(tmp_path):
+    cfg = _cfg(publish_every=3)
+    pub = WeightDeltaPublisher(str(tmp_path), _params(4), cfg)
+    hook = pub.hook()
+    params = _params(4)
+    for step in range(7):
+        params = _walk(params, seed=500 + step)
+        hook(step, {"params": params})
+    assert pub.version == 3  # steps 0, 3, 6
+    pub.close()
+    sub = ReplicaSubscriber(str(tmp_path))
+    assert sub.follow(timeout_s=5.0) == 3
+
+
+def test_config_invariants():
+    with pytest.raises(ValueError, match="capacity"):
+        PublishConfig(capacity=2, snapshot_every=8)
+    with pytest.raises(ValueError, match="publish_every"):
+        PublishConfig(publish_every=0)
+    with pytest.raises(ValueError, match="snapshot_every"):
+        PublishConfig(snapshot_every=0, capacity=4)
+
+
+def test_publisher_rejects_mismatched_tree(tmp_path):
+    pub = WeightDeltaPublisher(str(tmp_path), _params(5), _cfg())
+    with pytest.raises(ValueError, match="elements"):
+        pub.publish(0, {"w": jnp.zeros((3, 3), jnp.float32)})
+
+
+def test_lab_lm_train_publish_serve_smoke(tmp_path):
+    """End to end on the tiny LM: train with the publish hook, rebuild the
+    weights from the ring directory alone, generate greedy tokens."""
+    from repro import jaxcompat as compat
+    from repro.configs.base import ArchConfig
+    from repro.data import SyntheticConfig, SyntheticStream
+    from repro.launch.mesh import make_local_mesh
+    from repro.models.transformer import LM
+    from repro.optim import OptConfig
+    from repro.serve import Engine, ServeConfig
+    from repro.train import TrainLoopConfig, init_state, train_loop
+    from repro.train.step import StepConfig
+
+    arch = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab_size=64, remat="none")
+    model = LM(arch)
+    opt = OptConfig(kind="adamw", lr=3e-3)
+    mesh = make_local_mesh()
+    stream = SyntheticStream(SyntheticConfig(vocab_size=64, seq_len=16,
+                                             global_batch=4))
+    state = init_state(jax.random.PRNGKey(0), model, opt)
+    pub = WeightDeltaPublisher(
+        str(tmp_path), state["params"],
+        PublishConfig(publish_every=1, snapshot_every=2, capacity=4,
+                      theta=0.0, quantize=False))
+    with compat.set_mesh(mesh):
+        out = train_loop(model, opt, StepConfig(mode="pjit"), mesh, state,
+                         stream, TrainLoopConfig(total_steps=4, log_every=4,
+                                                 publish_hook=pub.hook()))
+    pub.close()
+
+    sub = ReplicaSubscriber(str(tmp_path))
+    assert sub.follow(timeout_s=5.0) == 4  # one delta per committed step
+    params = sub.params_like(out["state"]["params"])
+    np.testing.assert_allclose(
+        sub.weights(), _flat(out["state"]["params"]), rtol=1e-4, atol=1e-5)
+
+    with compat.set_mesh(mesh):
+        eng = Engine(model, params, ServeConfig(max_seq=32))
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(1), (2, 8), 0, arch.vocab_size, jnp.int32)
+        toks1 = eng.generate(prompts, max_new_tokens=4)
+        toks2 = eng.generate(prompts, max_new_tokens=4)
+    assert toks1.shape == (2, 12)
+    np.testing.assert_array_equal(np.asarray(toks1), np.asarray(toks2))
+    assert bool(jnp.all((toks1 >= 0) & (toks1 < arch.vocab_size)))

@@ -1,0 +1,106 @@
+"""The redesigned exchange API (DESIGN.md §20): ``Transport.run`` as the
+single public entry point, with the historical five-method surface
+(``exchange`` / ``exchange_flat`` / ``local_roundtrip*`` and the scheduler's
+``*_streamed`` wrappers) demoted to deprecated shims.
+
+Covers, all on the local (no-collective) path so tier-1 stays single-device
+— the axis-bearing path rides the same ``_run_one`` dispatch and is
+exercised end-to-end by tests/test_transports.py via the reducers:
+
+* layout= and plan= are mutually exclusive and one is required;
+* ``run(plan=...)`` reassembles the readiness-ordered groups bitwise equal
+  to the one-shot ``run(layout=...)`` dispatch;
+* every deprecated name warns ``DeprecationWarning`` AND returns bitwise
+  the ``run()`` result (shims delegate, they don't fork the math);
+* the new surface itself stays warning-free.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.comms import bucketing, scheduler
+from repro.comms.transport import get_transport
+from repro.core.compressor import FFTCompressor, FFTCompressorConfig
+
+CHUNK = 256
+N = 4 * 2048 + 137  # multi-bucket with a ragged tail
+LAYOUT = bucketing.build_layout(N, 2048 * 4, CHUNK)
+COMP = FFTCompressor(FFTCompressorConfig(theta=0.7, chunk=CHUNK,
+                                         backend="reference"))
+FLAT = jnp.asarray(
+    np.random.default_rng(0).normal(size=(N,)).astype(np.float32))
+
+
+def _t(name="allgather"):
+    return get_transport(name)
+
+
+def test_run_requires_exactly_one_dispatch_spec():
+    t = _t()
+    plan = scheduler.build_plan(LAYOUT)
+    with pytest.raises(ValueError, match="layout= or a plan="):
+        t.run(FLAT, comp=COMP)
+    with pytest.raises(ValueError, match="not both"):
+        t.run(FLAT, comp=COMP, layout=LAYOUT, plan=plan)
+
+
+def test_run_plan_bitwise_equals_run_layout():
+    # the bitwise streamed==stacked guarantee belongs to the PER-BUCKET
+    # transports (sequenced/psum fit one quantizer per bucket, so grouping
+    # cannot move a fit); allgather compresses monolithically — splitting
+    # it into groups legitimately refits the quantizer per group
+    t = _t("sequenced")
+    one_shot = t.run(FLAT, comp=COMP, layout=LAYOUT)
+    assert LAYOUT.n_buckets > 1
+    for n_groups in (None, 2, 1):
+        plan = scheduler.build_plan(LAYOUT, n_groups)
+        streamed = t.run(FLAT, comp=COMP, plan=plan)
+        np.testing.assert_array_equal(np.asarray(streamed),
+                                      np.asarray(one_shot))
+
+
+def test_run_emits_no_deprecation_warning():
+    t = _t()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t.run(FLAT, comp=COMP, layout=LAYOUT)
+        t.run(FLAT, comp=COMP, plan=scheduler.build_plan(LAYOUT))
+
+
+def test_deprecated_flat_shims_warn_and_match_run():
+    t = _t()
+    want = np.asarray(t.run(FLAT, comp=COMP, layout=LAYOUT))
+    with pytest.deprecated_call(match="local_roundtrip_flat"):
+        got = t.local_roundtrip_flat(FLAT, LAYOUT, COMP)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_deprecated_bucket_shims_warn_and_match_run():
+    t = _t()
+    buckets = bucketing.split_buckets(FLAT, LAYOUT)
+    with pytest.deprecated_call(match="local_roundtrip"):
+        got = t.local_roundtrip(buckets, COMP)
+    want = t.run(FLAT, comp=COMP, layout=LAYOUT, stacked=False)
+    np.testing.assert_array_equal(
+        np.asarray(bucketing.concat_buckets(got, LAYOUT)), np.asarray(want))
+
+
+def test_deprecated_streamed_wrappers_warn_and_match_run():
+    t = _t()
+    plan = scheduler.build_plan(LAYOUT, 2)
+    want = np.asarray(t.run(FLAT, comp=COMP, plan=plan))
+    with pytest.deprecated_call(match="local_roundtrip_streamed"):
+        got = scheduler.local_roundtrip_streamed(t, FLAT, plan, COMP)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_every_transport_runs_the_local_path():
+    for name in ("allgather", "sequenced", "psum"):
+        t = _t(name)
+        out = t.run(FLAT, comp=COMP, layout=LAYOUT)
+        assert out.shape == FLAT.shape
+        assert bool(jnp.all(jnp.isfinite(out)))

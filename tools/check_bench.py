@@ -42,8 +42,16 @@ efficiency numbers) hides a regression from every later PR.  Checks:
   must strictly shrink as ``local`` grows — the ISSUE 8 acceptance
   evidence that growing an island shrinks each worker's fabric share.
 
-Usage: ``python tools/check_bench.py [path-to-BENCH_throughput.json]``;
-exits nonzero listing every violation (not just the first).
+* ``serve`` artifacts — a file whose top-level ``kind`` is ``"serve"``
+  (``BENCH_serve.json``, benchmarks/serve_bench.py) is checked by
+  ``check_serve`` instead: compressed weight deltas strictly cheaper than
+  dense snapshots at every cadence, one-decompress summed-spectrum
+  catch-up bitwise-equal to one-at-a-time replay, and the ring-wrap
+  snapshot fallback demonstrated (DESIGN.md §20).
+
+Usage: ``python tools/check_bench.py [artifact.json ...]`` (default
+``BENCH_throughput.json``; each path is dispatched by its ``kind``); exits
+nonzero listing every violation (not just the first).
 """
 
 from __future__ import annotations
@@ -371,28 +379,121 @@ def check_resilience(data: dict) -> List[str]:
     return errors
 
 
+SERVE_RECORD_KEYS = (
+    "publish_every",
+    "theta",
+    "n_publishes",
+    "n_elems",
+    "n_buckets",
+    "delta_bytes_total",
+    "snapshot_bytes_total",
+    "dense_bytes_at_cadence",
+    "wire_savings",
+    "staleness_steps",
+    "staleness_rel_err",
+    "mirror_bitwise_equal",
+    "model",
+    "catchup",
+    "gap",
+)
+
+SERVE_CATCHUP_KEYS = ("lag", "decompress_count", "bitwise_equal",
+                      "crosses_rebase")
+
+
+def check_serve(data: dict) -> List[str]:
+    """Guard for ``BENCH_serve.json`` (the publish path, DESIGN.md §20).
+
+    The two ISSUE-10 acceptance criteria live here: compressed deltas must
+    be STRICTLY cheaper than dense snapshots at the same cadence on every
+    record, and a K-behind catch-up inside one snapshot interval must cost
+    exactly ONE decompress while landing bitwise on the one-at-a-time
+    replay replica.  Plus coverage (several cadences x thetas, at least one
+    multi-delta catch-up, at least one ring-wrap snapshot fallback) so a
+    later PR cannot quietly shrink the matrix to a cell that happens to
+    pass.
+    """
+    errors = []
+    records = data.get("records")
+    if not records:
+        return ["missing 'records' field (cadence x theta publish sweep)"]
+    for r in records:
+        tag = f"every={r.get('publish_every')}/theta={r.get('theta')}"
+        for key in SERVE_RECORD_KEYS:
+            if key not in r:
+                errors.append(f"serve record {tag} lacks {key!r}")
+        delta = r.get("delta_bytes_total")
+        dense = r.get("dense_bytes_at_cadence")
+        if isinstance(delta, (int, float)) and isinstance(dense, (int, float)):
+            if not delta < dense:
+                errors.append(
+                    f"serve record {tag}: compressed deltas ({delta} B) must "
+                    f"be STRICTLY cheaper than dense snapshots at the same "
+                    f"cadence ({dense} B)")
+        catchup = r.get("catchup") or {}
+        for key in SERVE_CATCHUP_KEYS:
+            if key not in catchup:
+                errors.append(f"serve record {tag}: catchup lacks {key!r}")
+        if catchup.get("crosses_rebase") is False:
+            if catchup.get("decompress_count") != 1:
+                errors.append(
+                    f"serve record {tag}: a catch-up inside one snapshot "
+                    f"interval must run exactly ONE decompress, got "
+                    f"{catchup.get('decompress_count')!r}")
+        if catchup.get("bitwise_equal") is not True:
+            errors.append(
+                f"serve record {tag}: summed-spectrum catch-up is not "
+                f"bitwise-equal to one-at-a-time replay")
+        if r.get("mirror_bitwise_equal") is not True:
+            errors.append(
+                f"serve record {tag}: publisher mirror and replay replica "
+                f"disagree — the error-feedback contract broke")
+        model = r.get("model") or {}
+        savings = model.get("savings")
+        if not isinstance(savings, (int, float)) or not savings > 1.0:
+            errors.append(
+                f"serve record {tag}: modeled savings must exceed 1.0 "
+                f"(deltas cheaper than dense), got {savings!r}")
+    cadences = {r.get("publish_every") for r in records}
+    thetas = {r.get("theta") for r in records}
+    if len(cadences) < 2 or len(thetas) < 2:
+        errors.append(
+            f"serve sweep must cover >= 2 cadences x >= 2 thetas, got "
+            f"{sorted(cadences)} x {sorted(thetas)}")
+    if not any((r.get("catchup") or {}).get("lag", 0) > 1 for r in records):
+        errors.append(
+            "no serve record demonstrates a multi-delta (lag > 1) catch-up")
+    if not any((r.get("gap") or {}).get("detected")
+               and (r.get("gap") or {}).get("bitwise_equal_after")
+               for r in records):
+        errors.append(
+            "no serve record demonstrates the ring-wrap snapshot fallback "
+            "(gap detected + bitwise-equal recovery)")
+    return errors
+
+
 def check(data: dict) -> List[str]:
-    """All violations in one pass (empty list == schema ok)."""
+    """All violations in one pass (empty list == schema ok).
+
+    Dispatches on the artifact's ``kind``: ``serve`` artifacts
+    (BENCH_serve.json) get :func:`check_serve`, everything else the full
+    throughput-schema battery.
+    """
+    if data.get("kind") == "serve":
+        return check_serve(data)
     return (check_backends(data) + check_records(data)
             + check_schedules(data) + check_selectors(data)
             + check_calibration(data) + check_topology(data)
             + check_resilience(data))
 
 
-def main(argv=None) -> int:
-    args = sys.argv[1:] if argv is None else argv
-    path = args[0] if args else "BENCH_throughput.json"
-    try:
-        with open(path) as f:
-            data = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        print(f"BENCH SCHEMA FAIL: cannot read {path}: {e}")
-        return 1
-    errors = check(data)
-    for e in errors:
-        print(f"BENCH SCHEMA FAIL: {e}")
-    if errors:
-        return 1
+def _summarize(path: str, data: dict) -> None:
+    if data.get("kind") == "serve":
+        records = data.get("records", [])
+        best = max((r.get("wire_savings", 0) for r in records), default=0)
+        print(f"schema ok [{path}]: {len(records)} publish records, "
+              f"best wire savings {best}x")
+        return
     n_back = len(data.get("backends", []))
     n_rec = len(data.get("records", []))
     n_sched = len(data.get("schedules", []))
@@ -400,11 +501,32 @@ def main(argv=None) -> int:
     n_cal = len(data.get("calibration", {}).get("decisions", []))
     n_topo = len(data.get("topology", []))
     guard_x = data.get("resilience", {}).get("guard_overhead_ratio")
-    print(f"schema ok: {n_back} backend records, {n_rec} sweep records, "
-          f"{n_sched} schedule-policy records, {n_sel} selector records, "
-          f"{n_cal} calibration decisions, {n_topo} topology records, "
-          f"guard overhead {guard_x}x")
-    return 0
+    print(f"schema ok [{path}]: {n_back} backend records, {n_rec} sweep "
+          f"records, {n_sched} schedule-policy records, {n_sel} selector "
+          f"records, {n_cal} calibration decisions, {n_topo} topology "
+          f"records, guard overhead {guard_x}x")
+
+
+def main(argv=None) -> int:
+    args = sys.argv[1:] if argv is None else argv
+    paths = args if args else ["BENCH_throughput.json"]
+    failed = False
+    for path in paths:
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"BENCH SCHEMA FAIL: cannot read {path}: {e}")
+            failed = True
+            continue
+        errors = check(data)
+        for e in errors:
+            print(f"BENCH SCHEMA FAIL [{path}]: {e}")
+        if errors:
+            failed = True
+        else:
+            _summarize(path, data)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
